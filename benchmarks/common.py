@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: testbed training + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import ClassifyConfig, batched, classify_dataset
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def timeit(fn: Callable, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def train_cnn_testbed(seed: int = 0, batchnorm: bool = True, steps: int = 300,
+                      input_hw: int = 8, num_classes: int = 4,
+                      filters: int = 8, n_train: int = 2048,
+                      lr: float = 3e-3):
+    """Train the paper's small CNN (App. D) on the synthetic classify set."""
+    dcfg = ClassifyConfig(input_hw=input_hw, num_classes=num_classes, seed=seed)
+    xtr, ytr = classify_dataset(dcfg, n_train)
+    xte, yte = classify_dataset(dcfg, 512, split_seed=101)
+    params = init_cnn(jax.random.key(seed), num_classes=num_classes,
+                      input_hw=input_hw, filters=filters, batchnorm=batchnorm)
+
+    @jax.jit
+    def step(p, b):
+        loss, g = jax.value_and_grad(cnn_loss)(p, b)
+        return jax.tree.map(lambda a, gg: a - lr * gg, p, g), loss
+
+    for i, b in enumerate(batched(xtr, ytr, 128, seed=seed)):
+        if i >= steps:
+            break
+        params, _ = step(params, (jnp.asarray(b[0]), jnp.asarray(b[1])))
+    acc = cnn_accuracy(params, jnp.asarray(xte), jnp.asarray(yte))
+    return params, (xtr, ytr), (xte, yte), acc

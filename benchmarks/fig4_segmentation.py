@@ -1,0 +1,82 @@
+"""Paper Fig. 4 / Sec. 4.3: FIT generalizes to semantic segmentation —
+U-Net on a synthetic Cityscapes stand-in, FIT vs mIoU over random MPQ
+configs (paper reports rho = 0.86 over 50 configs)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import build_report, metric_accuracy_correlation, sample_configs
+from repro.data.synthetic import SegmentConfig, batched, segment_dataset
+from repro.models.context import QATContext
+from repro.models.unet import (
+    init_unet, unet_act_fn, unet_forward, unet_loss, unet_miou,
+    unet_tap_loss, unet_tap_shapes)
+from repro.quant.policy import QuantPolicy
+
+N_CONFIGS = int(os.environ.get("REPRO_F4_CONFIGS", 10))
+QAT_STEPS = int(os.environ.get("REPRO_F4_QAT_STEPS", 50))
+
+
+def run() -> None:
+    dcfg = SegmentConfig(input_hw=16, seed=0)
+    xtr, ytr = segment_dataset(dcfg, 512)
+    xte, yte = segment_dataset(dcfg, 128, split_seed=3)
+    params = init_unet(jax.random.key(0), base=8)
+
+    @jax.jit
+    def step(p, b):
+        loss, g = jax.value_and_grad(unet_loss)(p, b)
+        return jax.tree.map(lambda a, gg: a - 5e-3 * gg, p, g), loss
+
+    for i, b in enumerate(batched(xtr, ytr, 64, seed=0)):
+        if i >= 300:
+            break
+        params, _ = step(params, (jnp.asarray(b[0]), jnp.asarray(b[1])))
+    fp_miou = unet_miou(params, jnp.asarray(xte), jnp.asarray(yte))
+    emit("fig4.fp_miou", 0.0, f"{fp_miou:.3f}")
+
+    batch = (jnp.asarray(xtr[:128]), jnp.asarray(ytr[:128]))
+    report = build_report(unet_loss, unet_tap_loss,
+                          lambda b: unet_tap_shapes(params, b), unet_act_fn,
+                          params, [batch], tolerance=None, max_batches=1)
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=())
+    configs = sample_configs(report, policy, N_CONFIGS, seed=7)
+
+    mious, fits = [], []
+    for c in configs:
+        lw = {k: float(2 ** b - 1) for k, b in c.weight_bits.items()}
+        la = {k: float(2 ** b - 1) for k, b in c.act_bits.items()}
+
+        @jax.jit
+        def qstep(p, b):
+            loss, g = jax.value_and_grad(
+                lambda pp: unet_loss(pp, b, ctx=QATContext(lw, la)))(p)
+            return jax.tree.map(lambda a, gg: a - 2e-3 * gg, p, g), loss
+
+        qp = params
+        for i, b in enumerate(batched(xtr, ytr, 64, seed=5)):
+            if i >= QAT_STEPS:
+                break
+            qp, _ = qstep(qp, (jnp.asarray(b[0]), jnp.asarray(b[1])))
+        pred_logits = unet_forward(qp, jnp.asarray(xte), ctx=QATContext(lw, la))
+        pred = jnp.argmax(pred_logits, -1)
+        inter_miou = []
+        for cc in range(4):
+            inter = jnp.sum((pred == cc) & (jnp.asarray(yte) == cc))
+            union = jnp.sum((pred == cc) | (jnp.asarray(yte) == cc))
+            inter_miou.append(float(jnp.where(union > 0, inter / union, 1.0)))
+        mious.append(float(np.mean(inter_miou)))
+        fits.append(report.fit(c))
+
+    rho = metric_accuracy_correlation(fits, mious)["spearman"]
+    emit("fig4.configs", 0.0, str(N_CONFIGS))
+    emit("fig4.fit_miou_spearman", 0.0, f"{rho:.3f}")
+
+
+if __name__ == "__main__":
+    run()

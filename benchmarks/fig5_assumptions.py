@@ -1,0 +1,69 @@
+"""Paper Fig. 5 / Sec. 4.4: assumption audits.
+
+(a) small-perturbation: quantization noise magnitude << parameter
+    magnitude for nearly all parameters at the bit-widths used;
+(b) distributional shift: FIT correlates better with TRAIN accuracy than
+    TEST accuracy (the paper reports 0.98 vs 0.90 on experiment D).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, train_cnn_testbed
+from repro.core import build_report, metric_accuracy_correlation, sample_configs
+from repro.data.synthetic import batched
+from repro.models.cnn import (
+    cnn_act_fn, cnn_forward, cnn_loss, cnn_tap_loss, cnn_tap_shapes)
+from repro.models.context import QATContext
+from repro.quant.policy import QuantPolicy
+from repro.quant.quantizer import QuantSpec, fake_quant_ref
+from repro.utils.pytree import named_leaves
+
+N_CONFIGS = int(os.environ.get("REPRO_F5_CONFIGS", 12))
+
+
+def run() -> None:
+    params, (xtr, ytr), (xte, yte), _ = train_cnn_testbed(seed=4, batchnorm=False)
+
+    # (a) noise << parameter magnitude at 3 bits (most aggressive used)
+    frac_small = []
+    for name, leaf in named_leaves(params):
+        if leaf.ndim < 2:
+            continue
+        fq = fake_quant_ref(leaf, QuantSpec(bits=3))
+        noise = np.abs(np.asarray(fq - leaf)).ravel()
+        mag = np.abs(np.asarray(leaf)).ravel()
+        frac_small.append(np.mean(noise < mag + 1e-12))
+    emit("fig5.frac_noise_below_param_3bit", 0.0, f"{np.mean(frac_small):.3f}")
+
+    # (b) train-vs-test correlation
+    batch = (jnp.asarray(xtr[:256]), jnp.asarray(ytr[:256]))
+    report = build_report(cnn_loss, cnn_tap_loss,
+                          lambda b: cnn_tap_shapes(params, b), cnn_act_fn,
+                          params, [batch], tolerance=None, max_batches=1)
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=())
+    configs = sample_configs(report, policy, N_CONFIGS, seed=21)
+
+    tr_accs, te_accs, fits = [], [], []
+    for c in configs:
+        lw = {k: float(2 ** b - 1) for k, b in c.weight_bits.items()}
+        la = {k: float(2 ** b - 1) for k, b in c.act_bits.items()}
+        ctx = QATContext(lw, la)
+        lg_tr = cnn_forward(params, jnp.asarray(xtr[:512]), ctx=ctx)
+        lg_te = cnn_forward(params, jnp.asarray(xte), ctx=ctx)
+        tr_accs.append(float(jnp.mean(jnp.argmax(lg_tr, -1) == jnp.asarray(ytr[:512]))))
+        te_accs.append(float(jnp.mean(jnp.argmax(lg_te, -1) == jnp.asarray(yte))))
+        fits.append(report.fit(c))
+
+    rho_tr = metric_accuracy_correlation(fits, tr_accs)["spearman"]
+    rho_te = metric_accuracy_correlation(fits, te_accs)["spearman"]
+    emit("fig5.fit_train_acc_spearman", 0.0, f"{rho_tr:.3f}")
+    emit("fig5.fit_test_acc_spearman", 0.0, f"{rho_te:.3f}")
+
+
+if __name__ == "__main__":
+    run()

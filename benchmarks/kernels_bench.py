@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: wall time of the jnp reference path on CPU
+(the Pallas path targets TPU; interpret mode timing is not meaningful)
+plus the analytic arithmetic intensity of each kernel at its default
+tile sizes — the numbers used in the VMEM/roofline sizing discussion."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ref
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    x = jnp.asarray(rng.normal(size=(2048, 2048)).astype(np.float32))
+    fq = jax.jit(lambda x: ref.fake_quant(x, jnp.float32(0.05), jnp.float32(3.0), 4))
+    us = timeit(lambda: fq(x))
+    emit("kernel.fake_quant.ref_2048x2048", us,
+         f"ai={2 * 4 / (2 * 4):.2f}flops_per_byte")
+
+    g = jnp.asarray(rng.normal(size=(64, 1 << 16)).astype(np.float32))
+    ef = jax.jit(ref.ef_sqnorm)
+    us = timeit(lambda: ef(g))
+    emit("kernel.ef_sqnorm.ref_64x65536", us, "reduction_bw_bound")
+
+    xq = jnp.asarray(rng.integers(-127, 128, (512, 2048)).astype(np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, (2048, 512)).astype(np.int8))
+    ws = jnp.ones(512, jnp.float32)
+    mm = jax.jit(lambda a, b: ref.int8_matmul(a, b, jnp.float32(0.02), ws))
+    us = timeit(lambda: mm(xq, wq))
+    flops = 2 * 512 * 2048 * 512
+    emit("kernel.int8_matmul.ref_512x2048x512", us,
+         f"{flops / us / 1e3:.1f}GFLOPs")
+
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(np.float32))
+    fa = jax.jit(lambda q: ref.flash_attention(q, q, q, causal=True))
+    us = timeit(lambda: fa(q))
+    emit("kernel.attention.ref_1x8x1024x64", us, "causal")
+
+    # Pallas tile budgets (static analysis — documented VMEM sizing)
+    emit("kernel.fake_quant.vmem_tile_bytes", 0.0,
+         str(512 * 1024 * 4 * 2))          # in+out fp32 tile
+    emit("kernel.int8_matmul.vmem_tile_bytes", 0.0,
+         str(256 * 512 + 512 * 256 + 256 * 256 * 4 + 256 * 256 * 4))
+    emit("kernel.flash_attention.vmem_tile_bytes", 0.0,
+         str(512 * 128 * 2 * 3 + 512 * 512 * 4 + 512 * 128 * 4))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and emits one CSV row per cell with the
+three terms, bottleneck, and MODEL_FLOPS/HLO_FLOPs ratio. Run the dry-run
+sweep first (python -m repro.launch.dryrun --all --both-meshes)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(DRY, "*.json")))
+    if not files:
+        emit("roofline.missing", 0.0, "run repro.launch.dryrun first")
+        return
+    n_ok = 0
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        cell = f"{d['arch']}.{d['shape']}.{d['mesh']}.{d.get('opts','baseline')}"
+        if d.get("status") != "ok":
+            emit(f"roofline.{cell}", 0.0, "FAILED")
+            continue
+        r = d["roofline"]
+        n_ok += 1
+        emit(f"roofline.{cell}", r["step_time_s"] * 1e6,
+             f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+             f"collective={r['collective_s']:.4f}s;bottleneck={r['bottleneck']};"
+             f"useful={r['useful_ratio']:.2f};mfu={r['mfu']:.3f};"
+             f"hbm={d['hbm_per_device_gib']}GiB")
+    emit("roofline.cells_ok", 0.0, str(n_ok))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Select subsets with REPRO_BENCH=table1,fig1 env var.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table1", "benchmarks.table1_estimator"),
+    ("fig1", "benchmarks.fig1_trace_similarity"),
+    ("fig2", "benchmarks.fig2_convergence"),
+    ("table2", "benchmarks.table2_rankcorr"),
+    ("fig4", "benchmarks.fig4_segmentation"),
+    ("fig5", "benchmarks.fig5_assumptions"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    sel = os.environ.get("REPRO_BENCH")
+    chosen = sel.split(",") if sel else [n for n, _ in MODULES]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in MODULES:
+        if name not in chosen:
+            continue
+        t0 = time.time()
+        try:
+            __import__(mod, fromlist=["run"]).run()
+            print(f"{name}.elapsed_s,{(time.time()-t0)*1e6:.0f},ok", flush=True)
+        except Exception as e:  # noqa: BLE001 — harness boundary
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            print(f"{name}.elapsed_s,{(time.time()-t0)*1e6:.0f},FAILED:{e!r}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Mixed-precision search + QAT on an assigned LM architecture.
+
+End-to-end on a reduced llama3-family config (CPU-friendly):
+  1. pretrain full precision on the synthetic LM stream,
+  2. compute per-block FIT sensitivities on the trained model,
+  3. allocate layer-wise bits with the greedy knapsack under a 4.5-bit
+     average budget (vs uniform-4 baseline),
+  4. QAT-finetune both configurations and compare final loss.
+
+    PYTHONPATH=src python examples/mpq_search.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import build_report, greedy_allocate
+from repro.data.synthetic import LMStreamConfig, lm_batches
+from repro.launch.steps import bitconfig_to_levels
+from repro.models import init_params, loss_fn
+from repro.quant.policy import BitConfig, QuantPolicy
+
+cfg = dataclasses.replace(smoke_config("llama3_8b"), scan_layers=False,
+                          num_layers=3)
+params = init_params(cfg, jax.random.key(0))
+stream = lm_batches(LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                   global_batch=8, seed=0))
+
+
+def lm_loss(p, batch):
+    return loss_fn(p, batch, cfg)
+
+
+@jax.jit
+def sgd(p, b):
+    loss, g = jax.value_and_grad(lm_loss)(p, b)
+    return jax.tree.map(lambda a, gg: a - 1e-1 * gg, p, g), loss
+
+
+print("pretraining FP...")
+for i in range(150):
+    b = next(stream)
+    params, loss = sgd(params, b)
+    if i % 50 == 0:
+        print(f"  step {i} loss {float(loss):.3f}")
+fp_loss = float(loss)
+
+print("computing FIT report (per-sample gradient traces)...")
+calib = [next(stream) for _ in range(4)]
+report = build_report(lm_loss, None, None, None, params, calib,
+                      microbatch=4, tolerance=None, max_batches=4)
+
+policy = QuantPolicy(allowed_bits=(8, 6, 4, 3))
+total = sum(report.param_sizes.values())
+fit_cfg = greedy_allocate(report, policy, budget_bits=4.5 * total)
+uniform = BitConfig({k: 4 for k in report.weight_traces}, {})
+print(f"FIT(greedy@4.5b) = {report.fit(fit_cfg):.5f}  "
+      f"FIT(uniform-4) = {report.fit(uniform):.5f}")
+
+top = sorted(report.weight_traces.items(), key=lambda kv: -kv[1])[:5]
+print("most sensitive blocks:", [(k, round(v, 3)) for k, v in top])
+
+
+def qat_finetune(bit_cfg, steps=60):
+    qat = bitconfig_to_levels(cfg, bit_cfg)
+    p = jax.tree.map(jnp.array, params)
+
+    @jax.jit
+    def qsgd(p, b):
+        loss, g = jax.value_and_grad(
+            lambda pp: loss_fn(pp, b, cfg, qat=qat))(p)
+        return jax.tree.map(lambda a, gg: a - 3e-2 * gg, p, g), loss
+
+    for _ in range(steps):
+        p, l = qsgd(p, next(stream))
+    return float(l)
+
+
+print("QAT finetuning both configurations...")
+l_fit = qat_finetune(fit_cfg)
+l_uni = qat_finetune(uniform)
+print(f"final QAT loss  fp={fp_loss:.3f}  FIT-config={l_fit:.3f}  "
+      f"uniform-4={l_uni:.3f}")
+print("FIT config better!" if l_fit <= l_uni else
+      "uniform better on this run (small-scale noise)")

@@ -1,0 +1,69 @@
+"""Quickstart: FIT in ~60 lines.
+
+Train a small model, compute the FIT sensitivity report from the trained
+FP model (one pass of per-sample gradients), score mixed-precision
+configurations WITHOUT retraining, and pick one with the greedy
+allocator.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_report, greedy_allocate, sample_configs
+from repro.core.mpq import config_cost_bits, pareto_front
+from repro.data.synthetic import ClassifyConfig, batched, classify_dataset
+from repro.models.cnn import (
+    cnn_accuracy, cnn_act_fn, cnn_loss, cnn_tap_loss, cnn_tap_shapes, init_cnn)
+from repro.quant.policy import QuantPolicy
+
+# ---- 1. train a full-precision model -------------------------------------
+dcfg = ClassifyConfig(input_hw=8, num_classes=4, seed=0)
+xtr, ytr = classify_dataset(dcfg, 2048)
+xte, yte = classify_dataset(dcfg, 512, split_seed=1)
+params = init_cnn(jax.random.key(0), num_classes=4, input_hw=8, filters=8,
+                  batchnorm=False)
+
+
+@jax.jit
+def sgd(p, b):
+    loss, g = jax.value_and_grad(cnn_loss)(p, b)
+    return jax.tree.map(lambda a, gg: a - 3e-3 * gg, p, g), loss
+
+
+for i, b in enumerate(batched(xtr, ytr, 128, seed=0)):
+    if i >= 300:
+        break
+    params, loss = sgd(params, (jnp.asarray(b[0]), jnp.asarray(b[1])))
+print(f"FP accuracy: {cnn_accuracy(params, jnp.asarray(xte), jnp.asarray(yte)):.3f}")
+
+# ---- 2. one-shot FIT sensitivity report -----------------------------------
+batch = (jnp.asarray(xtr[:256]), jnp.asarray(ytr[:256]))
+report = build_report(
+    loss_fn=cnn_loss,
+    tap_loss_fn=cnn_tap_loss,                    # activation manifold (Sec 3.2.1)
+    tap_shapes_fn=lambda b: cnn_tap_shapes(params, b),
+    act_fn=cnn_act_fn,                           # activation range calibration
+    params=params, batches=[batch], tolerance=None, max_batches=1)
+
+print("\nper-block EF traces (weights):")
+for k, v in sorted(report.weight_traces.items()):
+    print(f"  {k:12s} {v:10.4f}   n={report.param_sizes[k]}")
+print("per-site EF traces (activations):")
+for k, v in sorted(report.act_traces.items()):
+    print(f"  {k:12s} {v:10.4f}")
+
+# ---- 3. score configs without retraining + allocate ------------------------
+policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=())
+total_params = sum(report.param_sizes.values())
+for avg_bits in (6, 5, 4):
+    cfg = greedy_allocate(report, policy, budget_bits=avg_bits * total_params)
+    print(f"\nbudget {avg_bits} bits/param -> FIT={report.fit(cfg):.5f}")
+    print("  bits:", dict(sorted(cfg.weight_bits.items())))
+
+# ---- 4. Pareto front over random configs ----------------------------------
+configs = sample_configs(report, policy, 64, seed=0)
+front = pareto_front(report, configs)
+print(f"\nPareto front ({len(front)} points) over 64 random configs:")
+for size, fit, _ in front[:6]:
+    print(f"  {size / total_params:5.2f} bits/param   FIT={fit:.5f}")

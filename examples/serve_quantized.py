@@ -1,0 +1,34 @@
+"""End-to-end serving driver: batched requests against a small model with
+post-training-quantized weights (the deliverable-(b) serving driver).
+
+Initializes an internlm2-family reduced model, PTQs the weights to 8 and
+4 bits, serves a batch of prompts through prefill + autoregressive decode
+with a KV cache, and reports agreement + throughput.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import numpy as np
+
+from repro.launch.serve import serve
+
+BATCH, PROMPT, GEN = 8, 32, 24
+
+print("== full precision ==")
+fp = serve("internlm2_1_8b", smoke=True, batch=BATCH, prompt_len=PROMPT,
+           gen_len=GEN, weight_bits=None)
+
+print("== W8 (PTQ) ==")
+w8 = serve("internlm2_1_8b", smoke=True, batch=BATCH, prompt_len=PROMPT,
+           gen_len=GEN, weight_bits=8)
+
+print("== W4 (PTQ) ==")
+w4 = serve("internlm2_1_8b", smoke=True, batch=BATCH, prompt_len=PROMPT,
+           gen_len=GEN, weight_bits=4)
+
+agree8 = float(np.mean(fp["generated"] == w8["generated"]))
+agree4 = float(np.mean(fp["generated"] == w4["generated"]))
+print(f"\ngreedy-token agreement vs FP:  W8={agree8:.2%}  W4={agree4:.2%}")
+print(f"decode throughput: fp {fp['tokens_per_s']:.1f} tok/s, "
+      f"w8 {w8['tokens_per_s']:.1f} tok/s, w4 {w4['tokens_per_s']:.1f} tok/s")
+print("(on TPU the W8 path runs the int8 MXU Pallas kernel at 2x bf16 "
+      "throughput; on CPU this example validates the numerics.)")

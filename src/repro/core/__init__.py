@@ -1,0 +1,22 @@
+from repro.core.fisher import (
+    ef_trace_weights,
+    ef_trace_weights_streaming,
+    ef_trace_activations,
+    fisher_trace_exact,
+)
+from repro.core.hessian import (
+    hvp,
+    hutchinson_block_traces,
+    exact_block_traces,
+)
+from repro.core.fit import SensitivityReport
+from repro.core.heuristics import ALL_METRICS, qr_metric, bn_metric, noise_metric
+from repro.core.mpq import (
+    greedy_allocate,
+    dp_allocate,
+    pareto_front,
+    sample_configs,
+    config_cost_bits,
+)
+from repro.core.rankcorr import spearman, pearson, kendall, metric_accuracy_correlation
+from repro.core.report import build_report, weight_ranges, act_ranges

@@ -1,0 +1,79 @@
+"""FIT metric assembly (paper Sec. 3.2 / Appendix E).
+
+    FIT(b) = Σ_l Tr(Î(θ_l)) · [ (θmax−θmin)/(2^{b_l}−1) ]² / 12
+           + Σ_s Tr(Î(â_s)) · [ (âmax−âmin)/(2^{b_s}−1) ]² / 12
+
+The constant 1/12 is shared by every term, so (as in the paper's Sec. 4.2
+form) it can be dropped without changing rankings; we keep it so FIT is
+literally the expected KL divergence scale E[δθᵀ I δθ]/2 ≈ FIT/2.
+
+A ``SensitivityReport`` bundles traces + ranges once; evaluating a bit
+configuration is then O(#blocks) — cheap enough to score thousands of MPQ
+configurations (the paper's evaluation protocol).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.quant.noise import noise_power
+from repro.quant.policy import BitConfig
+
+
+@dataclasses.dataclass
+class SensitivityReport:
+    """Everything FIT needs, computed once from the trained FP model."""
+
+    weight_traces: Dict[str, float]              # block -> Tr(Î(θ_l))
+    act_traces: Dict[str, float]                 # site  -> Tr(Î(â_s))
+    weight_ranges: Dict[str, Tuple[float, float]]  # block -> (min, max)
+    act_ranges: Dict[str, Tuple[float, float]]     # site  -> (min, max)
+    param_sizes: Dict[str, int]                  # block -> n(l)
+
+    def fit_weights(self, weight_bits: Mapping[str, int]) -> float:
+        total = 0.0
+        for name, tr in self.weight_traces.items():
+            bits = weight_bits.get(name, 16)
+            if bits >= 16:
+                continue
+            lo, hi = self.weight_ranges[name]
+            total += tr * float(noise_power(lo, hi, bits))
+        return total
+
+    def fit_acts(self, act_bits: Mapping[str, int]) -> float:
+        total = 0.0
+        for name, tr in self.act_traces.items():
+            bits = act_bits.get(name, 16)
+            if bits >= 16:
+                continue
+            lo, hi = self.act_ranges[name]
+            total += tr * float(noise_power(lo, hi, bits))
+        return total
+
+    def fit(self, cfg: BitConfig) -> float:
+        """The full FIT metric: lower = less predicted degradation."""
+        return self.fit_weights(cfg.weight_bits) + self.fit_acts(cfg.act_bits)
+
+    # ---- serialization (reports are checkpoint artifacts) ----
+    def to_json(self) -> str:
+        return json.dumps({
+            "weight_traces": self.weight_traces,
+            "act_traces": self.act_traces,
+            "weight_ranges": {k: list(v) for k, v in self.weight_ranges.items()},
+            "act_ranges": {k: list(v) for k, v in self.act_ranges.items()},
+            "param_sizes": self.param_sizes,
+        })
+
+    @classmethod
+    def from_json(cls, s: str) -> "SensitivityReport":
+        d = json.loads(s)
+        return cls(
+            weight_traces=d["weight_traces"],
+            act_traces=d["act_traces"],
+            weight_ranges={k: tuple(v) for k, v in d["weight_ranges"].items()},
+            act_ranges={k: tuple(v) for k, v in d["act_ranges"].items()},
+            param_sizes={k: int(v) for k, v in d["param_sizes"].items()},
+        )

@@ -1,0 +1,87 @@
+"""Baseline sensitivity heuristics the paper compares FIT against.
+
+All share FIT's noise model [Δ_l]² = [(θmax−θmin)/(2^b−1)]² and differ in
+the left-hand sensitivity factor (paper Appendix D):
+
+  QR:    1/|θmax−θmin|      (quantization range; Chen 2021 / Tang 2022 style)
+  BN:    1/γ_l              (batch-norm scale; only where BN exists)
+  Noise: 1                  (isolated noise model, ablation)
+  FIT_W / FIT_A: FIT with the activation / weight half removed.
+
+HAWQ-V2 (Hessian-trace-weighted) is FIT_W with Hutchinson traces —
+available via core.hessian.hutchinson_block_traces feeding the same
+assembly, so it needs no separate formula here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.quant.noise import noise_power
+from repro.quant.policy import BitConfig
+from repro.core.fit import SensitivityReport
+
+
+def qr_metric(report: SensitivityReport, cfg: BitConfig,
+              include_acts: bool = True, include_weights: bool = True) -> float:
+    total = 0.0
+    if include_weights:
+        for name, (lo, hi) in report.weight_ranges.items():
+            bits = cfg.weight_bits.get(name, 16)
+            if bits >= 16 or hi - lo <= 0:
+                continue
+            total += float(noise_power(lo, hi, bits)) / (hi - lo)
+    if include_acts:
+        for name, (lo, hi) in report.act_ranges.items():
+            bits = cfg.act_bits.get(name, 16)
+            if bits >= 16 or hi - lo <= 0:
+                continue
+            total += float(noise_power(lo, hi, bits)) / (hi - lo)
+    return total
+
+
+def bn_metric(report: SensitivityReport, cfg: BitConfig,
+              gammas: Mapping[str, float]) -> float:
+    """γ-weighted noise. ``gammas`` maps weight block -> mean |γ| of its BN."""
+    total = 0.0
+    for name, (lo, hi) in report.weight_ranges.items():
+        bits = cfg.weight_bits.get(name, 16)
+        g = gammas.get(name)
+        if bits >= 16 or g is None or g <= 0:
+            continue
+        total += float(noise_power(lo, hi, bits)) / g
+    return total
+
+
+def noise_metric(report: SensitivityReport, cfg: BitConfig) -> float:
+    """Isolated quantization-noise model (no sensitivity weighting)."""
+    total = 0.0
+    for name, (lo, hi) in report.weight_ranges.items():
+        bits = cfg.weight_bits.get(name, 16)
+        if bits >= 16:
+            continue
+        total += float(noise_power(lo, hi, bits))
+    for name, (lo, hi) in report.act_ranges.items():
+        bits = cfg.act_bits.get(name, 16)
+        if bits >= 16:
+            continue
+        total += float(noise_power(lo, hi, bits))
+    return total
+
+
+def fit_w(report: SensitivityReport, cfg: BitConfig) -> float:
+    return report.fit_weights(cfg.weight_bits)
+
+
+def fit_a(report: SensitivityReport, cfg: BitConfig) -> float:
+    return report.fit_acts(cfg.act_bits)
+
+
+ALL_METRICS = {
+    "FIT": lambda r, c, **kw: r.fit(c),
+    "FIT_W": lambda r, c, **kw: fit_w(r, c),
+    "FIT_A": lambda r, c, **kw: fit_a(r, c),
+    "QR": lambda r, c, **kw: qr_metric(r, c),
+    "QR_W": lambda r, c, **kw: qr_metric(r, c, include_acts=False),
+    "QR_A": lambda r, c, **kw: qr_metric(r, c, include_weights=False),
+    "Noise": lambda r, c, **kw: noise_metric(r, c),
+}

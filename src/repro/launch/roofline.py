@@ -1,0 +1,193 @@
+"""Roofline accounting (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e target):
+    PEAK_FLOPS = 197e12 bf16 FLOP/s/chip
+    HBM_BW     = 819e9  B/s/chip
+    ICI_BW     = 50e9   B/s/link (single-link conservative)
+
+Terms per (arch × shape × mesh), all in seconds-per-step:
+    compute   = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory    = HLO_bytes_per_chip / HBM_BW
+    collective= ICI_traffic_per_chip / ICI_BW
+
+HLO numbers come from the dry-run via the layer-extrapolation scheme
+(see dryrun.py): scan bodies are counted once by XLA's cost analysis, so
+totals are reconstructed as f(n1) + (f(n2)−f(n1))·M from two small
+unrolled lowerings with identical shardings.
+
+MODEL_FLOPS is the analytic useful-work count (6·N_active·D for training,
+2·N_active·D + attention for inference) used for the
+MODEL_FLOPS/HLO_FLOPs efficiency ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs import ModelConfig, ShapeSpec
+from repro.models.transformer import vocab_padded
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, float]:
+    """Analytic parameter counts: total, active-per-token, embedding."""
+    d, L = cfg.d_model, cfg.num_layers
+    v = vocab_padded(cfg)
+    h, kv, hd, ff = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_ff
+
+    attn = d * h * hd + 2 * d * kv * hd + h * hd * d if h else 0
+    mlp_mult = 3 if cfg.act == "swiglu" else 2
+    dense_mlp = mlp_mult * d * ff if ff else 0
+
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        di = cfg.d_inner
+        proj = 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+        mamba = d * proj + di * d + cfg.conv_width * (di + 2 * cfg.ssm_state)
+    else:
+        mamba = 0
+
+    emb = (cfg.num_codebooks if cfg.family == "audio" else 1) * v * d
+    head = d * v * (cfg.num_codebooks if cfg.family == "audio" else 1)
+
+    if cfg.family in ("dense", "audio", "vlm"):
+        layer_total = attn + dense_mlp
+        layer_active = layer_total
+        total = L * layer_total
+    elif cfg.family == "moe":
+        e, k = cfg.num_experts, cfg.top_k
+        experts = e * 3 * d * ff
+        shared = cfg.num_shared_experts * 3 * d * ff
+        router = d * e
+        layer_total = attn + experts + shared + router
+        layer_active = attn + k * 3 * d * ff + shared + router
+        total = L * layer_total
+    elif cfg.family == "ssm":
+        layer_total = layer_active = mamba
+        total = L * mamba
+    elif cfg.family == "hybrid":
+        n_groups = cfg.num_layers // cfg.attn_period
+        total = L * mamba + (attn + dense_mlp)          # shared block stored once
+        layer_total = mamba
+        layer_active = mamba + (attn + dense_mlp) * n_groups / max(L, 1)
+    else:
+        raise ValueError(cfg.family)
+
+    active = (layer_active * L if cfg.family != "hybrid"
+              else L * mamba + (attn + dense_mlp) * (cfg.num_layers // cfg.attn_period))
+    return {"total": total + emb + head, "active": active + head,
+            "embed": emb, "head": head}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Analytic useful FLOPs per step (MODEL_FLOPS)."""
+    counts = param_counts(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    h, hd = cfg.num_heads, cfg.head_dim
+
+    if shape.kind == "train":
+        tokens = b * s
+        flops = 6.0 * counts["active"] * tokens
+        if h:
+            n_attn = (cfg.num_layers if cfg.family != "hybrid"
+                      else cfg.num_layers // cfg.attn_period)
+            # causal: S²/2 scores; QK^T + PV = 4·S²/2·H·Dh fwd, ×3 fwd+bwd
+            flops += 12.0 * n_attn * b * s * s * 0.5 * h * hd
+        if cfg.family in ("ssm", "hybrid"):
+            flops += 3.0 * _ssd_fwd_flops(cfg, b, s)
+        return flops
+    if shape.kind == "prefill":
+        tokens = b * s
+        flops = 2.0 * counts["active"] * tokens
+        if h:
+            n_attn = (cfg.num_layers if cfg.family != "hybrid"
+                      else cfg.num_layers // cfg.attn_period)
+            flops += 4.0 * n_attn * b * s * s * 0.5 * h * hd
+        if cfg.family in ("ssm", "hybrid"):
+            flops += _ssd_fwd_flops(cfg, b, s)
+        return flops
+    # decode: one token, cache depth s
+    flops = 2.0 * counts["active"] * b
+    if h:
+        n_attn = (cfg.num_layers if cfg.family != "hybrid"
+                  else cfg.num_layers // cfg.attn_period)
+        flops += 4.0 * n_attn * b * s * cfg.num_kv_heads * (h // max(cfg.num_kv_heads, 1)) * hd
+    if cfg.family in ("ssm", "hybrid"):
+        # state update + readout: ~6·H·N·P per layer per token
+        flops += 6.0 * cfg.num_layers * b * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_headdim
+    return flops
+
+
+def _ssd_fwd_flops(cfg: ModelConfig, b: int, s: int) -> float:
+    """Chunked SSD forward flops (dominant terms)."""
+    hh, p, n, q = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_chunk
+    L = cfg.num_layers
+    per_tok = (2 * q * n            # C·Bᵀ within chunk
+               + 2 * q * hh * p     # M·x
+               + 2 * n * hh * p     # states build
+               + 2 * n * hh * p)    # off-diagonal readout
+    return float(L) * b * s * per_tok
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    bytes_per_chip: float
+    ici_traffic_per_chip: float
+    chips: int
+    model_flops: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.ici_traffic_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms (perfect
+        overlap of compute, HBM, and ICI)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline-optimistic step time."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "ici_traffic_per_chip": self.ici_traffic_per_chip,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_ratio": self.useful_ratio,
+            "mfu": self.mfu,
+        }

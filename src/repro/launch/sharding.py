@@ -1,0 +1,242 @@
+"""Sharding rules: logical-axis tables + parameter PartitionSpecs per arch.
+
+Strategy (see DESIGN.md §4):
+  DP  over ("pod", "data")  — batch dim of inputs/activations.
+  TP  over "model"          — Megatron column→row pairs, vocab-sharded
+                              embedding/head, expert-hidden (MoE-TP) or
+                              expert axis (MoE-EP), SSM head/inner dims.
+  SP  over "model"          — residual-stream seq dim between blocks
+                              (option, default ON for train: activation
+                              memory / collective trade).
+  EP  over "model"          — MoE expert axis (option; dispatch becomes
+                              all-to-all under SPMD).
+
+Every rule is divisibility-guarded: a dim that doesn't divide by the mesh
+axis silently degrades to replicated (e.g. minitron's 24 heads on a
+16-way model axis — the MLP still shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeSpec
+from repro.models.partition import Rules
+from repro.utils.pytree import named_leaves
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardOptions:
+    """Tunable distribution knobs (the §Perf hillclimb surface)."""
+    strategy: str = "tp"                # "tp" (Megatron) | "fsdp" (ZeRO-3)
+    seq_parallel: bool = True           # SP on residual stream (tp only)
+    moe_mode: str = "ep"                # "ep" | "tp"
+    zero1: bool = False                 # shard optimizer moments over data
+    shard_cache_seq: bool = True        # decode: shard KV-cache seq when kv-heads can't
+    grad_compression: bool = False      # int8 DP all-reduce (shard_map path)
+    decode_quant: Optional[str] = None  # None | "w8" | "w8kv8" (serving PTQ)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([mesh.shape.get(n, 1) for n in name]))
+    return mesh.shape.get(name, 1)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def make_rules(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               opts: ShardOptions = ShardOptions()) -> Rules:
+    """Activation-constraint table for (arch × shape × mesh)."""
+    model_sz = mesh.shape.get("model", 1)
+    batch_ax = data_axes(mesh)
+    d_batch = _axis_size(mesh, batch_ax)
+
+    def fits(n: int, ax):
+        if ax is not None and (ax not in mesh.shape if isinstance(ax, str) else False):
+            return None
+        return ax if ax is not None and n % _axis_size(mesh, ax) == 0 else None
+
+    heads_ax = fits(cfg.num_heads or 1, "model")
+    kv_ax = fits(cfg.num_kv_heads or 1, "model")
+    has_model = "model" in mesh.shape
+
+    if opts.strategy == "fsdp" and has_model and shape.kind != "decode":
+        # FSDP/ZeRO-3: every chip is a data shard; weights live sharded
+        # over "model" (same specs as TP) and XLA all-gathers each matmul's
+        # weights just before use. No activation TP constraints at all.
+        full_batch_ax = batch_ax + ("model",) if batch_ax else ("model",)
+        fb = shape.global_batch % _axis_size(mesh, full_batch_ax) == 0
+        return Rules(mesh, {
+            "batch": full_batch_ax if fb else batch_ax,
+            "seq": "model" if not fb and shape.seq_len % model_sz == 0 else None,
+            "seq_noshard": None, "heads": None, "kv_heads": None,
+            "vocab": "model", "experts": None, "expert_ff": None,
+            "cache_seq": None,
+        })
+
+    table: Dict[str, Any] = {
+        "batch": batch_ax if batch_ax and shape.global_batch % d_batch == 0 else None,
+        "seq": "model" if has_model and opts.seq_parallel
+               and shape.kind != "decode"
+               and shape.seq_len % model_sz == 0 else None,
+        "seq_noshard": None,
+        "heads": heads_ax,
+        "kv_heads": kv_ax,
+        "vocab": "model" if has_model else None,
+        "experts": fits(cfg.num_experts or 1, "model") if opts.moe_mode == "ep" else None,
+        "expert_ff": fits(cfg.d_ff or 1, "model") if opts.moe_mode == "tp" else None,
+        # decode KV cache: shard seq over model if kv heads can't shard
+        "cache_seq": ("model" if (has_model and opts.shard_cache_seq
+                                  and kv_ax is None
+                                  and shape.seq_len % model_sz == 0)
+                      else None) if shape.kind == "decode" else None,
+    }
+    # never shard the same tensor dim combination twice — Rules.spec dedups.
+    return Rules(mesh, table)
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+_COL = ("w_up", "w_gate", "wz", "wx", "wB", "wC", "wdt")     # shard output dim
+_ROW = ("wo", "w_down", "out_proj")                          # shard input dim
+_REPL = ("ln1", "ln2", "ln", "final_norm", "norm_w", "conv_w", "conv_b",
+         "A_log", "D", "dt_bias", "router")
+
+
+def _param_spec(name: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                mesh: Mesh, opts: ShardOptions) -> P:
+    if "model" not in mesh.shape:
+        return P(*([None] * len(shape)))
+    model_sz = mesh.shape["model"]
+    tail = name.split("/")[-1]
+    parent = name.split("/")[-2] if "/" in name else ""
+    nd = len(shape)
+
+    def ok(dim_idx: int) -> bool:
+        return shape[dim_idx] % model_sz == 0
+
+    spec = [None] * nd
+    if tail == "embed":
+        # (V, D) or (CB, V, D): shard the EMBED dim. Vocab-sharding the
+        # table makes SPMD all-gather the whole table per lookup (the
+        # gather indices are data-dependent); D-sharding keeps the lookup
+        # local and the (B,S,D/16) -> (B,S,D) all-gather is ~4x smaller.
+        if ok(nd - 1):
+            spec[nd - 1] = "model"
+    elif tail == "head":
+        if ok(nd - 1):
+            spec[nd - 1] = "model"
+    elif tail in _REPL:
+        pass
+    elif tail == "wq":
+        # out dim is H·Dh; only shard if the head reshape stays aligned
+        if (cfg.num_heads or 1) % model_sz == 0 and ok(nd - 1):
+            spec[nd - 1] = "model"
+    elif tail in ("wk", "wv"):
+        if (cfg.num_kv_heads or 1) % model_sz == 0 and ok(nd - 1):
+            spec[nd - 1] = "model"
+    elif tail == "wo":
+        if (cfg.num_heads or 1) % model_sz == 0 and ok(nd - 2):
+            spec[nd - 2] = "model"
+    elif tail in _COL:
+        if ok(nd - 1):
+            spec[nd - 1] = "model"
+    elif tail in _ROW:
+        if ok(nd - 2):
+            spec[nd - 2] = "model"
+    if opts.strategy == "fsdp" and all(s is None for s in spec) and nd >= 2:
+        # FSDP has no activation-alignment constraint: any weight that the
+        # TP rules left replicated (e.g. GQA wk/wv with kv < model axis)
+        # can shard on an arbitrary divisible dim — XLA gathers at use.
+        dims = sorted(range(nd), key=lambda i: -shape[i])
+        for i in dims:
+            if shape[i] % model_sz == 0 and shape[i] >= model_sz:
+                spec[i] = "model"
+                break
+    return P(*spec)
+
+
+def _moe_expert_spec(tail: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                     mesh: Mesh, opts: ShardOptions) -> P:
+    """Expert tensors (..., E, d_in, d_out)."""
+    if "model" not in mesh.shape:
+        return P(*([None] * len(shape)))
+    model_sz = mesh.shape["model"]
+    nd = len(shape)
+    spec = [None] * nd
+    if opts.moe_mode == "ep" and shape[nd - 3] % model_sz == 0:
+        spec[nd - 3] = "model"
+    elif opts.moe_mode == "tp":
+        ff_dim = nd - 1 if tail in ("w_up", "w_gate") else nd - 2
+        if shape[ff_dim] % model_sz == 0:
+            spec[ff_dim] = "model"
+    return P(*spec)
+
+
+def param_pspecs(params_tree: Any, cfg: ModelConfig, mesh: Mesh,
+                 opts: ShardOptions = ShardOptions()) -> Any:
+    """NamedSharding pytree for params (or matching ShapeDtypeStructs)."""
+    def one(path_leaf):
+        name, leaf = path_leaf
+        tail = name.split("/")[-1]
+        parts = name.split("/")
+        if len(parts) >= 2 and parts[-2] == "moe" and tail in ("w_up", "w_gate", "w_down"):
+            spec = _moe_expert_spec(tail, leaf.shape, cfg, mesh, opts)
+        elif "moe/shared" in name:
+            spec = _param_spec("/".join(parts[-1:]), leaf.shape, cfg, mesh, opts)
+        else:
+            spec = _param_spec(name, leaf.shape, cfg, mesh, opts)
+        return NamedSharding(mesh, spec)
+
+    leaves = named_leaves(params_tree)
+    specs = [one(nl) for nl in leaves]
+    treedef = jax.tree_util.tree_structure(params_tree)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_pspecs(params_shardings: Any, params_tree: Any, mesh: Mesh,
+               opts: ShardOptions) -> Any:
+    """Moment shardings: params' specs, plus ZeRO-1 data-sharding of the
+    largest replicated dim when enabled."""
+    if not opts.zero1:
+        return params_shardings
+    daxes = data_axes(mesh)
+    dsz = _axis_size(mesh, daxes)
+
+    def one(sharding: NamedSharding, leaf) -> NamedSharding:
+        spec = list(sharding.spec) + [None] * (len(leaf.shape) - len(sharding.spec))
+        for i, (dim, cur) in enumerate(zip(leaf.shape, spec)):
+            if cur is None and dim % dsz == 0 and dim >= dsz:
+                spec[i] = daxes if len(daxes) > 1 else daxes[0]
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, params_shardings, params_tree)
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                 batch_ax=None) -> Dict[str, NamedSharding]:
+    if batch_ax is None:
+        daxes = data_axes(mesh)
+        ok = shape.global_batch % _axis_size(mesh, daxes) == 0
+        b_ax = daxes if ok else None
+    else:
+        b_ax = batch_ax
+    tok = NamedSharding(mesh, P(b_ax, None, None) if cfg.family == "audio"
+                        else P(b_ax, None))
+    out = {"tokens": tok, "labels": NamedSharding(
+        mesh, P(b_ax, None, None) if cfg.family == "audio" else P(b_ax, None))}
+    if cfg.family == "vlm":
+        out["image_embed"] = NamedSharding(mesh, P(b_ax, None, None))
+    return out

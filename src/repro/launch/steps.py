@@ -1,0 +1,293 @@
+"""pjit step builders: train_step / prefill_step / decode_step per
+(arch × shape × mesh × options), plus abstract input_specs.
+
+All builders return (jitted_fn, abstract_args, shardings) so the same
+code serves real execution (tests, examples) and the dry-run
+(.lower(*abstract_args).compile()).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeSpec
+from repro.models import (
+    QATLevels, decode_step, forward, init_decode_state, init_params, loss_fn)
+from repro.models.partition import Rules, use_rules
+from repro.launch.sharding import (
+    ShardOptions, data_axes, input_pspecs, make_rules, opt_pspecs, param_pspecs)
+from repro.optim.adamw import AdamState, AdamWConfig, adamw_update, init_adam
+from repro.quant.policy import BitConfig
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one global batch (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        tok_shape = (b, 1, cfg.num_codebooks) if cfg.family == "audio" else (b, 1)
+        return {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+    if cfg.family == "audio":
+        return {"tokens": jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32),
+                "labels": jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32)}
+    if cfg.family == "vlm":
+        st = s - cfg.img_tokens
+        return {"tokens": jax.ShapeDtypeStruct((b, st), i32),
+                "image_embed": jax.ShapeDtypeStruct((b, cfg.img_tokens, cfg.d_model),
+                                                    cfg.param_dtype),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32)}
+
+
+def bitconfig_to_levels(cfg: ModelConfig, bits: BitConfig) -> QATLevels:
+    """BitConfig (block path -> bits) to scanned-levels tables.
+
+    Per-layer paths "layers/<i>/<rest>" become (L,) arrays keyed "<rest>";
+    top-level blocks stay scalars. Missing blocks disable quantization
+    (levels = 2^16 − 1 sentinel)."""
+    import numpy as np
+    off = 65535.0
+    lw: Dict[str, Any] = {}
+    la: Dict[str, Any] = {}
+    tw: Dict[str, Any] = {}
+    ta: Dict[str, Any] = {}
+
+    def insert(table_layer, table_top, path, b):
+        parts = path.split("/")
+        lv = float(2 ** b - 1) if b < 16 else off
+        if parts[0] == "layers" and len(parts) >= 3 and parts[1].isdigit():
+            key = "/".join(parts[2:])
+            arr = table_layer.setdefault(key, np.full(cfg.num_layers, off, np.float32))
+            arr[int(parts[1])] = lv
+        else:
+            table_top[path] = jnp.float32(lv)
+
+    for path, b in bits.weight_bits.items():
+        insert(lw, tw, path, b)
+    for path, b in bits.act_bits.items():
+        insert(la, ta, path, b)
+    lw = {k: jnp.asarray(v) for k, v in lw.items()}
+    la = {k: jnp.asarray(v) for k, v in la.items()}
+    return QATLevels(lw, la, tw, ta)
+
+
+def uniform_levels(cfg: ModelConfig, weight_bits: int, act_bits: Optional[int]
+                   ) -> QATLevels:
+    """Uniform QAT levels over the standard per-layer blocks (scan-safe)."""
+    wl = float(2 ** weight_bits - 1)
+    if cfg.family in ("dense", "vlm", "audio"):
+        wkeys = ["attn/wq", "attn/wk", "attn/wv", "attn/wo",
+                 "mlp/w_up", "mlp/w_down"] + (
+                     ["mlp/w_gate"] if cfg.act == "swiglu" else [])
+        akeys = ["attn/attn_out", "mlp/mlp_h"]
+    elif cfg.family == "moe":
+        wkeys = ["attn/wq", "attn/wk", "attn/wv", "attn/wo",
+                 "moe/w_up", "moe/w_gate", "moe/w_down"]
+        akeys = ["attn/attn_out", "moe/moe_h"]
+    elif cfg.family == "ssm":
+        wkeys = ["mixer/wz", "mixer/wx", "mixer/wB", "mixer/wC",
+                 "mixer/out_proj"]
+        akeys = ["mixer/conv_out", "mixer/ssd_out"]
+    else:  # hybrid: QAT supported on the unrolled path only (see DESIGN.md)
+        wkeys, akeys = [], []
+    ones = jnp.ones((cfg.num_layers,), jnp.float32)
+    lw = {k: ones * wl for k in wkeys}
+    la = {}
+    if act_bits is not None:
+        al = float(2 ** act_bits - 1)
+        la = {k: ones * al for k in akeys}
+    return QATLevels(lw, la, {}, {})
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepBuild:
+    fn: Any                      # jitted function
+    args: Tuple[Any, ...]        # abstract args (ShapeDtypeStructs)
+    rules: Rules
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                     opts: ShardOptions = ShardOptions(),
+                     adam: AdamWConfig = AdamWConfig(),
+                     qat: Optional[QATLevels] = None,
+                     abstract: bool = True) -> StepBuild:
+    rules = make_rules(cfg, shape, mesh, opts)
+    params = init_params(cfg, abstract=True)
+    p_sh = param_pspecs(params, cfg, mesh, opts)
+    opt_abs = init_adam(params, abstract=True)
+    m_sh = opt_pspecs(p_sh, params, mesh, opts)
+    o_sh = AdamState(step=NamedSharding(mesh, P()), m=m_sh, v=m_sh)
+    in_sh = input_pspecs(cfg, shape, mesh, batch_ax=rules.table.get("batch"))
+    specs = input_specs(cfg, shape)
+
+    def train_step(state: TrainState, batch):
+        with use_rules(rules):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, qat=qat))(state.params)
+            new_p, new_o, metrics = adamw_update(adam, state.params, grads, state.opt)
+            return TrainState(new_p, new_o), {"loss": loss, **metrics}
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(TrainState(p_sh, o_sh),
+                      {k: in_sh[k] for k in specs}),
+        out_shardings=(TrainState(p_sh, o_sh), None),
+        donate_argnums=(0,),
+    )
+    return StepBuild(jitted, (TrainState(params, opt_abs), specs), rules)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                       opts: ShardOptions = ShardOptions()) -> StepBuild:
+    """Prefill = full-sequence forward producing logits (serving ingest)."""
+    rules = make_rules(cfg, shape, mesh, opts)
+    params = init_params(cfg, abstract=True)
+    p_sh = param_pspecs(params, cfg, mesh, opts)
+    in_sh = input_pspecs(cfg, shape, mesh)
+    specs = input_specs(cfg, shape)
+    specs.pop("labels", None)
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            logits, _ = forward(params, batch, cfg)
+            return logits
+
+    jitted = jax.jit(prefill_step,
+                     in_shardings=(p_sh, {k: in_sh[k] for k in specs}))
+    return StepBuild(jitted, (params, specs), rules)
+
+
+def quantize_decode_params(params: Any, cfg: ModelConfig):
+    """Abstract (or real) params -> int8 matmul weights + per-block scales.
+
+    Matmul weights (≥2D, not norms/conv/ssm scalars) become int8 storage;
+    scales are per-block fp32 scalars (serving PTQ). Real arrays are
+    symmetrically quantized; abstract structs just change dtype."""
+    from repro.utils.pytree import map_with_names
+    skip = ("norm", "ln", "conv", "a_log", "dt_bias", "router", "embed")
+    scales: Dict[str, Any] = {}
+
+    def one(name, leaf):
+        tail = name.split("/")[-1]
+        parts = name.split("/")
+        if leaf.ndim < 2 or any(s in name.lower() for s in skip):
+            return leaf
+        # key by within-layer path (scan slices the L dim off)
+        key = "/".join(p for p in parts if not p.isdigit())
+        key = key.replace("layers/", "").replace("groups/", "").replace(
+            "rest/", "").replace("shared/", "")
+        if isinstance(leaf, jax.ShapeDtypeStruct):
+            scales[key] = jnp.float32(0.01)
+            return jax.ShapeDtypeStruct(leaf.shape, jnp.int8)
+        amax = jnp.maximum(jnp.max(jnp.abs(leaf.astype(jnp.float32))), 1e-9)
+        scales[key] = (amax / 127.0).astype(jnp.float32)
+        q = jnp.clip(jnp.round(leaf.astype(jnp.float32) / scales[key]),
+                     -127, 127).astype(jnp.int8)
+        return q
+
+    qparams = map_with_names(one, params)
+    return qparams, scales
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                      opts: ShardOptions = ShardOptions()) -> StepBuild:
+    """One-token serve step with a seq_len-deep KV cache/SSM state."""
+    from repro.models.context import DequantContext
+
+    rules = make_rules(cfg, shape, mesh, opts)
+    params = init_params(cfg, abstract=True)
+    scales = None
+    if opts.decode_quant:
+        params, scales = quantize_decode_params(params, cfg)
+    p_sh = param_pspecs(params, cfg, mesh, opts)
+    state = init_decode_state(cfg, shape.global_batch, shape.seq_len, abstract=True)
+    if opts.decode_quant and "kv8" in opts.decode_quant and state.kv is not None:
+        state = state._replace(kv=jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.int8), state.kv))
+    s_sh = decode_state_pspecs(state, cfg, shape, mesh, opts, rules)
+    specs = input_specs(cfg, shape)
+    tok_sh = NamedSharding(mesh, P(rules.table.get("batch"),
+                                   *(None,) * (len(specs["tokens"].shape) - 1)))
+
+    def serve_step(params, state, tokens):
+        ctx = DequantContext(scales, cfg.param_dtype) if scales else None
+        with use_rules(rules):
+            return decode_step(params, state, tokens, cfg, ctx=ctx)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, s_sh, tok_sh),
+                     out_shardings=(None, s_sh),
+                     donate_argnums=(1,))
+    return StepBuild(jitted, (params, state, specs["tokens"]), rules)
+
+
+def decode_state_pspecs(state, cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                        opts: ShardOptions, rules: Rules):
+    """Shardings for DecodeState: caches batch over data, kv-heads or
+    cache-seq over model; SSM states batch over data, heads over model."""
+    b_ax = rules.table.get("batch")
+    kv_ax = rules.table.get("kv_heads")
+    seq_ax = rules.table.get("cache_seq")
+    h_ax = rules.table.get("heads")
+    model_sz = mesh.shape.get("model", 1)
+
+    def spec_for(name: str, leaf) -> NamedSharding:
+        nd = len(leaf.shape)
+        if name.endswith("pos"):
+            return NamedSharding(mesh, P())
+        if "/kv/" in f"/{name}/" or name.split("/")[-2] == "kv":
+            # (G?, B, T, KV, Dh)
+            spec = [None] * nd
+            spec[nd - 4] = b_ax
+            if kv_ax is not None:
+                spec[nd - 2] = kv_ax
+            elif seq_ax is not None:
+                spec[nd - 3] = seq_ax
+            return NamedSharding(mesh, P(*spec))
+        if name.endswith("/h"):
+            # (..., B, H, N, P)
+            spec = [None] * nd
+            spec[nd - 4] = b_ax
+            if (cfg.ssm_heads % model_sz == 0):
+                spec[nd - 3] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if name.endswith("/conv"):
+            spec = [None] * nd
+            spec[nd - 3] = b_ax
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    from repro.utils.pytree import named_leaves
+    leaves = named_leaves(state)
+    specs = [spec_for(n, l) for n, l in leaves]
+    treedef = jax.tree_util.tree_structure(state)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               opts: ShardOptions = ShardOptions(),
+               qat: Optional[QATLevels] = None) -> StepBuild:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, opts, qat=qat)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, opts)
+    return build_decode_step(cfg, shape, mesh, opts)

@@ -1,0 +1,4 @@
+from repro.models.transformer import (
+    init_params, forward, loss_fn, vocab_padded, QATLevels)
+from repro.models.decode import DecodeState, init_decode_state, decode_step, prefill
+from repro.models.context import Context, QATContext, TapContext, CollectContext

@@ -1,0 +1,178 @@
+"""GQA attention with RoPE: chunked online-softmax (train/prefill) and
+KV-cache decode.
+
+The chunked path never materializes the S×T score matrix: a scan over KV
+chunks carries (running-max, denominator, accumulator) — the jnp mirror
+of the Pallas flash kernel, used on non-TPU backends and for the
+compile-time dry-run. On TPU ``repro.kernels.ops`` dispatches to the
+Pallas kernel.
+
+Decode attends one query position against the full cache with a length
+mask; GQA keeps the cache at kv_heads and contracts with grouped queries
+(no cache repetition — 4× less HBM traffic for kv=8/H=32).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.layers import apply_rope, grad_barrier, init_dense
+from repro.models.partition import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype, abstract: bool) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], d, h * hd, dtype, abstract),
+        "wk": init_dense(ks[1], d, kv * hd, dtype, abstract),
+        "wv": init_dense(ks[2], d, kv * hd, dtype, abstract),
+        "wo": init_dense(ks[3], h * hd, d, dtype, abstract),
+    }
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention. q: (B,S,H,Dh); k,v: (B,T,H,Dh) -> (B,S,H,Dh)."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    chunk = min(chunk, t)
+    nk = -(-t // chunk)
+    pad = nk * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = (q * (dh ** -0.5)).astype(q.dtype)
+
+    def body(carry, idx):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, idx * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, 1)
+        sc = jnp.einsum("bshd,bthd->bhst", qs, ks,
+                        preferred_element_type=jnp.float32)
+        kpos = idx * chunk + jnp.arange(chunk)
+        valid = kpos[None, :] < t                       # padded tail
+        if causal:
+            qpos = jnp.arange(s)
+            valid = valid & (qpos[:, None] >= kpos[None, :])
+        sc = jnp.where(valid[None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhst,bthd->bshd", p.astype(vs.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, s, h, dh), jnp.float32)
+    # per-chunk remat = flash-attention backward: without it the scan
+    # saves every chunk's (B,H,S,chunk) probability tensor for the bwd
+    # pass (GiBs); with it only the O(B·H·S) carries are stored and
+    # scores/probs are recomputed per chunk.
+    body = jax.checkpoint(body, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+    l = jnp.maximum(l, 1e-30)
+    return (acc / l.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+
+
+def attention_apply(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
+                    positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full (causal) attention for train / prefill. x: (B, S, D)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+
+    q = grad_barrier((x @ ctx.qw("wq", p["wq"])).reshape(b, s, h, hd))
+    k = grad_barrier((x @ ctx.qw("wk", p["wk"])).reshape(b, s, kv, hd))
+    v = grad_barrier((x @ ctx.qw("wv", p["wv"])).reshape(b, s, kv, hd))
+    # land on the attention layout BEFORE the GQA repeat: the seq
+    # all-gather (SP boundary) then moves the small kv-head tensor, and
+    # the repeat + head-shard below is a local broadcast/slice.
+    q = constrain(q, "batch", "seq_noshard", "heads", None)
+    k = constrain(k, "batch", "seq_noshard", "kv_heads", None)
+    v = constrain(v, "batch", "seq_noshard", "kv_heads", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = ctx.tap("q", q)
+    k = ctx.tap("k", k)
+    v = ctx.tap("v", v)
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+        k = constrain(k, "batch", "seq_noshard", "heads", None)
+        v = constrain(v, "batch", "seq_noshard", "heads", None)
+    o = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    o = ctx.tap("attn_out", o.reshape(b, s, h * hd))
+    return o @ ctx.qw("wo", p["wo"])
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, T, KV, Dh)
+    v: jnp.ndarray        # (B, T, KV, Dh)
+
+    @classmethod
+    def zeros(cls, b: int, t: int, kv: int, hd: int, dtype) -> "KVCache":
+        return cls(jnp.zeros((b, t, kv, hd), dtype),
+                   jnp.zeros((b, t, kv, hd), dtype))
+
+    @classmethod
+    def abstract(cls, b: int, t: int, kv: int, hd: int, dtype) -> "KVCache":
+        s = jax.ShapeDtypeStruct((b, t, kv, hd), dtype)
+        return cls(s, s)
+
+
+def attention_decode(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
+                     cache: KVCache, pos: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode. x: (B, 1, D); pos: () current position scalar."""
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kv
+    t = cache.k.shape[1]
+
+    q = (x @ ctx.qw("wq", p["wq"])).reshape(b, 1, h, hd)
+    knew = (x @ ctx.qw("wk", p["wk"])).reshape(b, 1, kv, hd)
+    vnew = (x @ ctx.qw("wv", p["wv"])).reshape(b, 1, kv, hd)
+    posb = jnp.broadcast_to(pos[None], (b, 1)) if pos.ndim == 0 else pos
+    q = apply_rope(q, posb, cfg.rope_theta)
+    knew = apply_rope(knew, posb, cfg.rope_theta)
+
+    # int8 KV cache: symmetric per-cache static scale (paper Appendix E
+    # noise model at b=8; calibrated scale would come from EmaObserver)
+    KV_SCALE = 0.05
+    quant_cache = cache.k.dtype == jnp.int8
+
+    def to_cache(x):
+        if not quant_cache:
+            return x.astype(cache.k.dtype)
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_SCALE),
+                        -127, 127).astype(jnp.int8)
+
+    kc = jax.lax.dynamic_update_slice_in_dim(cache.k, to_cache(knew), pos, 1) \
+        if pos.ndim == 0 else cache.k.at[:, pos[0]].set(to_cache(knew)[:, 0])
+    vc = jax.lax.dynamic_update_slice_in_dim(cache.v, to_cache(vnew), pos, 1) \
+        if pos.ndim == 0 else cache.v.at[:, pos[0]].set(to_cache(vnew)[:, 0])
+    kc = constrain(kc, "batch", "cache_seq", "kv_heads", None)
+    vc = constrain(vc, "batch", "cache_seq", "kv_heads", None)
+    k_eff = kc.astype(x.dtype) * KV_SCALE if quant_cache else kc
+    v_eff = vc.astype(x.dtype) * KV_SCALE if quant_cache else vc
+
+    # grouped-query attention against the cache (no KV repetition)
+    qg = q.reshape(b, kv, g, hd)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, k_eff,
+                    preferred_element_type=jnp.float32) * (hd ** -0.5)
+    mask = jnp.arange(t)[None, None, None, :] <= pos
+    sc = jnp.where(mask, sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", pr.astype(v_eff.dtype), v_eff)
+    o = ctx.tap("attn_out", o.reshape(b, 1, h * hd))
+    return o @ ctx.qw("wo", p["wo"]), KVCache(kc, vc)

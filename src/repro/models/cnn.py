@@ -1,0 +1,123 @@
+"""The paper's small convolutional classifier (Appendix D, Fig. 8).
+
+Three conv blocks (conv → [BN] → ReLU, first two followed by MaxPool)
+plus a fully-connected head — exactly the testbed used for experiments
+A–D. Implemented functionally with the same ctx.qw / ctx.tap hooks as
+the LM zoo so FIT, QAT, and the heuristic baselines all apply unchanged.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.context import Context
+
+
+def init_cnn(key, num_classes: int = 10, channels: int = 3, filters: int = 16,
+             input_hw: int = 16, batchnorm: bool = True) -> Dict:
+    ks = jax.random.split(key, 4)
+
+    def conv(k, cin, cout):
+        w = jax.random.normal(k, (3, 3, cin, cout), jnp.float32)
+        return w * np.sqrt(2.0 / (9 * cin))
+
+    p = {
+        "conv1": {"w": conv(ks[0], channels, filters)},
+        "conv2": {"w": conv(ks[1], filters, 2 * filters)},
+        "conv3": {"w": conv(ks[2], 2 * filters, 2 * filters)},
+    }
+    hw = input_hw // 4                       # two 2x2 maxpools
+    p["fc"] = {"w": jax.random.normal(ks[3], (hw * hw * 2 * filters, num_classes),
+                                      jnp.float32) * 0.05,
+               "b": jnp.zeros((num_classes,), jnp.float32)}
+    if batchnorm:
+        for i, c in (("1", filters), ("2", 2 * filters), ("3", 2 * filters)):
+            p[f"bn{i}"] = {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,))}
+    return p
+
+
+def _conv2d(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _bn(x, p, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["gamma"] + p["beta"]
+
+
+def cnn_forward(params: Dict, x: jnp.ndarray,
+                ctx: Optional[Context] = None) -> jnp.ndarray:
+    """x: (B, H, W, C) -> logits (B, num_classes)."""
+    ctx = ctx or Context()
+    bn = "bn1" in params
+
+    def block(x, i, pool):
+        with ctx.scope(f"conv{i}"):
+            h = _conv2d(x, ctx.qw("w", params[f"conv{i}"]["w"]))
+        if bn:
+            h = _bn(h, params[f"bn{i}"])
+        h = jax.nn.relu(h)
+        h = ctx.tap(f"act{i}", h)
+        return _maxpool(h) if pool else h
+
+    h = block(x, 1, True)
+    h = block(h, 2, True)
+    h = block(h, 3, False)
+    h = h.reshape(h.shape[0], -1)
+    with ctx.scope("fc"):
+        return h @ ctx.qw("w", params["fc"]["w"]) + params["fc"]["b"]
+
+
+def cnn_loss(params: Dict, batch: Tuple[jnp.ndarray, jnp.ndarray],
+             ctx: Optional[Context] = None) -> jnp.ndarray:
+    x, y = batch
+    logits = cnn_forward(params, x, ctx)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lp, y[:, None], axis=-1))
+
+
+def cnn_accuracy(params: Dict, x: jnp.ndarray, y: jnp.ndarray) -> float:
+    logits = cnn_forward(params, x)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))
+
+
+def cnn_tap_shapes(params: Dict, batch, batchnorm: bool = True) -> Dict:
+    x, _ = batch
+    b, hw = x.shape[0], x.shape[1]
+    f = params["conv1"]["w"].shape[-1]
+    return {
+        "act1": jax.ShapeDtypeStruct((b, hw, hw, f), jnp.float32),
+        "act2": jax.ShapeDtypeStruct((b, hw // 2, hw // 2, 2 * f), jnp.float32),
+        "act3": jax.ShapeDtypeStruct((b, hw // 4, hw // 4, 2 * f), jnp.float32),
+    }
+
+
+def cnn_tap_loss(params: Dict, taps, batch) -> jnp.ndarray:
+    return cnn_loss(params, batch, ctx=_TapCtx(taps))
+
+
+class _TapCtx(Context):
+    def __init__(self, taps):
+        super().__init__()
+        self.taps = taps
+
+    def tap(self, name, a):
+        t = self.taps.get(self.path(name))
+        return a if t is None else a + t
+
+
+def cnn_act_fn(params: Dict, batch) -> Dict:
+    from repro.models.context import CollectContext
+    ctx = CollectContext()
+    cnn_loss(params, batch, ctx=ctx)
+    return ctx.acts

@@ -1,0 +1,147 @@
+"""Forward-pass context: the single interception point for FIT and QAT.
+
+Every weight matmul calls ``ctx.qw(name, w)`` and every designated
+activation site calls ``ctx.tap(name, a)``. The context decides what
+happens there:
+
+  * plain forward            — identity
+  * QAT forward              — STE fake-quant with per-block bit widths
+                               (per-layer bits under scan are traced
+                               "levels" scalars, so one compiled layer
+                               body serves all layers)
+  * FIT activation traces    — add a zero-valued tap parameter
+  * calibration              — record min/max statistics
+
+Names are scoped with ``ctx.scope("layers/attn")`` so block paths align
+with the parameter-tree paths used by QuantPolicy / SensitivityReport.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Any, Callable, Dict, List, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantizer import QuantSpec, quant_params
+from repro.quant.fake_quant import fake_quant_ste
+
+
+def _dynamic_fake_quant_ste(x: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quant where the number of levels (2^b−1) is a traced scalar.
+
+    Needed under scan-stacked layers with per-layer bit widths: the bits
+    become data, not structure. levels >= 2^15 disables quantization
+    (identity) via jnp.where so the op stays branch-free.
+    """
+    lo = jnp.minimum(jnp.min(x), 0.0).astype(jnp.float32)
+    hi = jnp.maximum(jnp.max(x), 0.0).astype(jnp.float32)
+    scale = jnp.maximum((hi - lo) / levels, 1e-12)
+    zp = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale + zp), 0.0, levels)
+    fq = ((q - zp) * scale).astype(x.dtype)
+    big = levels >= 32767.0
+    y = jnp.where(big, x, fq)
+    return x + jax.lax.stop_gradient(y - x)   # STE
+
+
+class Context:
+    """Identity context (plain forward)."""
+
+    def __init__(self, scope_prefix: str = ""):
+        self._scope: List[str] = [scope_prefix] if scope_prefix else []
+
+    @contextmanager
+    def scope(self, name: str):
+        self._scope.append(name)
+        try:
+            yield self
+        finally:
+            self._scope.pop()
+
+    def path(self, name: str) -> str:
+        return "/".join(self._scope + [name])
+
+    def qw(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
+        return w
+
+    def tap(self, name: str, a: jnp.ndarray) -> jnp.ndarray:
+        return a
+
+
+class QATContext(Context):
+    """Fake-quantize weights and activations with per-block bit widths.
+
+    ``weight_levels`` / ``act_levels`` map block path -> levels value
+    (2^bits − 1), which may be python floats or traced scalars (the scan
+    path passes a slice of a per-layer levels array).
+    """
+
+    def __init__(self, weight_levels: Mapping[str, Any],
+                 act_levels: Mapping[str, Any], scope_prefix: str = ""):
+        super().__init__(scope_prefix)
+        self.weight_levels = weight_levels
+        self.act_levels = act_levels
+
+    def _lookup(self, table: Mapping[str, Any], path: str):
+        if path in table:
+            return table[path]
+        # fall back to the unscoped tail (shared-block invocations)
+        tail = path.split("/")[-1]
+        return table.get(tail)
+
+    def qw(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
+        lv = self._lookup(self.weight_levels, self.path(name))
+        if lv is None:
+            return w
+        return _dynamic_fake_quant_ste(w, jnp.asarray(lv, jnp.float32))
+
+    def tap(self, name: str, a: jnp.ndarray) -> jnp.ndarray:
+        lv = self._lookup(self.act_levels, self.path(name))
+        if lv is None:
+            return a
+        return _dynamic_fake_quant_ste(a, jnp.asarray(lv, jnp.float32))
+
+
+class TapContext(Context):
+    """Add zero-valued tap params at activation sites (FIT activation EF)."""
+
+    def __init__(self, taps: Mapping[str, jnp.ndarray], scope_prefix: str = ""):
+        super().__init__(scope_prefix)
+        self.taps = taps
+
+    def tap(self, name: str, a: jnp.ndarray) -> jnp.ndarray:
+        t = self.taps.get(self.path(name))
+        return a if t is None else a + t
+
+
+class CollectContext(Context):
+    """Record activation values (shape probes / calibration)."""
+
+    def __init__(self, scope_prefix: str = ""):
+        super().__init__(scope_prefix)
+        self.acts: Dict[str, jnp.ndarray] = {}
+
+    def tap(self, name: str, a: jnp.ndarray) -> jnp.ndarray:
+        self.acts[self.path(name)] = a
+        return a
+
+
+class DequantContext(Context):
+    """Serve-time weight dequantization: params hold int8 matmul weights;
+    ``qw`` upcasts with the per-block scale at the point of use. On TPU
+    the convert+scale fuses into the consuming matmul (or runs through
+    the int8 MXU kernel), so HBM reads stay 1 byte/element."""
+
+    def __init__(self, scales: Mapping[str, jnp.ndarray], dtype,
+                 scope_prefix: str = ""):
+        super().__init__(scope_prefix)
+        self.scales = scales
+        self.dtype = dtype
+
+    def qw(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
+        s = self.scales.get(self.path(name))
+        if s is None or w.dtype != jnp.int8:
+            return w
+        return (w.astype(jnp.float32) * s).astype(self.dtype)

@@ -1,0 +1,227 @@
+"""Serving: decode-state containers and one-token decode steps.
+
+State layouts (stacked on a leading layer dim for lax.scan):
+  dense/moe/audio/vlm : KVCache (L, B, T, KV, Dh) ×2 + position scalar
+  ssm                 : MambaState (L, B, H, N, P) + conv tails
+  hybrid              : mamba states (G, period, ...) + rest (R, ...) +
+                        shared-attn caches (G, B, T, KV, Dh)
+
+``decode_step`` lowers as ONE jit (the serve_step of the dry-run): embeds
+the previous token, scans the layer stack updating caches in place
+(donated), and returns next-token logits.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.attention import KVCache
+from repro.models.context import Context
+from repro.models.mamba2 import MambaState, _conv_channels
+from repro.models.partition import constrain
+from repro.models.transformer import (
+    _attn_mlp_block_decode, _mamba_block_decode, logits_from_hidden,
+    vocab_padded)
+
+
+class DecodeState(NamedTuple):
+    pos: jnp.ndarray                      # () int32 — current length
+    kv: Optional[KVCache] = None          # attention caches (stacked)
+    ssm: Optional[MambaState] = None      # mamba states (stacked)
+    rest: Optional[MambaState] = None     # hybrid remainder layers
+
+
+def _kv_struct(cfg: ModelConfig, n: int, b: int, t: int, abstract: bool) -> KVCache:
+    kv, hd, dt = cfg.num_kv_heads, cfg.head_dim, cfg.param_dtype
+    shape = (n, b, t, kv, hd)
+    if abstract:
+        s = jax.ShapeDtypeStruct(shape, dt)
+        return KVCache(s, s)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def _ssm_struct(cfg: ModelConfig, lead: Tuple[int, ...], b: int,
+                abstract: bool) -> MambaState:
+    h_shape = lead + (b, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim)
+    c_shape = lead + (b, cfg.conv_width - 1, _conv_channels(cfg))
+    if abstract:
+        return MambaState(jax.ShapeDtypeStruct(h_shape, jnp.float32),
+                          jax.ShapeDtypeStruct(c_shape, cfg.param_dtype))
+    return MambaState(jnp.zeros(h_shape, jnp.float32),
+                      jnp.zeros(c_shape, cfg.param_dtype))
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      abstract: bool = False) -> DecodeState:
+    pos = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+           else jnp.zeros((), jnp.int32))
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return DecodeState(pos=pos,
+                           kv=_kv_struct(cfg, cfg.num_layers, batch, max_len, abstract))
+    if cfg.family == "ssm":
+        return DecodeState(pos=pos,
+                           ssm=_ssm_struct(cfg, (cfg.num_layers,), batch, abstract))
+    if cfg.family == "hybrid":
+        n_groups, rem = divmod(cfg.num_layers, cfg.attn_period)
+        return DecodeState(
+            pos=pos,
+            kv=_kv_struct(cfg, n_groups, batch, max_len, abstract),
+            ssm=_ssm_struct(cfg, (n_groups, cfg.attn_period), batch, abstract),
+            rest=_ssm_struct(cfg, (rem,), batch, abstract) if rem else None,
+        )
+    raise ValueError(cfg.family)
+
+
+def _embed_token(params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """tokens: (B, 1) (or (B, 1, CB) for audio) -> (B, 1, D)."""
+    if cfg.family == "audio":
+        x = jnp.zeros(tokens.shape[:2] + (cfg.d_model,), cfg.param_dtype)
+        for cb in range(cfg.num_codebooks):
+            x = x + jnp.take(params["embed"][cb], tokens[..., cb], axis=0)
+        return x
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
+                cfg: ModelConfig,
+                embed: Optional[jnp.ndarray] = None,
+                ctx: Optional[Context] = None
+                ) -> Tuple[jnp.ndarray, DecodeState]:
+    """One token for the whole stack. tokens: (B,1)[,CB] -> logits (B,1,V).
+
+    ``embed`` (B,1,D) bypasses the token embedding — used to ingest
+    frontend-stub embeddings (VLM image patches) during prefill.
+    ``ctx`` hooks weight access (e.g. DequantContext for int8 serving)."""
+    ctx = ctx or Context()
+    x = embed if embed is not None else _embed_token(params, tokens, cfg)
+    x = x.astype(cfg.param_dtype)
+    x = constrain(x, "batch", None, None)
+    pos = state.pos
+
+    unrolled = isinstance(params["layers"], dict) and "0" in params["layers"] \
+        if "layers" in params else False
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if unrolled:
+            caches = []
+            for i in range(cfg.num_layers):
+                ci = jax.tree.map(lambda c: c[i], state.kv)
+                x, ci = _attn_mlp_block_decode(x, params["layers"][str(i)],
+                                               cfg, ctx, ci, pos)
+                caches.append(ci)
+            new_kv = jax.tree.map(lambda *cs: jnp.stack(cs), *caches)
+        else:
+            def body(h, xs):
+                bp, c = xs
+                h, c = _attn_mlp_block_decode(h, bp, cfg, ctx, c, pos)
+                return h, c
+
+            x, new_kv = jax.lax.scan(body, x, (params["layers"], state.kv))
+        new_state = DecodeState(pos=pos + 1, kv=new_kv)
+    elif cfg.family == "ssm":
+        if unrolled:
+            sts = []
+            for i in range(cfg.num_layers):
+                si = jax.tree.map(lambda s: s[i], state.ssm)
+                x, si = _mamba_block_decode(x, params["layers"][str(i)], cfg, ctx, si)
+                sts.append(si)
+            new_ssm = jax.tree.map(lambda *ss: jnp.stack(ss), *sts)
+        else:
+            def body(h, xs):
+                bp, st = xs
+                h, st = _mamba_block_decode(h, bp, cfg, ctx, st)
+                return h, st
+
+            x, new_ssm = jax.lax.scan(body, x, (params["layers"], state.ssm))
+        new_state = DecodeState(pos=pos + 1, ssm=new_ssm)
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        if unrolled or (isinstance(params["groups"], dict) and "0" in params["groups"]):
+            n_groups, rem = divmod(cfg.num_layers, cfg.attn_period)
+            kvs, ssms, rests = [], [], []
+            for g in range(n_groups):
+                cg = jax.tree.map(lambda c: c[g], state.kv)
+                x, cg = _attn_mlp_block_decode(x, shared, cfg, ctx, cg, pos)
+                kvs.append(cg)
+                row = []
+                for i in range(cfg.attn_period):
+                    si = jax.tree.map(lambda s: s[g, i], state.ssm)
+                    x, si = _mamba_block_decode(
+                        x, params["groups"][str(g)][str(i)], cfg, ctx, si)
+                    row.append(si)
+                ssms.append(jax.tree.map(lambda *ss: jnp.stack(ss), *row))
+            new_kv = jax.tree.map(lambda *cs: jnp.stack(cs), *kvs)
+            new_ssm = jax.tree.map(lambda *ss: jnp.stack(ss), *ssms)
+            new_rest = state.rest
+            if state.rest is not None:
+                for i in range(rem):
+                    si = jax.tree.map(lambda s: s[i], state.rest)
+                    x, si = _mamba_block_decode(x, params["rest"][str(i)], cfg, ctx, si)
+                    rests.append(si)
+                new_rest = jax.tree.map(lambda *ss: jnp.stack(ss), *rests)
+        else:
+            def group_body(h, xs):
+                gp, cache, sts = xs
+                h, cache = _attn_mlp_block_decode(h, shared, cfg, ctx, cache, pos)
+
+                def inner(hh, ys):
+                    bp, st = ys
+                    return _mamba_block_decode(hh, bp, cfg, ctx, st)
+
+                h, sts = jax.lax.scan(inner, h, (gp, sts))
+                return h, (cache, sts)
+
+            x, (new_kv, new_ssm) = jax.lax.scan(
+                group_body, x, (params["groups"], state.kv, state.ssm))
+            new_rest = state.rest
+            if state.rest is not None:
+                def inner(hh, ys):
+                    bp, st = ys
+                    return _mamba_block_decode(hh, bp, cfg, ctx, st)
+                x, new_rest = jax.lax.scan(inner, x, (params["rest"], state.rest))
+        new_state = DecodeState(pos=pos + 1, kv=new_kv, ssm=new_ssm, rest=new_rest)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = logits_from_hidden(params, x, cfg, ctx)
+    return logits, new_state
+
+
+def prefill(params, inputs: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            max_len: int) -> Tuple[jnp.ndarray, DecodeState]:
+    """Run the full prompt, returning last-position logits + filled state.
+
+    Implemented as forward() for logits plus a decode-state fill. For
+    attention families the cache fill reuses the forward K/V computation
+    pattern; for simplicity and correctness it replays tokens through
+    decode_step via lax.scan (exact same numerics as decode).
+    """
+    from repro.models.transformer import forward  # cycle-free local import
+
+    tokens = inputs["tokens"]
+    b, s = tokens.shape[0], tokens.shape[1]
+    state = init_decode_state(cfg, b, max_len)
+
+    img_logits = None
+    if cfg.family == "vlm" and "image_embed" in inputs:
+        def istep(st, emb):
+            logits, st = decode_step(params, st, None, cfg, embed=emb[:, None])
+            return st, logits[:, 0]
+
+        img = jnp.moveaxis(inputs["image_embed"], 1, 0)     # (T_img, B, D)
+        state, img_logits = jax.lax.scan(istep, state, img)
+        img_logits = jnp.moveaxis(img_logits, 0, 1)
+
+    def step(st, tok):
+        logits, st = decode_step(params, st, tok[:, None], cfg)
+        return st, logits[:, 0]
+
+    order = jnp.moveaxis(tokens, 1, 0)          # (S, B[, CB])
+    state, logits_seq = jax.lax.scan(step, state, order)
+    logits_seq = jnp.moveaxis(logits_seq, 0, 1)
+    if img_logits is not None:
+        logits_seq = jnp.concatenate([img_logits, logits_seq], axis=1)
+    return logits_seq, state

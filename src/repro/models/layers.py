@@ -1,0 +1,113 @@
+"""Shared model primitives: norms, RoPE, MLPs, embeddings, initializers.
+
+All layers are functional: ``init_*`` returns a param dict (or
+ShapeDtypeStructs when ``abstract=True`` — used by the dry-run so no
+memory is ever allocated for full-size configs), ``apply`` is pure.
+
+Quantization hooks: every matmul weight passes through ``ctx.qw(name, w)``
+and every activation site through ``ctx.tap(name, a)`` (see context.py),
+so FIT traces / fake-quant / calibration all reuse one interception point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _make(key, shape, dtype, scale: float, abstract: bool):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    fan_in = shape[0] if len(shape) > 1 else 1
+    return (jax.random.normal(key, shape, jnp.float32) * scale / np.sqrt(fan_in)
+            ).astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, abstract: bool,
+               scale: float = 1.0):
+    return _make(key, (d_in, d_out), dtype, scale, abstract)
+
+
+def init_norm(key, d: int, dtype, abstract: bool):
+    if abstract:
+        return jax.ShapeDtypeStruct((d,), dtype)
+    return jnp.ones((d,), dtype)
+
+
+@jax.custom_vjp
+def grad_barrier(x):
+    """Identity whose COTANGENT is cast back to x.dtype.
+
+    Attention/SSD keep fp32 accumulations in the forward (MXU-accurate),
+    but without this barrier the fp32 cotangents flow into the matmul
+    backward passes and every TP/DP all-reduce moves 4-byte tensors —
+    2× the ICI traffic of the standard bf16-gradient recipe."""
+    return x
+
+
+def _gb_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)   # residual carries only the dtype
+
+
+def _gb_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+grad_barrier.defvjp(_gb_fwd, _gb_bwd)
+
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    # The mean-square reduction runs in f32, but x itself is never
+    # materialized at f32 width: only the per-row rsqrt is upcast. This
+    # keeps the residual stream (and the SP all-gathers XLA hoists around
+    # the norm) at bf16.
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * inv * gamma
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    if angles.ndim == 2:                                # (S, Dh/2) -> (1, S, Dh/2)
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]                # (B, S, 1, Dh/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def mlp_apply(x: jnp.ndarray, p: Dict[str, jnp.ndarray], act: str, ctx) -> jnp.ndarray:
+    """SwiGLU / GELU / squared-ReLU MLP with quant hooks."""
+    if act == "swiglu":
+        up = x @ ctx.qw("w_up", p["w_up"])
+        gate = jax.nn.silu(x @ ctx.qw("w_gate", p["w_gate"]))
+        h = ctx.tap("mlp_h", up * gate)
+    elif act == "gelu":
+        h = ctx.tap("mlp_h", jax.nn.gelu(x @ ctx.qw("w_up", p["w_up"])))
+    elif act == "relu2":
+        h = jax.nn.relu(x @ ctx.qw("w_up", p["w_up"]))
+        h = ctx.tap("mlp_h", h * h)
+    else:
+        raise ValueError(act)
+    return h @ ctx.qw("w_down", p["w_down"])
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype, abstract: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": init_dense(k1, d_model, d_ff, dtype, abstract),
+         "w_down": init_dense(k2, d_ff, d_model, dtype, abstract)}
+    if act == "swiglu":
+        p["w_gate"] = init_dense(k3, d_model, d_ff, dtype, abstract)
+    return p

@@ -1,0 +1,253 @@
+"""Mamba2 (SSD — state-space duality) blocks in pure JAX.
+
+Chunked SSD algorithm (arXiv:2405.21060, Listing 1) adapted to TPU:
+intra-chunk quadratic attention-like term (MXU-friendly batched matmuls
+over (Q×Q) blocks) + inter-chunk linear state recurrence via
+``lax.scan`` over chunks. All decay arithmetic in fp32; decays are
+exp(negative) so everything is ≤ 1 and numerically tame.
+
+Recurrence (per head; state (N, P)):
+    h_t = exp(dt_t·A) h_{t−1} + dt_t·(B_t ⊗ x_t)
+    y_t = C_t·h_t + D·x_t
+
+Decode is the recurrence applied once — O(1) per token, which is why the
+ssm/hybrid archs run the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models.layers import grad_barrier, init_dense, rmsnorm
+from repro.models.partition import constrain
+
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype, abstract: bool) -> Dict:
+    """The input projection is stored as SEPARATE segment matrices
+    (z | x | B | C | dt) rather than one fused (D, 2di+2gn+h) matrix:
+    fused storage would force either replication or shard-misaligned
+    splits under TP (segment boundaries ≠ shard boundaries). XLA fuses
+    the five matmuls back together where profitable."""
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    n, g, w = cfg.ssm_state, cfg.ssm_groups, cfg.conv_width
+    cc = _conv_channels(cfg)
+    ks = jax.random.split(key, 8)
+
+    def vec(k, shape, val=None):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, jnp.float32)
+        if val is not None:
+            return jnp.full(shape, val, jnp.float32)
+        return jax.random.normal(k, shape, jnp.float32) * 0.02
+
+    return {
+        "wz": init_dense(ks[0], d, di, dtype, abstract),
+        "wx": init_dense(ks[1], d, di, dtype, abstract),
+        "wB": init_dense(ks[2], d, g * n, dtype, abstract),
+        "wC": init_dense(ks[3], d, g * n, dtype, abstract),
+        "wdt": init_dense(ks[4], d, h, dtype, abstract),
+        "conv_w": vec(ks[5], (w, cc)),
+        "conv_b": vec(ks[5], (cc,), 0.0),
+        "A_log": vec(ks[6], (h,), 0.0),          # A = −exp(A_log) = −1 init
+        "D": vec(ks[6], (h,), 1.0),
+        "dt_bias": vec(ks[6], (h,), 0.0),
+        "norm_w": vec(ks[7], (di,), 1.0),
+        "out_proj": init_dense(ks[7], di, d, dtype, abstract),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B,S,C); w: (W,C) -> (B,S,C).
+
+    ONE depthwise convolution op (not W shifted multiply-adds): the
+    shift-loop formulation costs W full-width passes over x in the HLO
+    (and W more in the rematerialized backward) — switching to
+    conv_general_dilated cut the zamba2 train memory term measurably.
+    """
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),          # (W, 1, C) depthwise
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_in(x: jnp.ndarray, prm: Dict, ctx):
+    """x -> (z, xs, B, C, dt) via the split segment projections."""
+    z = grad_barrier(x @ ctx.qw("wz", prm["wz"]))
+    xs = grad_barrier(x @ ctx.qw("wx", prm["wx"]))
+    Bm = grad_barrier(x @ ctx.qw("wB", prm["wB"]))
+    Cm = grad_barrier(x @ ctx.qw("wC", prm["wC"]))
+    dt = grad_barrier(x @ ctx.qw("wdt", prm["wdt"]))
+    return z, xs, Bm, Cm, dt
+
+
+def _conv_slices(cfg: ModelConfig):
+    di, gn = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+    return (0, di), (di, di + gn), (di + gn, di + 2 * gn)
+
+
+def ssd_chunked(xs: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                h_init: Optional[jnp.ndarray] = None,
+                compute_dtype=jnp.float32
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    xs: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,N) (single group broadcast over heads).
+    Returns (y: (B,S,H,P), final_state: (B,H,N,P)).
+    """
+    b, s, h, p = xs.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    xs_c = xs.reshape(b, nc, q, h, p)
+    dt_c = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    B_c = Bm.reshape(b, nc, q, n).astype(jnp.float32)
+    C_c = Cm.reshape(b, nc, q, n).astype(jnp.float32)
+
+    dA = dt_c * A                                      # (B,c,Q,H), ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                       # inclusive
+
+    # --- intra-chunk (quadratic, block-diagonal) ---
+    # decay/softmax-style arithmetic stays fp32 (exp of cumsums); the
+    # large (B,c,Q,Q,H) mask tensor and its MXU contraction run in
+    # ``compute_dtype`` (values are products of decays ≤ 1 with dt — bf16
+    # is the flash-attention-style trade: halves the dominant HBM bytes).
+    cd = compute_dtype
+    li = cum[:, :, :, None, :]                         # (B,c,Q,1,H) → i index
+    lj = cum[:, :, None, :, :]                         # (B,c,1,Q,H) → j index
+    ii = jnp.arange(q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(li - lj), 0.0)       # (B,c,Q,Q,H)
+    CB = jnp.einsum("bcin,bcjn->bcij", C_c.astype(cd), B_c.astype(cd),
+                    preferred_element_type=jnp.float32)
+    M = (CB[..., None] * L * dt_c[:, :, None, :, :]).astype(cd)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, xs_c.astype(cd),
+                        preferred_element_type=jnp.float32)
+
+    # --- chunk states ---
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,c,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                        B_c.astype(cd), (decay_end * dt_c).astype(cd),
+                        xs_c.astype(cd),
+                        preferred_element_type=jnp.float32)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B,c,H)
+    h0 = (jnp.zeros((b, h, n, p), jnp.float32) if h_init is None
+          else h_init.astype(jnp.float32))
+
+    def step(hprev, inp):
+        st, dec = inp                                  # (B,H,N,P), (B,H)
+        hnew = dec[:, :, None, None] * hprev + st
+        return hnew, hprev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)         # (B,c,H,N,P) state entering chunk
+
+    y_off = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                       C_c.astype(cd), h_prevs.astype(cd),
+                       jnp.exp(cum).astype(cd),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :s]
+    return y.astype(xs.dtype), h_final
+
+
+def mamba2_apply(x: jnp.ndarray, prm: Dict, cfg: ModelConfig, ctx) -> jnp.ndarray:
+    """Full-sequence Mamba2 mixer. x: (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    di, h, p, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+
+    z, xs, Bm, Cm, dt = _project_in(x, prm, ctx)
+    # depthwise causal conv per segment — identical math to the fused
+    # conv over concat([x,B,C]) but each segment keeps its TP sharding.
+    (x0, x1), (b0, b1), (c0, c1) = _conv_slices(cfg)
+    cw, cb = prm["conv_w"], prm["conv_b"]
+    xs = jax.nn.silu(_causal_conv(xs, cw[:, x0:x1], cb[x0:x1]))
+    Bm = jax.nn.silu(_causal_conv(Bm, cw[:, b0:b1], cb[b0:b1]))
+    Cm = jax.nn.silu(_causal_conv(Cm, cw[:, c0:c1], cb[c0:c1]))
+    xs = ctx.tap("conv_out", xs)
+    xs = xs.reshape(b, s, h, p)
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + prm["dt_bias"])
+    A = -jnp.exp(prm["A_log"])
+    xs = constrain(xs, "batch", "seq_noshard", "heads", None)
+    cd = jnp.bfloat16 if cfg.ssm_compute_dtype == "bfloat16" else jnp.float32
+    y, _ = ssd_chunked(xs, dtp, A, Bm, Cm, cfg.ssm_chunk, compute_dtype=cd)
+    y = y + prm["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = ctx.tap("ssd_out", y)
+    y = rmsnorm(y * jax.nn.silu(z), prm["norm_w"], cfg.norm_eps).astype(x.dtype)
+    return y @ ctx.qw("out_proj", prm["out_proj"])
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray           # (B, H, N, P) SSM state
+    conv: jnp.ndarray        # (B, W-1, C) conv tail
+
+    @classmethod
+    def zeros(cls, b: int, cfg: ModelConfig, dtype=jnp.float32) -> "MambaState":
+        return cls(
+            jnp.zeros((b, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+            jnp.zeros((b, cfg.conv_width - 1, _conv_channels(cfg)), dtype),
+        )
+
+    @classmethod
+    def abstract(cls, b: int, cfg: ModelConfig, dtype=jnp.float32) -> "MambaState":
+        return cls(
+            jax.ShapeDtypeStruct((b, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((b, cfg.conv_width - 1, _conv_channels(cfg)), dtype),
+        )
+
+
+def mamba2_decode(x: jnp.ndarray, prm: Dict, cfg: ModelConfig, ctx,
+                  state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
+    """One-token step. x: (B,1,D) -> (B,1,D); O(1) state update."""
+    b = x.shape[0]
+    di, h, p, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+
+    z, xs_new, B_new, C_new, dt = _project_in(x[:, 0], prm, ctx)
+    xbc_new = jnp.concatenate([xs_new, B_new, C_new], axis=-1)
+
+    window = jnp.concatenate([state.conv, xbc_new[:, None, :].astype(state.conv.dtype)], 1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), prm["conv_w"])
+    xbc = jax.nn.silu(conv_out + prm["conv_b"]).astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    xs = xbc[..., :di].reshape(b, h, p)
+    Bm = xbc[..., di:di + n].astype(jnp.float32)
+    Cm = xbc[..., di + n:di + 2 * n].astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + prm["dt_bias"])     # (B,H)
+    A = -jnp.exp(prm["A_log"])
+    dA = jnp.exp(dtp * A)                                  # (B,H)
+
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dtp, Bm, xs.astype(jnp.float32))
+    hnew = dA[:, :, None, None] * state.h + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, hnew)
+    y = y + prm["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), prm["norm_w"], cfg.norm_eps).astype(x.dtype)
+    out = (y @ ctx.qw("out_proj", prm["out_proj"]))[:, None, :]
+    return out, MambaState(hnew, new_conv)

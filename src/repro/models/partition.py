@@ -1,0 +1,76 @@
+"""Logical-axis sharding constraints (MaxText-style rules).
+
+Model code annotates intermediates with *logical* axis names; the active
+``Rules`` maps them to mesh axes (or None = replicated). Outside a rules
+context (CPU unit tests) constraints are no-ops, so the same model code
+runs everywhere.
+
+The rules table is the main perf-tuning surface: e.g. flipping
+``seq: None`` to ``seq: "model"`` turns on Megatron sequence parallelism
+without touching model code.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+class Rules:
+    def __init__(self, mesh: Mesh, table: Dict[str, MeshAxes]):
+        self.mesh = mesh
+        self.table = dict(table)
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        used = set()
+        out = []
+        for ax in logical_axes:
+            if ax is None:
+                out.append(None)
+                continue
+            mesh_ax = self.table.get(ax)
+            if mesh_ax is None:
+                out.append(None)
+                continue
+            parts = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+            # one mesh axis may shard only one dim of a given tensor
+            if any(p in used for p in parts):
+                out.append(None)
+            else:
+                used.update(parts)
+                out.append(mesh_ax)
+        return P(*out)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes))
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint if rules are active; no-op otherwise."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{len(logical_axes)} axes for rank-{x.ndim} tensor")
+    return jax.lax.with_sharding_constraint(x, rules.sharding(logical_axes))

@@ -1,0 +1,370 @@
+"""Decoder-only LM assembly for every assigned architecture family.
+
+Families:
+  dense / audio / vlm : [attn + MLP] × L
+  moe                 : [attn + MoE-FFN] × L
+  ssm                 : [Mamba2 mixer] × L
+  hybrid (Zamba2)     : groups of [shared attn/MLP block + period × Mamba2]
+
+Two stacking modes:
+  * ``scan_layers=True``  — per-layer params stacked on a leading L dim,
+    layers executed by ``lax.scan`` (compact HLO: SPMD-partitions a 512-
+    device mesh in seconds; required for the dry-run).
+  * ``scan_layers=False`` — python loop, one param subtree per layer
+    (unique block paths → used by FIT traces / QAT with per-layer bits /
+    activation taps on the small testbeds).
+
+Frontend stubs (assignment): [audio] consumes multi-codebook token grids
+(EnCodec tokens; the EnCodec codec itself is out of scope), [vlm]
+consumes precomputed CLIP patch embeddings via ``image_embed``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models.attention import (
+    KVCache, attention_apply, attention_decode, init_attention)
+from repro.models.context import Context, QATContext
+from repro.models.layers import init_dense, init_norm, mlp_apply, init_mlp, rmsnorm
+from repro.models.mamba2 import (
+    MambaState, init_mamba2, mamba2_apply, mamba2_decode)
+from repro.models.moe import init_moe, moe_apply
+from repro.models.partition import constrain
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def vocab_padded(cfg: ModelConfig, multiple: int = 16) -> int:
+    v = cfg.vocab_size
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def _init_block(key, cfg: ModelConfig, dtype, abstract: bool) -> Dict:
+    """One transformer block of the arch's family (not ssm/hybrid)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": init_norm(k1, cfg.d_model, dtype, abstract)}
+    p["attn"] = init_attention(k1, cfg, dtype, abstract)
+    p["ln2"] = init_norm(k2, cfg.d_model, dtype, abstract)
+    if cfg.family == "moe":
+        p["moe"] = init_moe(k3, cfg, dtype, abstract)
+    else:
+        p["mlp"] = init_mlp(k4, cfg.d_model, cfg.d_ff, cfg.act, dtype, abstract)
+    return p
+
+
+def _init_mamba_block(key, cfg: ModelConfig, dtype, abstract: bool) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {"ln": init_norm(k1, cfg.d_model, dtype, abstract),
+            "mixer": init_mamba2(k2, cfg, dtype, abstract)}
+
+
+def _stack(init_fn, key, n: int, abstract: bool):
+    if abstract:
+        one = init_fn(key)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one)
+    keys = jax.random.split(key, n)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_params(cfg: ModelConfig, key=None, abstract: bool = False) -> Dict:
+    if key is None:
+        key = jax.random.key(0)
+    dtype = cfg.param_dtype
+    v = vocab_padded(cfg)
+    kE, kL, kH, kS = jax.random.split(key, 4)
+
+    def emb(k, shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return (jax.random.normal(k, shape, jnp.float32) * 0.02).astype(dtype)
+
+    params: Dict[str, Any] = {"final_norm": init_norm(kH, cfg.d_model, dtype, abstract)}
+    if cfg.family == "audio":
+        params["embed"] = emb(kE, (cfg.num_codebooks, v, cfg.d_model))
+        params["head"] = emb(kH, (cfg.d_model, cfg.num_codebooks * v))
+    else:
+        params["embed"] = emb(kE, (v, cfg.d_model))
+        params["head"] = emb(kH, (cfg.d_model, v))
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        fn = lambda k: _init_block(k, cfg, dtype, abstract)
+        if cfg.scan_layers:
+            params["layers"] = _stack(fn, kL, cfg.num_layers, abstract)
+        else:
+            params["layers"] = {str(i): fn(k)
+                                for i, k in enumerate(jax.random.split(kL, cfg.num_layers))}
+    elif cfg.family == "ssm":
+        fn = lambda k: _init_mamba_block(k, cfg, dtype, abstract)
+        if cfg.scan_layers:
+            params["layers"] = _stack(fn, kL, cfg.num_layers, abstract)
+        else:
+            params["layers"] = {str(i): fn(k)
+                                for i, k in enumerate(jax.random.split(kL, cfg.num_layers))}
+    elif cfg.family == "hybrid":
+        period = cfg.attn_period
+        n_groups, rest = divmod(cfg.num_layers, period)
+        kG, kR, kA = jax.random.split(kL, 3)
+        params["shared"] = _init_block(kA, cfg, dtype, abstract)   # ONE shared block
+        mb = lambda k: _init_mamba_block(k, cfg, dtype, abstract)
+        if cfg.scan_layers:
+            group_fn = lambda k: _stack(mb, k, period, abstract)
+            params["groups"] = _stack(group_fn, kG, n_groups, abstract)
+            if rest:
+                params["rest"] = _stack(mb, kR, rest, abstract)
+        else:
+            params["groups"] = {
+                str(g): {str(i): mb(k2)
+                         for i, k2 in enumerate(jax.random.split(k1, period))}
+                for g, k1 in enumerate(jax.random.split(kG, n_groups))}
+            if rest:
+                params["rest"] = {str(i): mb(k)
+                                  for i, k in enumerate(jax.random.split(kR, rest))}
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# --------------------------------------------------------------------------
+# blocks (shared between forward and decode)
+# --------------------------------------------------------------------------
+
+def _attn_mlp_block(x, bp, cfg: ModelConfig, ctx, positions=None):
+    aux = jnp.zeros((), jnp.float32)
+    with ctx.scope("attn"):
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        x = x + attention_apply(h, bp["attn"], cfg, ctx, positions)
+    x = constrain(x, "batch", "seq", None)
+    if cfg.family == "moe":
+        with ctx.scope("moe"):
+            h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+            y, aux = moe_apply(h, bp["moe"], cfg, ctx)
+            x = x + y
+    else:
+        with ctx.scope("mlp"):
+            h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(h, bp["mlp"], cfg.act, ctx)
+    x = constrain(x, "batch", "seq", None)
+    return x, aux
+
+
+def _mamba_block(x, bp, cfg: ModelConfig, ctx):
+    with ctx.scope("mixer"):
+        h = rmsnorm(x, bp["ln"], cfg.norm_eps)
+        x = x + mamba2_apply(h, bp["mixer"], cfg, ctx)
+    return constrain(x, "batch", "seq", None)
+
+
+def _attn_mlp_block_decode(x, bp, cfg, ctx, cache: KVCache, pos):
+    with ctx.scope("attn"):
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        a, cache = attention_decode(h, bp["attn"], cfg, ctx, cache, pos)
+        x = x + a
+    if cfg.family == "moe":
+        with ctx.scope("moe"):
+            h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+            y, _ = moe_apply(h, bp["moe"], cfg, ctx)
+            x = x + y
+    else:
+        with ctx.scope("mlp"):
+            h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(h, bp["mlp"], cfg.act, ctx)
+    return x, cache
+
+
+def _mamba_block_decode(x, bp, cfg, ctx, state: MambaState):
+    with ctx.scope("mixer"):
+        h = rmsnorm(x, bp["ln"], cfg.norm_eps)
+        y, state = mamba2_decode(h, bp["mixer"], cfg, ctx, state)
+        x = x + y
+    return x, state
+
+
+# --------------------------------------------------------------------------
+# QAT levels plumbing (per-layer bit-widths under scan)
+# --------------------------------------------------------------------------
+
+class QATLevels(NamedTuple):
+    """levels = 2^bits − 1 per block path.
+
+    ``layer_weights``/``layer_acts`` hold (L,)-shaped arrays keyed by the
+    within-layer path ("attn/wq"); ``top_weights``/``top_acts`` hold
+    scalars for embed/head. Under scan the L-dim is consumed as scan xs.
+    """
+    layer_weights: Dict[str, jnp.ndarray]
+    layer_acts: Dict[str, jnp.ndarray]
+    top_weights: Dict[str, jnp.ndarray]
+    top_acts: Dict[str, jnp.ndarray]
+
+
+def _ctx_for_layer(qat: Optional[QATLevels], sliced_w, sliced_a) -> Context:
+    if qat is None:
+        return Context()
+    return QATContext(sliced_w, sliced_a)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def embed_inputs(params, inputs: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                 ctx) -> jnp.ndarray:
+    """Token/frontend embedding -> (B, S, D)."""
+    if cfg.family == "audio":
+        # EnCodec-token grid (B, S, CB): sum codebook embeddings (stub frontend)
+        t = inputs["tokens"]
+        x = jnp.zeros(t.shape[:2] + (cfg.d_model,), cfg.param_dtype)
+        for cb in range(cfg.num_codebooks):
+            x = x + jnp.take(params["embed"][cb], t[..., cb], axis=0)
+    elif cfg.family == "vlm":
+        xt = jnp.take(params["embed"], inputs["tokens"], axis=0)
+        img = inputs["image_embed"].astype(xt.dtype)   # precomputed CLIP patches
+        img = ctx.tap("image_embed", img)
+        x = jnp.concatenate([img, xt], axis=1)
+    else:
+        x = jnp.take(params["embed"], inputs["tokens"], axis=0)
+    return constrain(ctx.tap("embed_out", x), "batch", "seq", None)
+
+
+def logits_from_hidden(params, x, cfg: ModelConfig, ctx) -> jnp.ndarray:
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ ctx.qw("head", params["head"])
+    if cfg.family == "audio":
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.num_codebooks, vocab_padded(cfg))
+    # logits live VOCAB-sharded: the softmax/CE reductions over V become
+    # tiny (B,S) all-reduces instead of a head-table all-gather.
+    return constrain(logits, "batch", None, *(None,) * (logits.ndim - 3), "vocab")
+
+
+def forward(params, inputs: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            ctx: Optional[Context] = None,
+            qat: Optional[QATLevels] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits, moe_aux_loss). ``ctx`` forces the unrolled path."""
+    explicit_ctx = ctx is not None
+    top_ctx = ctx or _ctx_for_layer(
+        qat, qat.top_weights if qat else {}, qat.top_acts if qat else {})
+
+    x = embed_inputs(params, inputs, cfg, top_ctx)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if cfg.scan_layers and not explicit_ctx:
+            lw = qat.layer_weights if qat else {}
+            la = qat.layer_acts if qat else {}
+
+            def body(carry, xs):
+                h, a = carry
+                bp, w_lv, a_lv = xs
+                lctx = _ctx_for_layer(qat, w_lv, a_lv)
+                h, da = _attn_mlp_block(h, bp, cfg, lctx)
+                return (h, a + da), None
+
+            if cfg.remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), (params["layers"], lw, la))
+        else:
+            blk = _attn_mlp_block
+            if cfg.remat and not explicit_ctx:
+                blk = jax.checkpoint(blk, prevent_cse=False,
+                                     static_argnums=(2, 3))
+            for i in range(cfg.num_layers):
+                with top_ctx.scope(f"layers/{i}"):
+                    x, da = blk(x, params["layers"][str(i)], cfg, top_ctx)
+                    aux = aux + da
+    elif cfg.family == "ssm":
+        if cfg.scan_layers and not explicit_ctx:
+            lw = qat.layer_weights if qat else {}
+            la = qat.layer_acts if qat else {}
+
+            def body(carry, xs):
+                bp, w_lv, a_lv = xs
+                lctx = _ctx_for_layer(qat, w_lv, a_lv)
+                return _mamba_block(carry, bp, cfg, lctx), None
+
+            if cfg.remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            x, _ = jax.lax.scan(body, x, (params["layers"], lw, la))
+        else:
+            blk = _mamba_block
+            if cfg.remat and not explicit_ctx:
+                blk = jax.checkpoint(blk, prevent_cse=False,
+                                     static_argnums=(2, 3))
+            for i in range(cfg.num_layers):
+                with top_ctx.scope(f"layers/{i}"):
+                    x = blk(x, params["layers"][str(i)], cfg, top_ctx)
+    elif cfg.family == "hybrid":
+        period = cfg.attn_period
+        n_groups, rest = divmod(cfg.num_layers, period)
+        shared = params["shared"]
+        if cfg.scan_layers and not explicit_ctx:
+            def group_body(carry, gp):
+                h, a = carry
+                h, da = _attn_mlp_block(h, shared, cfg, Context())  # shared block
+
+                def inner(hh, bp):
+                    return _mamba_block(hh, bp, cfg, Context()), None
+
+                h, _ = jax.lax.scan(inner, h, gp)
+                return (h, a + da), None
+
+            if cfg.remat:
+                group_body = jax.checkpoint(group_body, prevent_cse=False)
+            (x, aux), _ = jax.lax.scan(group_body, (x, aux), params["groups"])
+            if rest:
+                def inner(hh, bp):
+                    return _mamba_block(hh, bp, cfg, Context()), None
+                x, _ = jax.lax.scan(inner, x, params["rest"])
+        else:
+            ablk, mblk = _attn_mlp_block, _mamba_block
+            if cfg.remat and not explicit_ctx:
+                ablk = jax.checkpoint(ablk, prevent_cse=False, static_argnums=(2, 3))
+                mblk = jax.checkpoint(mblk, prevent_cse=False, static_argnums=(2, 3))
+            for g in range(n_groups):
+                with top_ctx.scope(f"shared/{g}"):
+                    x, da = ablk(x, shared, cfg, top_ctx)
+                    aux = aux + da
+                for i in range(period):
+                    with top_ctx.scope(f"groups/{g}/{i}"):
+                        x = mblk(x, params["groups"][str(g)][str(i)], cfg, top_ctx)
+            for i in range(rest):
+                with top_ctx.scope(f"rest/{i}"):
+                    x = mblk(x, params["rest"][str(i)], cfg, top_ctx)
+    else:
+        raise ValueError(cfg.family)
+
+    return logits_from_hidden(params, x, cfg, top_ctx), aux
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+
+def loss_fn(params, inputs: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            ctx: Optional[Context] = None, qat: Optional[QATLevels] = None,
+            aux_weight: float = 0.01) -> jnp.ndarray:
+    """Mean next-token cross-entropy (+ MoE aux). Padded vocab is masked."""
+    logits, aux = forward(params, inputs, cfg, ctx=ctx, qat=qat)
+    labels = inputs["labels"]
+    v = vocab_padded(cfg)
+    if v != cfg.vocab_size:
+        iota = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+        mask = jnp.where(iota < cfg.vocab_size, 0.0, -1e9).astype(logits.dtype)
+        logits = logits + mask
+    # fused CE: f32 only in the reductions (max / logsumexp), never a
+    # full f32 logits tensor — XLA fuses the converts into the reduces.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    sumexp = jnp.sum(jnp.exp(shifted.astype(jnp.float32)), axis=-1)
+    gold = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.log(sumexp) - gold.astype(jnp.float32)
+    return jnp.mean(nll) + aux_weight * aux

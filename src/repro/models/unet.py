@@ -1,0 +1,105 @@
+"""Small U-Net (paper Sec. 4.3 semantic-segmentation study, scaled down).
+
+Encoder (2 down blocks) → bottleneck → decoder (2 up blocks with skip
+connections) → per-pixel classifier. Same ctx hooks as cnn.py so the
+FIT pipeline is reused verbatim.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.context import Context
+from repro.models.cnn import _conv2d, _maxpool, _TapCtx
+
+
+def _conv_init(k, cin, cout):
+    return jax.random.normal(k, (3, 3, cin, cout), jnp.float32) * np.sqrt(2.0 / (9 * cin))
+
+
+def init_unet(key, num_classes: int = 4, channels: int = 3, base: int = 8) -> Dict:
+    ks = jax.random.split(key, 10)
+    return {
+        "enc1": {"w": _conv_init(ks[0], channels, base)},
+        "enc2": {"w": _conv_init(ks[1], base, 2 * base)},
+        "mid": {"w": _conv_init(ks[2], 2 * base, 4 * base)},
+        "up2": {"w": _conv_init(ks[3], 4 * base, 2 * base)},
+        "dec2": {"w": _conv_init(ks[4], 4 * base, 2 * base)},
+        "up1": {"w": _conv_init(ks[5], 2 * base, base)},
+        "dec1": {"w": _conv_init(ks[6], 2 * base, base)},
+        "head": {"w": _conv_init(ks[7], base, num_classes)},
+    }
+
+
+def _upsample(x):
+    b, h, w, c = x.shape
+    return jax.image.resize(x, (b, 2 * h, 2 * w, c), "nearest")
+
+
+def unet_forward(params: Dict, x: jnp.ndarray,
+                 ctx: Optional[Context] = None) -> jnp.ndarray:
+    ctx = ctx or Context()
+
+    def conv(name, h):
+        with ctx.scope(name):
+            h = _conv2d(h, ctx.qw("w", params[name]["w"]))
+        h = jax.nn.relu(h)
+        return ctx.tap(f"{name}_act", h)
+
+    e1 = conv("enc1", x)                       # (B, H, W, b)
+    e2 = conv("enc2", _maxpool(e1))            # (B, H/2, W/2, 2b)
+    m = conv("mid", _maxpool(e2))              # (B, H/4, W/4, 4b)
+    d2 = conv("up2", _upsample(m))             # (B, H/2, W/2, 2b)
+    d2 = conv("dec2", jnp.concatenate([d2, e2], -1))
+    d1 = conv("up1", _upsample(d2))
+    d1 = conv("dec1", jnp.concatenate([d1, e1], -1))
+    with ctx.scope("head"):
+        return _conv2d(d1, ctx.qw("w", params["head"]["w"]))
+
+
+def unet_loss(params: Dict, batch: Tuple[jnp.ndarray, jnp.ndarray],
+              ctx: Optional[Context] = None) -> jnp.ndarray:
+    x, y = batch
+    logits = unet_forward(params, x, ctx)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lp, y[..., None], axis=-1))
+
+
+def unet_miou(params: Dict, x: jnp.ndarray, y: jnp.ndarray,
+              num_classes: int = 4) -> float:
+    pred = jnp.argmax(unet_forward(params, x), -1)
+    ious = []
+    for c in range(num_classes):
+        inter = jnp.sum((pred == c) & (y == c))
+        union = jnp.sum((pred == c) | (y == c))
+        ious.append(jnp.where(union > 0, inter / union, 1.0))
+    return float(jnp.mean(jnp.stack(ious)))
+
+
+def unet_tap_loss(params, taps, batch):
+    return unet_loss(params, batch, ctx=_TapCtx(taps))
+
+
+def unet_tap_shapes(params: Dict, batch) -> Dict:
+    x, _ = batch
+    b, hw = x.shape[0], x.shape[1]
+    base = params["enc1"]["w"].shape[-1]
+    return {
+        "enc1_act": jax.ShapeDtypeStruct((b, hw, hw, base), jnp.float32),
+        "enc2_act": jax.ShapeDtypeStruct((b, hw // 2, hw // 2, 2 * base), jnp.float32),
+        "mid_act": jax.ShapeDtypeStruct((b, hw // 4, hw // 4, 4 * base), jnp.float32),
+        "up2_act": jax.ShapeDtypeStruct((b, hw // 2, hw // 2, 2 * base), jnp.float32),
+        "dec2_act": jax.ShapeDtypeStruct((b, hw // 2, hw // 2, 2 * base), jnp.float32),
+        "up1_act": jax.ShapeDtypeStruct((b, hw, hw, base), jnp.float32),
+        "dec1_act": jax.ShapeDtypeStruct((b, hw, hw, base), jnp.float32),
+    }
+
+
+def unet_act_fn(params: Dict, batch) -> Dict:
+    from repro.models.context import CollectContext
+    ctx = CollectContext()
+    unet_loss(params, batch, ctx=ctx)
+    return ctx.acts

@@ -1,0 +1,102 @@
+"""AdamW + LR schedules + global-norm clipping (pure pytree functions).
+
+The optimizer state is a pytree matching params; under pjit the state
+shardings are chosen by launch/sharding.py (optionally ZeRO-1: moments
+sharded over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"          # cosine | linear | constant
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((s - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    else:
+        decay = jnp.ones(())
+    return cfg.lr * warm * decay
+
+
+def init_adam(params: Any, abstract: bool = False) -> AdamState:
+    def zeros(p):
+        if abstract:
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    step = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+            else jnp.zeros((), jnp.int32))
+    return AdamState(step=step, m=jax.tree.map(zeros, params),
+                     v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: AdamState
+                 ) -> Tuple[Any, AdamState, dict]:
+    """One AdamW step. Params keep their dtype (bf16 master-free recipe:
+    moments fp32, update computed fp32, cast back)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g.astype(jnp.float32),
+        state.m, grads)
+    new_v = jax.tree.map(
+        lambda v, g: cfg.b2 * v + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+        state.v, grads)
+
+    def upd(p, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, AdamState(step, new_m, new_v), {"lr": lr, "grad_norm": gnorm}

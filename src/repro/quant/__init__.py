@@ -1,0 +1,12 @@
+from repro.quant.quantizer import (
+    QuantSpec,
+    quant_range,
+    quant_params,
+    quantize,
+    dequantize,
+    fake_quant_ref,
+)
+from repro.quant.fake_quant import fake_quant, fake_quant_ste
+from repro.quant.noise import noise_power, quant_step, expected_noise_tree
+from repro.quant.policy import QuantPolicy, BitConfig, random_bit_config
+from repro.quant.calibration import MinMaxObserver, EmaObserver

@@ -1,0 +1,50 @@
+"""Calibration observers for activation quantization ranges.
+
+Weights use direct min–max (they are static at a given step). Activations
+are calibrated over batches: ``MinMaxObserver`` tracks the running
+min/max, ``EmaObserver`` tracks an exponential moving average (the QAT
+scheme in the paper's Appendix A).
+
+Observers are functional: ``update`` returns a new state pytree so they
+compose with jit/scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class RangeState(NamedTuple):
+    lo: jnp.ndarray
+    hi: jnp.ndarray
+    initialized: jnp.ndarray  # bool scalar
+
+
+def init_range_state() -> RangeState:
+    return RangeState(jnp.zeros(()), jnp.zeros(()), jnp.zeros((), jnp.bool_))
+
+
+@dataclasses.dataclass(frozen=True)
+class MinMaxObserver:
+    def update(self, state: RangeState, x: jnp.ndarray) -> RangeState:
+        lo = jnp.minimum(jnp.min(x).astype(jnp.float32), 0.0)
+        hi = jnp.maximum(jnp.max(x).astype(jnp.float32), 0.0)
+        new_lo = jnp.where(state.initialized, jnp.minimum(state.lo, lo), lo)
+        new_hi = jnp.where(state.initialized, jnp.maximum(state.hi, hi), hi)
+        return RangeState(new_lo, new_hi, jnp.ones((), jnp.bool_))
+
+
+@dataclasses.dataclass(frozen=True)
+class EmaObserver:
+    decay: float = 0.99
+
+    def update(self, state: RangeState, x: jnp.ndarray) -> RangeState:
+        lo = jnp.minimum(jnp.min(x).astype(jnp.float32), 0.0)
+        hi = jnp.maximum(jnp.max(x).astype(jnp.float32), 0.0)
+        new_lo = jnp.where(state.initialized,
+                           self.decay * state.lo + (1 - self.decay) * lo, lo)
+        new_hi = jnp.where(state.initialized,
+                           self.decay * state.hi + (1 - self.decay) * hi, hi)
+        return RangeState(new_lo, new_hi, jnp.ones((), jnp.bool_))

@@ -1,0 +1,55 @@
+"""Fake quantization with straight-through estimator (STE).
+
+``fake_quant_ste`` is the differentiable primitive used inside QAT
+training graphs: forward = quantize–dequantize, backward = identity
+(gradient passes through untouched, Hubara et al. 2016). The elementwise
+forward is dispatched to the Pallas kernel on TPU and the jnp reference
+elsewhere (see repro.kernels.ops).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantizer import QuantSpec, quant_params
+from repro.kernels import ops as kops
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant_ste(x, scale, zero_point, bits: int):
+    return kops.fake_quant(x, scale, zero_point, bits)
+
+
+def _fq_fwd(x, scale, zero_point, bits):
+    return kops.fake_quant(x, scale, zero_point, bits), None
+
+
+def _fq_bwd(bits, _, g):
+    # Straight-through: identity to x, no gradient to scale/zp (min-max
+    # ranges are recomputed / EMA-updated outside the autodiff graph).
+    return g, None, None
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant(x: jnp.ndarray, spec: QuantSpec,
+               scale: Optional[jnp.ndarray] = None,
+               zero_point: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Fake-quantize with STE; ranges from data unless given explicitly.
+
+    bits >= 16 is a structural no-op (keeps HLO free of dead quant ops).
+    """
+    if spec.bits >= 16:
+        return x
+    if scale is None or zero_point is None:
+        scale, zero_point = quant_params(x, spec)
+    if spec.channel_axis is not None:
+        shape = [1] * x.ndim
+        shape[spec.channel_axis % x.ndim] = -1
+        scale = scale.reshape(shape)
+        zero_point = zero_point.reshape(shape)
+    return fake_quant_ste(x, scale, zero_point, spec.bits)

@@ -1,0 +1,83 @@
+"""Layer-wise quantization policies (which block gets which bit width).
+
+A ``BitConfig`` maps block path -> bits, separately for weights and
+activation sites. ``QuantPolicy`` adds structural rules (pin routers /
+norms / embeddings to high precision, default bits, allowed bit set).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Block-name substrings never quantized below 8 bits by default: routing
+# logits are brittle (top-k flips), norm scales are tiny vectors with
+# outsized effect, and the final logits layer controls the loss scale.
+DEFAULT_PINNED = ("router", "gate_w", "norm", "ln", "scale", "embed_frontend")
+
+
+@dataclasses.dataclass
+class BitConfig:
+    """One concrete MPQ configuration."""
+
+    weight_bits: Dict[str, int]
+    act_bits: Dict[str, int]
+
+    def flat(self) -> Dict[str, int]:
+        out = {f"W:{k}": v for k, v in self.weight_bits.items()}
+        out.update({f"A:{k}": v for k, v in self.act_bits.items()})
+        return out
+
+    def model_bits(self, param_sizes: Dict[str, int]) -> float:
+        """Total weight storage in bits under this config."""
+        return float(
+            sum(param_sizes[k] * self.weight_bits.get(k, 16) for k in param_sizes)
+        )
+
+
+@dataclasses.dataclass
+class QuantPolicy:
+    """Structural rules for generating / sanitizing bit configurations."""
+
+    allowed_bits: Sequence[int] = (8, 6, 4, 3)
+    default_weight_bits: int = 8
+    default_act_bits: int = 8
+    pinned_substrings: Sequence[str] = DEFAULT_PINNED
+    pinned_bits: int = 8
+    quantize_activations: bool = True
+
+    def is_pinned(self, name: str) -> bool:
+        return any(s in name.lower() for s in self.pinned_substrings)
+
+    def sanitize(self, cfg: BitConfig) -> BitConfig:
+        wb = dict(cfg.weight_bits)
+        ab = dict(cfg.act_bits)
+        for k in list(wb):
+            if self.is_pinned(k):
+                wb[k] = max(wb[k], self.pinned_bits)
+        for k in list(ab):
+            if self.is_pinned(k):
+                ab[k] = max(ab[k], self.pinned_bits)
+        if not self.quantize_activations:
+            ab = {k: 16 for k in ab}
+        return BitConfig(wb, ab)
+
+    def uniform(self, weight_blocks: Sequence[str], act_blocks: Sequence[str],
+                bits: Optional[int] = None) -> BitConfig:
+        b = bits if bits is not None else self.default_weight_bits
+        return self.sanitize(BitConfig({k: b for k in weight_blocks},
+                                       {k: b for k in act_blocks}))
+
+
+def random_bit_config(
+    weight_blocks: Sequence[str],
+    act_blocks: Sequence[str],
+    policy: QuantPolicy,
+    rng: np.random.Generator,
+) -> BitConfig:
+    """Uniformly random bits per block — the paper's Table-2 sampling scheme."""
+    bits = list(policy.allowed_bits)
+    wb = {k: int(rng.choice(bits)) for k in weight_blocks}
+    ab = {k: int(rng.choice(bits)) for k in act_blocks}
+    return policy.sanitize(BitConfig(wb, ab))

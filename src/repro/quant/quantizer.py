@@ -1,0 +1,101 @@
+"""Uniform quantizers (affine and symmetric, per-tensor / per-channel).
+
+This is the quantization model of the paper (Appendix E): uniform min–max
+quantization with step ``Δ = (θmax − θmin)/(2^b − 1)``; quantization noise
+is modelled as uniform, zero-mean, variance ``Δ²/12``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantizer.
+
+    Attributes:
+      bits: bit width (2..8 typical; 16/32 = effectively no-op).
+      symmetric: symmetric (zero_point=0, range ±max|θ|) vs affine min–max.
+      channel_axis: per-channel scales along this axis; None = per-tensor.
+    """
+
+    bits: int = 8
+    symmetric: bool = False
+    channel_axis: Optional[int] = None
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits - 1
+
+
+def quant_range(x: jnp.ndarray, spec: QuantSpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(min, max) statistics at the spec's granularity (per-tensor or channel)."""
+    if spec.channel_axis is None:
+        lo, hi = jnp.min(x), jnp.max(x)
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != spec.channel_axis % x.ndim)
+        lo, hi = jnp.min(x, axis=axes), jnp.max(x, axis=axes)
+    if spec.symmetric:
+        m = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+        return -m, m
+    # affine: the grid must contain 0 so that zero maps exactly.
+    return jnp.minimum(lo, 0.0), jnp.maximum(hi, 0.0)
+
+
+def quant_params(
+    x: jnp.ndarray, spec: QuantSpec
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scale and zero-point from data statistics.
+
+    scale = Δ = (max-min)/(2^b - 1); zero_point is the integer the value
+    0.0 maps to (0 for symmetric specs by construction).
+    """
+    lo, hi = quant_range(x, spec)
+    scale = (hi - lo) / spec.levels
+    scale = jnp.where(scale <= 0, 1.0, scale)  # degenerate (constant) tensor
+    zero_point = jnp.round(-lo / scale)
+    return scale, zero_point
+
+
+def _reshape_per_channel(s: jnp.ndarray, x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    shape = [1] * x.ndim
+    shape[axis % x.ndim] = -1
+    return s.reshape(shape)
+
+
+def quantize(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero_point: jnp.ndarray,
+    spec: QuantSpec,
+) -> jnp.ndarray:
+    """Real -> integer grid (still float dtype; values in [0, 2^b-1])."""
+    if spec.channel_axis is not None:
+        scale = _reshape_per_channel(scale, x, spec.channel_axis)
+        zero_point = _reshape_per_channel(zero_point, x, spec.channel_axis)
+    q = jnp.round(x / scale + zero_point)
+    return jnp.clip(q, 0.0, float(spec.levels))
+
+
+def dequantize(
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero_point: jnp.ndarray,
+    spec: QuantSpec,
+) -> jnp.ndarray:
+    if spec.channel_axis is not None:
+        scale = _reshape_per_channel(scale, q, spec.channel_axis)
+        zero_point = _reshape_per_channel(zero_point, q, spec.channel_axis)
+    return (q - zero_point) * scale
+
+
+def fake_quant_ref(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Quantize–dequantize in one shot (no STE) — pure jnp oracle."""
+    if spec.bits >= 16:
+        return x
+    scale, zp = quant_params(x, spec)
+    return dequantize(quantize(x, scale, zp, spec), scale, zp, spec).astype(x.dtype)

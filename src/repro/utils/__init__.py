@@ -1,0 +1,8 @@
+from repro.utils.pytree import (
+    tree_size,
+    tree_bytes,
+    named_leaves,
+    map_with_names,
+    block_paths,
+)
+from repro.utils.logging import get_logger

@@ -1,0 +1,88 @@
+"""Pytree utilities shared across the framework.
+
+All parameter collections in repro are nested dicts of jnp arrays. Blocks
+(the unit at which FIT assigns sensitivities / bit-widths) are identified
+by '/'-joined key paths, e.g. ``layers/3/attn/wq``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):          # GetAttrKey (NamedTuple fields)
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def named_leaves(tree: Any) -> List[Tuple[str, Any]]:
+    """Flatten a pytree into (path-string, leaf) pairs, deterministic order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_path_str(path), leaf) for path, leaf in leaves]
+
+
+def map_with_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn also receives the '/'-joined path of the leaf."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_str(path), leaf), tree
+    )
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(
+        int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+        for l in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def block_paths(tree: Any) -> List[str]:
+    """All leaf paths, the default block granularity for FIT."""
+    return [name for name, _ in named_leaves(tree)]
+
+
+def get_by_path(tree: Any, path: str) -> Any:
+    node = tree
+    for part in path.split("/"):
+        if isinstance(node, (list, tuple)):
+            node = node[int(part)]
+        else:
+            node = node[part]
+    return node
+
+
+def set_by_path(tree: Dict, path: str, value: Any) -> Dict:
+    """Functionally set tree[path] = value (returns a new nested dict)."""
+    parts = path.split("/")
+
+    def rec(node, i):
+        if i == len(parts):
+            return value
+        key = parts[i]
+        if isinstance(node, dict):
+            new = dict(node)
+            new[key] = rec(node[key], i + 1)
+            return new
+        if isinstance(node, (list, tuple)):
+            idx = int(key)
+            new = list(node)
+            new[idx] = rec(node[idx], i + 1)
+            return type(node)(new)
+        raise TypeError(f"cannot descend into {type(node)} at {path}")
+
+    return rec(tree, 0)

@@ -1,0 +1,13 @@
+import os
+
+# Kernel dispatch: run Pallas kernels in interpret mode on CPU so the
+# kernel bodies (not just the refs) are exercised by the test suite.
+os.environ.setdefault("REPRO_KERNELS", "interpret")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,141 @@
+"""FIT metric assembly + the paper's central claim in miniature:
+FIT computed on the FP model predicts quantized-model degradation."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    SensitivityReport, build_report, greedy_allocate, dp_allocate,
+    pareto_front, sample_configs, spearman, config_cost_bits)
+from repro.core.heuristics import ALL_METRICS
+from repro.data.synthetic import ClassifyConfig, classify_dataset, batched
+from repro.models.cnn import (
+    cnn_accuracy, cnn_act_fn, cnn_loss, cnn_tap_loss, cnn_tap_shapes, init_cnn)
+from repro.models.context import QATContext
+from repro.quant.noise import noise_power
+from repro.quant.policy import BitConfig, QuantPolicy
+
+
+def test_fit_assembly_matches_hand_computation():
+    report = SensitivityReport(
+        weight_traces={"a": 2.0, "b": 0.5},
+        act_traces={"s": 1.0},
+        weight_ranges={"a": (-1.0, 1.0), "b": (0.0, 4.0)},
+        act_ranges={"s": (0.0, 2.0)},
+        param_sizes={"a": 10, "b": 20},
+    )
+    cfg = BitConfig({"a": 4, "b": 8}, {"s": 4})
+    expected = (2.0 * noise_power(-1, 1, 4) + 0.5 * noise_power(0, 4, 8)
+                + 1.0 * noise_power(0, 2, 4))
+    assert np.isclose(report.fit(cfg), expected)
+    # 16-bit blocks contribute nothing
+    cfg2 = BitConfig({"a": 16, "b": 8}, {"s": 16})
+    assert np.isclose(report.fit(cfg2), 0.5 * noise_power(0, 4, 8))
+
+
+def test_report_serialization_roundtrip():
+    report = SensitivityReport({"a": 1.0}, {"s": 2.0}, {"a": (-1, 1)},
+                               {"s": (0, 3)}, {"a": 5})
+    r2 = SensitivityReport.from_json(report.to_json())
+    cfg = BitConfig({"a": 3}, {"s": 5})
+    assert np.isclose(report.fit(cfg), r2.fit(cfg))
+
+
+@pytest.fixture(scope="module")
+def trained_cnn():
+    """A small CNN trained to convergence on synthetic data."""
+    dcfg = ClassifyConfig(input_hw=8, num_classes=4, seed=1)
+    xtr, ytr = classify_dataset(dcfg, 2048)
+    xte, yte = classify_dataset(dcfg, 512, split_seed=7)
+    params = init_cnn(jax.random.key(0), num_classes=4, input_hw=8,
+                      filters=8, batchnorm=False)
+
+    lr = 3e-3
+    @jax.jit
+    def step(p, batch):
+        loss, g = jax.value_and_grad(cnn_loss)(p, batch)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g), loss
+
+    for i, b in enumerate(batched(jnp.asarray(xtr), jnp.asarray(ytr), 128, seed=0)):
+        if i >= 400:
+            break
+        params, loss = step(params, (jnp.asarray(b[0]), jnp.asarray(b[1])))
+    acc = cnn_accuracy(params, jnp.asarray(xte), jnp.asarray(yte))
+    assert acc > 0.7, f"testbed CNN failed to train (acc={acc})"
+    return params, (xtr, ytr), (xte, yte)
+
+
+def _quantized_loss(params, batch, bit_cfg: BitConfig):
+    levels_w = {k: float(2 ** b - 1) for k, b in bit_cfg.weight_bits.items()}
+    levels_a = {k: float(2 ** b - 1) for k, b in bit_cfg.act_bits.items()}
+    ctx = QATContext(levels_w, levels_a)
+    return float(cnn_loss(params, batch, ctx=ctx))
+
+
+def test_fit_predicts_quantized_degradation(trained_cnn):
+    """Spearman(FIT, Δloss) across random MPQ configs — the paper's
+    evaluation protocol (Table 2), pass bar at |rho| >= 0.6."""
+    params, (xtr, ytr), _ = trained_cnn
+    batch = (jnp.asarray(xtr[:256]), jnp.asarray(ytr[:256]))
+    report = build_report(cnn_loss, cnn_tap_loss,
+                          lambda b: cnn_tap_shapes(params, b),
+                          cnn_act_fn, params, [batch], tolerance=None,
+                          max_batches=1)
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=())
+    configs = sample_configs(report, policy, n=24, seed=3)
+
+    base = float(cnn_loss(params, batch))
+    fits, dlosses = [], []
+    for c in configs:
+        fits.append(report.fit(c))
+        dlosses.append(_quantized_loss(params, batch, c) - base)
+    rho = spearman(fits, dlosses)
+    assert rho > 0.6, f"FIT-degradation rank correlation too low: {rho}"
+
+
+def test_greedy_respects_budget_and_beats_uniform(trained_cnn):
+    params, (xtr, ytr), _ = trained_cnn
+    batch = (jnp.asarray(xtr[:128]), jnp.asarray(ytr[:128]))
+    report = build_report(cnn_loss, None, None, None, params, [batch],
+                          tolerance=None, max_batches=1)
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=())
+    total = sum(report.param_sizes.values())
+    budget = 5.0 * total           # 5 bits/param average
+    cfg = greedy_allocate(report, policy, budget)
+    assert config_cost_bits(report, cfg) <= budget
+    uniform4 = BitConfig({k: 4 for k in report.weight_traces},
+                         {k: 8 for k in report.act_traces})
+    # greedy with a 5-bit budget must beat uniform-4 on FIT_W
+    assert report.fit_weights(cfg.weight_bits) <= \
+        report.fit_weights(uniform4.weight_bits) + 1e-12
+
+
+def test_dp_matches_or_beats_greedy(trained_cnn):
+    params, (xtr, ytr), _ = trained_cnn
+    batch = (jnp.asarray(xtr[:128]), jnp.asarray(ytr[:128]))
+    report = build_report(cnn_loss, None, None, None, params, [batch],
+                          tolerance=None, max_batches=1)
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=())
+    total = sum(report.param_sizes.values())
+    for avg_bits in (4.0, 5.0, 6.0):
+        budget = avg_bits * total
+        g = greedy_allocate(report, policy, budget)
+        d = dp_allocate(report, policy, budget, resolution=512)
+        assert config_cost_bits(report, d) <= budget * 1.01
+        assert report.fit_weights(d.weight_bits) <= \
+            report.fit_weights(g.weight_bits) * 1.05 + 1e-12
+
+
+def test_pareto_front_is_monotone(trained_cnn):
+    params, (xtr, ytr), _ = trained_cnn
+    batch = (jnp.asarray(xtr[:128]), jnp.asarray(ytr[:128]))
+    report = build_report(cnn_loss, None, None, None, params, [batch],
+                          tolerance=None, max_batches=1)
+    policy = QuantPolicy(pinned_substrings=())
+    configs = sample_configs(report, policy, n=64, seed=0)
+    front = pareto_front(report, configs)
+    sizes = [s for s, _, _ in front]
+    fits = [f for _, f, _ in front]
+    assert sizes == sorted(sizes)
+    assert fits == sorted(fits, reverse=True)

@@ -1,0 +1,91 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.fake_quant import fake_quant_pallas, fake_quant_per_channel_pallas
+from repro.kernels.ef_sqnorm import ef_sqnorm_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+@pytest.mark.parametrize("shape", [(16, 16), (300, 257), (1, 5), (1024, 64), (7,)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+@pytest.mark.parametrize("bits", [8, 4, 3])
+def test_fake_quant_matches_ref(rng, shape, dtype, bits):
+    x = jnp.asarray(rng.normal(size=shape).astype(dtype))
+    scale, zp = jnp.float32(0.07), jnp.float32(3.0)
+    out = fake_quant_pallas(x, scale, zp, bits, interpret=True)
+    exp = ref.fake_quant(x, scale, zp, bits)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("rows,cols", [(33, 64), (8, 128), (100, 30)])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_fake_quant_per_channel(rng, rows, cols, bits):
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+    sc = jnp.asarray(rng.uniform(0.01, 0.1, (1, cols)).astype(np.float32))
+    zc = jnp.asarray(rng.integers(0, 2 ** bits - 1, (1, cols)).astype(np.float32))
+    out = fake_quant_per_channel_pallas(x, sc.reshape(cols), zc.reshape(cols),
+                                        bits, interpret=True)
+    exp = ref.fake_quant(x, sc, zc, bits)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 9), n=st.integers(1, 700), seed=st.integers(0, 99))
+def test_ef_sqnorm_property(b, n, seed):
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.normal(size=(b, n)).astype(np.float32))
+    out = ef_sqnorm_pallas(g, block_n=128, interpret=True)
+    np.testing.assert_allclose(out, ref.ef_sqnorm(g), rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (64, 384, 128), (100, 65, 33)])
+def test_int8_matmul(rng, m, k, n):
+    xq = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n)).astype(np.int8))
+    ws = jnp.asarray(rng.uniform(0.01, 0.1, (n,)).astype(np.float32))
+    out = int8_matmul_pallas(xq, wq, jnp.float32(0.03), ws, bm=32, bn=32, bk=32,
+                             interpret=True)
+    exp = ref.int8_matmul(xq, wq, jnp.float32(0.03), ws)
+    np.testing.assert_allclose(out, exp, rtol=1e-5)
+
+
+def test_int8_matmul_exact_integers(rng):
+    """int32 accumulation must be exact (no float rounding)."""
+    xq = jnp.asarray(rng.integers(-127, 128, (32, 256)).astype(np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, (256, 32)).astype(np.int8))
+    out = int8_matmul_pallas(xq, wq, jnp.float32(1.0), jnp.ones(32), bk=64,
+                             interpret=True)
+    exp = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    np.testing.assert_array_equal(np.asarray(out, np.int64), exp)
+
+
+@pytest.mark.parametrize("s,t,causal", [(128, 128, True), (128, 128, False),
+                                        (64, 256, False), (256, 256, True)])
+def test_flash_attention(rng, s, t, causal):
+    b, h, d = 2, 3, 32
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=64, bkv=64,
+                                 interpret=True)
+    exp = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, exp, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_block_size_invariance(rng):
+    b, h, s, d = 1, 2, 256, 32
+    q, k, v = (jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+               for _ in range(3))
+    outs = [flash_attention_pallas(q, k, v, causal=True, bq=bq, bkv=bkv,
+                                   interpret=True)
+            for bq, bkv in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-5)

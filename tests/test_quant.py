@@ -1,0 +1,96 @@
+"""Quantizer + noise-model properties (paper Appendix E)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    QuantSpec, quant_params, quantize, dequantize, fake_quant_ref,
+    fake_quant, noise_power, quant_step)
+from repro.quant.calibration import EmaObserver, MinMaxObserver, init_range_state
+from repro.quant.policy import QuantPolicy, random_bit_config
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 1000), n=st.integers(2, 300))
+def test_fake_quant_error_bounded_by_half_step(bits, seed, n):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(0, 1, n).astype(np.float32))
+    spec = QuantSpec(bits=bits)
+    fq = fake_quant_ref(x, spec)
+    scale, _ = quant_params(x, spec)
+    err = np.max(np.abs(np.asarray(fq - x)))
+    assert err <= float(scale) / 2 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_fake_quant_idempotent(bits, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(0, 1, 64).astype(np.float32))
+    spec = QuantSpec(bits=bits)
+    once = fake_quant_ref(x, spec)
+    twice = fake_quant_ref(once, spec)
+    np.testing.assert_allclose(once, twice, atol=1e-6)
+
+
+def test_zero_maps_exactly(rng):
+    x = jnp.asarray(rng.normal(0, 1, 128).astype(np.float32)).at[0].set(0.0)
+    for bits in (2, 4, 8):
+        fq = fake_quant_ref(x, QuantSpec(bits=bits))
+        assert abs(float(fq[0])) < 1e-7, "0.0 must be representable (affine grid)"
+
+
+def test_quantize_levels_in_range(rng):
+    x = jnp.asarray(rng.normal(0, 3, 512).astype(np.float32))
+    spec = QuantSpec(bits=4)
+    scale, zp = quant_params(x, spec)
+    q = np.asarray(quantize(x, scale, zp, spec))
+    assert q.min() >= 0 and q.max() <= 15
+    assert np.allclose(q, np.round(q))
+
+
+def test_ste_gradient_is_identity(rng):
+    x = jnp.asarray(rng.normal(size=32).astype(np.float32))
+
+    def f(x):
+        return jnp.sum(fake_quant(x, QuantSpec(bits=4)) * 3.0)
+
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(g, 3.0 * np.ones(32), atol=1e-6)
+
+
+def test_noise_power_matches_uniform_model(rng):
+    """Empirical quantization-noise power ≈ Δ²/12 (paper Appendix E)."""
+    x = jnp.asarray(rng.uniform(-1, 1, 200_000).astype(np.float32))
+    for bits in (4, 6, 8):
+        spec = QuantSpec(bits=bits)
+        fq = fake_quant_ref(x, spec)
+        emp = float(jnp.mean((fq - x) ** 2))
+        lo, hi = float(x.min()), float(x.max())
+        model = float(noise_power(min(lo, 0), max(hi, 0), bits))
+        assert abs(emp - model) / model < 0.05, (bits, emp, model)
+
+
+def test_quant_step_formula():
+    assert np.isclose(quant_step(-1.0, 1.0, 8), 2.0 / 255)
+    assert np.isclose(noise_power(-1.0, 1.0, 8), (2.0 / 255) ** 2 / 12)
+
+
+def test_observers(rng):
+    mm, ema = MinMaxObserver(), EmaObserver(decay=0.5)
+    s1 = s2 = init_range_state()
+    for i in range(4):
+        x = jnp.asarray(rng.normal(0, 1 + i, 256).astype(np.float32))
+        s1 = mm.update(s1, x)
+        s2 = ema.update(s2, x)
+    assert float(s1.hi) >= float(s2.hi) * 0.99  # min-max dominates EMA
+    assert float(s1.lo) <= 0 <= float(s1.hi)
+
+
+def test_policy_pins_routers(rng):
+    pol = QuantPolicy(allowed_bits=(8, 6, 4, 3))
+    cfg = random_bit_config(["layers/0/moe/router", "layers/0/attn/wq"],
+                            ["layers/0/attn/attn_out"], pol, rng)
+    assert cfg.weight_bits["layers/0/moe/router"] >= 8
