@@ -1,19 +1,69 @@
 """Kernel microbenchmarks: wall time of the jnp reference path on CPU
 (the Pallas path targets TPU; interpret mode timing is not meaningful)
 plus the analytic arithmetic intensity of each kernel at its default
-tile sizes — the numbers used in the VMEM/roofline sizing discussion."""
+tile sizes — the numbers used in the VMEM/roofline sizing discussion.
+
+Also benchmarks the FIT config-scoring hot path: the PackedReport
+gather+row-sum batch engine vs the per-config dict loop, with a
+correctness cross-check (the paper's protocol scores hundreds of random
+MPQ configs, so this is the search-stack bottleneck)."""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro.core import SensitivityReport, sample_packed
 from repro.kernels import ref
+from repro.quant.policy import QuantPolicy
+
+
+def bench_fit_batch(n_configs: int = 4096, n_blocks: int = 96,
+                    n_acts: int = 32) -> None:
+    """PackedReport.fit_batch vs per-config SensitivityReport.fit."""
+    r = np.random.default_rng(0)
+    wn = [f"layers/{i}/mlp/w" for i in range(n_blocks)]
+    an = [f"layers/{i}/act" for i in range(n_acts)]
+    report = SensitivityReport(
+        weight_traces={k: float(r.uniform(0.1, 5.0)) for k in wn},
+        act_traces={k: float(r.uniform(0.1, 5.0)) for k in an},
+        weight_ranges={k: (-float(r.uniform(0.5, 2)), float(r.uniform(0.5, 2)))
+                       for k in wn},
+        act_ranges={k: (0.0, float(r.uniform(1, 4))) for k in an},
+        param_sizes={k: int(r.integers(1 << 10, 1 << 20)) for k in wn},
+    )
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=())
+    packed, W, A = sample_packed(report, policy, n_configs, seed=0)
+    configs = [packed.decode(W[i], A[i]) for i in range(n_configs)]
+
+    t0 = time.perf_counter()
+    slow = np.array([report.fit(c) for c in configs])
+    t_dict = time.perf_counter() - t0
+
+    packed.fit_batch(W, A)  # warm the arange/gather path
+    t0 = time.perf_counter()
+    fast = packed.fit_batch(W, A)
+    t_vec = time.perf_counter() - t0
+
+    rel = float(np.max(np.abs(fast - slow) / np.maximum(np.abs(slow), 1e-30)))
+    assert rel < 1e-6, f"fit_batch diverges from report.fit: rel={rel:.3e}"
+    speedup = t_dict / max(t_vec, 1e-9)
+    emit(f"fit.batch_{n_configs}cfg_{n_blocks}blk.dict_loop", t_dict * 1e6,
+         f"{n_configs / t_dict:.0f}cfg_per_s")
+    emit(f"fit.batch_{n_configs}cfg_{n_blocks}blk.packed", t_vec * 1e6,
+         f"{n_configs / max(t_vec, 1e-9):.0f}cfg_per_s")
+    emit(f"fit.batch_{n_configs}cfg_{n_blocks}blk.speedup", 0.0,
+         f"{speedup:.0f}x_max_rel_err_{rel:.1e}")
+    assert speedup >= 50, f"fit_batch speedup below bar: {speedup:.1f}x"
 
 
 def run() -> None:
     rng = np.random.default_rng(0)
+
+    bench_fit_batch()
 
     x = jnp.asarray(rng.normal(size=(2048, 2048)).astype(np.float32))
     fq = jax.jit(lambda x: ref.fake_quant(x, jnp.float32(0.05), jnp.float32(3.0), 4))

@@ -22,8 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, train_cnn_testbed
-from repro.core import build_report, metric_accuracy_correlation, sample_configs
-from repro.core.heuristics import ALL_METRICS, bn_metric
+from repro.core import (build_report, metric_accuracy_correlation,
+                        metric_values_batch, sample_packed)
+from repro.core.heuristics import ALL_METRICS
 from repro.data.synthetic import batched
 from repro.models.cnn import (
     cnn_act_fn, cnn_loss, cnn_tap_loss, cnn_tap_shapes, init_cnn)
@@ -64,7 +65,10 @@ def _study(name: str, seed: int, batchnorm: bool, filters: int) -> Dict[str, flo
                           lambda b: cnn_tap_shapes(params, b), cnn_act_fn,
                           params, [batch], tolerance=None, max_batches=1)
     policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=("bn",))
-    configs = sample_configs(report, policy, N_CONFIGS, seed=seed)
+    # sample + score in packed index space: every metric is one
+    # gather+row-sum over the batch, not a dict loop per config
+    packed, W, A = sample_packed(report, policy, N_CONFIGS, seed=seed)
+    configs = [packed.decode(W[i], A[i]) for i in range(N_CONFIGS)]
 
     accs = [_qat_accuracy(params, c, xtr, ytr, xte, yte) for c in configs]
 
@@ -74,12 +78,13 @@ def _study(name: str, seed: int, batchnorm: bool, filters: int) -> Dict[str, flo
                   for i in (1, 2, 3)}
 
     out = {"fp_acc": fp_acc, "acc_spread": float(np.ptp(accs))}
-    for mname, fn in ALL_METRICS.items():
-        vals = [fn(report, c) for c in configs]
-        out[mname] = metric_accuracy_correlation(vals, accs)["spearman"]
+    for mname in ALL_METRICS:
+        vals = metric_values_batch(report, mname, packed.levels, W, A)
+        out[mname] = metric_accuracy_correlation(list(vals), accs)["spearman"]
     if gammas:
-        vals = [bn_metric(report, c, gammas) for c in configs]
-        out["BN"] = metric_accuracy_correlation(vals, accs)["spearman"]
+        vals = metric_values_batch(report, "BN", packed.levels, W, A,
+                                   gammas=gammas)
+        out["BN"] = metric_accuracy_correlation(list(vals), accs)["spearman"]
     return out
 
 

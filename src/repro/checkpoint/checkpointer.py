@@ -61,10 +61,13 @@ class Checkpointer:
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
              blocking: bool = True) -> None:
         flat = _gather(tree)          # gather on caller thread (device safety)
+        # serialize writers: a blocking save racing a still-running async
+        # save of the same step makes the rmtree+rename dance fail with
+        # "Directory not empty" (both threads see the target as absent)
+        self.wait()
         if blocking:
             self._write(step, flat, extra or {})
         else:
-            self.wait()
             self._thread = threading.Thread(
                 target=self._write, args=(step, flat, extra or {}), daemon=True)
             self._thread.start()

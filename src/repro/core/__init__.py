@@ -9,13 +9,21 @@ from repro.core.hessian import (
     hutchinson_block_traces,
     exact_block_traces,
 )
-from repro.core.fit import SensitivityReport
-from repro.core.heuristics import ALL_METRICS, qr_metric, bn_metric, noise_metric
+from repro.core.fit import PackedReport, SensitivityReport
+from repro.core.heuristics import (
+    ALL_METRICS,
+    qr_metric,
+    bn_metric,
+    noise_metric,
+    metric_packed,
+    metric_values_batch,
+)
 from repro.core.mpq import (
     greedy_allocate,
     dp_allocate,
     pareto_front,
     sample_configs,
+    sample_packed,
     config_cost_bits,
 )
 from repro.core.rankcorr import spearman, pearson, kendall, metric_accuracy_correlation

@@ -58,12 +58,24 @@ def ef_trace_weights(
     params: Any,
     batch: Any,
     microbatch: Optional[int] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    mesh_axis: str = "data",
 ) -> Dict[str, float]:
     """EF trace per parameter block: (1/N) Σ_i ||∇_θl f(z_i)||².
 
     ``batch`` is a pytree with leading batch dim N on every leaf.
     ``loss_fn(params, batch)`` must return the MEAN loss over the batch.
+
+    Passing ``mesh`` enables the data-parallel mode: the batch axis is
+    sharded over ``mesh_axis`` via shard_map, each device reduces its
+    shard's per-block squared norms locally, and a single psum of
+    #blocks scalars combines them — per-sample gradients never leave
+    their device. Identical estimate (the EF trace is a plain mean over
+    samples), #devices× less per-device work.
     """
+    if mesh is not None and int(mesh.shape[mesh_axis]) > 1:
+        return _ef_trace_weights_sharded(loss_fn, params, batch, mesh,
+                                         mesh_axis, microbatch)
     n = jax.tree_util.tree_leaves(batch)[0].shape[0]
     mb = microbatch or n
     assert n % mb == 0, f"batch {n} not divisible by microbatch {mb}"
@@ -87,6 +99,56 @@ def ef_trace_weights(
     return {k: float(jnp.mean(v)) for k, v in sq.items()}
 
 
+def _ef_trace_weights_sharded(
+    loss_fn: LossFn,
+    params: Any,
+    batch: Any,
+    mesh: jax.sharding.Mesh,
+    mesh_axis: str,
+    microbatch: Optional[int],
+) -> Dict[str, float]:
+    """Data-parallel EF trace: shard the batch, psum per-block sums."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    ndev = int(mesh.shape[mesh_axis])
+    assert n % ndev == 0, f"batch {n} not divisible by {ndev} devices"
+    local = n // ndev
+    mb = microbatch or local
+    assert local % mb == 0, \
+        f"local batch {local} not divisible by microbatch {mb}"
+
+    def single_loss(p, z):
+        zb = jax.tree.map(lambda a: a[None], z)
+        return loss_fn(p, zb)
+
+    per_sample_grad = jax.vmap(jax.grad(single_loss), in_axes=(None, 0))
+
+    def chunk_sums(p, z_chunk):
+        sq = _block_sqnorms(per_sample_grad(p, z_chunk))
+        return {k: jnp.sum(v) for k, v in sq.items()}
+
+    def local_fn(p, z):
+        if mb == local:
+            sums = chunk_sums(p, z)
+        else:
+            chunks = jax.tree.map(
+                lambda a: a.reshape(local // mb, mb, *a.shape[1:]), z)
+            per = jax.lax.map(lambda c: chunk_sums(p, c), chunks)
+            sums = {k: jnp.sum(v) for k, v in per.items()}
+        return jax.lax.psum(sums, mesh_axis)
+
+    # check_rep=False: pallas_call (the ef_sqnorm kernel in interpret
+    # mode) has no replication rule; we psum explicitly so the check is
+    # redundant here.
+    f = jax.jit(shard_map(local_fn, mesh=mesh,
+                          in_specs=(P(), P(mesh_axis)), out_specs=P(),
+                          check_rep=False))
+    sums = f(params, batch)
+    return {k: float(v) / n for k, v in sums.items()}
+
+
 def ef_trace_weights_streaming(
     loss_fn: LossFn,
     params: Any,
@@ -94,19 +156,23 @@ def ef_trace_weights_streaming(
     microbatch: Optional[int] = None,
     tolerance: Optional[float] = None,
     min_batches: int = 4,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    mesh_axis: str = "data",
 ) -> Tuple[Dict[str, float], int]:
     """Streaming EF trace over a batch iterator with early stopping.
 
     Mirrors the paper's fixed-tolerance protocol (Sec. 4.3: "EF trace
     computation is stopped at a tolerance of 0.01"): stop when the
     relative moving std of the running mean trace drops below tolerance.
+    ``mesh`` shards each batch data-parallel (see ``ef_trace_weights``).
     Returns (traces, batches_consumed).
     """
     sums: Dict[str, float] = {}
     totals: list[float] = []
     count = 0
     for batch in batches:
-        t = ef_trace_weights(loss_fn, params, batch, microbatch)
+        t = ef_trace_weights(loss_fn, params, batch, microbatch,
+                             mesh=mesh, mesh_axis=mesh_axis)
         count += 1
         for k, v in t.items():
             sums[k] = sums.get(k, 0.0) + v

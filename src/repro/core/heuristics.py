@@ -14,11 +14,13 @@ assembly, so it needs no separate formula here.
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.quant.noise import noise_power
 from repro.quant.policy import BitConfig
-from repro.core.fit import SensitivityReport
+from repro.core.fit import PackedReport, SensitivityReport
 
 
 def qr_metric(report: SensitivityReport, cfg: BitConfig,
@@ -85,3 +87,70 @@ ALL_METRICS = {
     "QR_A": lambda r, c, **kw: qr_metric(r, c, include_weights=False),
     "Noise": lambda r, c, **kw: noise_metric(r, c),
 }
+
+
+# ---- vectorized variants on the PackedReport engine -----------------------
+#
+# Every metric above is Σ_blocks sens(block) · noise_power(range, bits) with
+# a different sensitivity factor, so each one packs into the same
+# (n_blocks, n_levels) lookup tables and scores a batch of level-index
+# configs with one gather + row-sum (Table-2 runs on this path).
+
+def _qr_sens(ranges: Mapping[str, Tuple[float, float]]) -> Dict[str, float]:
+    return {k: (1.0 / (hi - lo) if hi - lo > 0 else 0.0)
+            for k, (lo, hi) in ranges.items()}
+
+
+def metric_packed(
+    report: SensitivityReport,
+    metric: str,
+    levels: Sequence[int],
+    gammas: Optional[Mapping[str, float]] = None,
+) -> PackedReport:
+    """Pack any Table-2 metric for batch scoring via ``fit_batch``.
+
+    The returned PackedReport's tables hold that metric's per-block
+    contributions; zeroed halves (e.g. activations for FIT_W) make the
+    shared gather a no-op for the excluded side.
+    """
+    ones_w = {k: 1.0 for k in report.weight_ranges}
+    ones_a = {k: 1.0 for k in report.act_ranges}
+    zero: Dict[str, float] = {}
+    if metric == "FIT":
+        return PackedReport.from_report(report, levels)
+    if metric == "FIT_W":
+        return PackedReport.from_report(report, levels, a_sens=zero)
+    if metric == "FIT_A":
+        return PackedReport.from_report(report, levels, w_sens=zero)
+    if metric == "QR":
+        return PackedReport.from_report(
+            report, levels, w_sens=_qr_sens(report.weight_ranges),
+            a_sens=_qr_sens(report.act_ranges))
+    if metric == "QR_W":
+        return PackedReport.from_report(
+            report, levels, w_sens=_qr_sens(report.weight_ranges), a_sens=zero)
+    if metric == "QR_A":
+        return PackedReport.from_report(
+            report, levels, w_sens=zero, a_sens=_qr_sens(report.act_ranges))
+    if metric == "Noise":
+        return PackedReport.from_report(report, levels, w_sens=ones_w,
+                                        a_sens=ones_a)
+    if metric == "BN":
+        if gammas is None:
+            raise ValueError("BN metric needs gammas")
+        sens = {k: (1.0 / g if g > 0 else 0.0) for k, g in gammas.items()}
+        return PackedReport.from_report(report, levels, w_sens=sens,
+                                        a_sens=zero)
+    raise KeyError(f"unknown metric {metric!r}")
+
+
+def metric_values_batch(
+    report: SensitivityReport,
+    metric: str,
+    levels: Sequence[int],
+    W: np.ndarray,
+    A: np.ndarray,
+    gammas: Optional[Mapping[str, float]] = None,
+) -> np.ndarray:
+    """(N,) metric values for a batch of encoded configs."""
+    return metric_packed(report, metric, levels, gammas).fit_batch(W, A)

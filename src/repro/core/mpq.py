@@ -1,7 +1,12 @@
 """Mixed-precision configuration search driven by FIT.
 
 The search space is O(|B|^{2L}) (Sec. 2); FIT collapses it to a scalar
-score per configuration. Three allocators, increasing in optimality:
+score per configuration. Everything here runs on the array-backed
+``PackedReport`` engine: configurations are int level-index matrices and
+scoring a batch is one gather + row-sum (``PackedReport.fit_batch``) —
+no per-config dict traversal anywhere on the hot path.
+
+Three allocators, increasing in optimality:
 
   * ``pareto_front``  — sensitivity-vs-size front over sampled configs
                         (HAWQ-V2 style model selection).
@@ -14,33 +19,97 @@ score per configuration. Three allocators, increasing in optimality:
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.fit import SensitivityReport
-from repro.quant.noise import noise_power
-from repro.quant.policy import BitConfig, QuantPolicy, random_bit_config
+from repro.core.fit import PackedReport, SensitivityReport
+from repro.quant.policy import BitConfig, QuantPolicy
 
 
-def _term(report: SensitivityReport, kind: str, name: str, bits: int) -> float:
-    if bits >= 16:
-        return 0.0
-    if kind == "W":
-        tr = report.weight_traces[name]
-        lo, hi = report.weight_ranges[name]
-    else:
-        tr = report.act_traces[name]
-        lo, hi = report.act_ranges[name]
-    return tr * float(noise_power(lo, hi, bits))
+def _policy_packed(report: SensitivityReport,
+                   policy: QuantPolicy) -> PackedReport:
+    """Pack at the policy's level set (allowed bits + pinned bits + 16)."""
+    return report.packed(tuple(policy.allowed_bits) + (policy.pinned_bits,))
+
+
+def _pin_level(packed: PackedReport, policy: QuantPolicy) -> int:
+    """Index of the smallest packed level >= pinned_bits (16 worst case)."""
+    for j, bits in enumerate(packed.levels):
+        if bits >= policy.pinned_bits:
+            return j
+    return packed.n_levels - 1
 
 
 def config_cost_bits(report: SensitivityReport, cfg: BitConfig) -> float:
     """Weight storage cost in bits (activations don't count toward size)."""
     return sum(report.param_sizes[k] * cfg.weight_bits.get(k, 16)
                for k in report.param_sizes)
+
+
+def sample_packed(
+    report: SensitivityReport,
+    policy: QuantPolicy,
+    n: int,
+    seed: int = 0,
+) -> Tuple[PackedReport, np.ndarray, np.ndarray]:
+    """Sample ``n`` policy-sanitized random configs directly in index space.
+
+    Returns ``(packed, W, A)`` where W is (n, n_weight_blocks) and A is
+    (n, n_act_sites) — ready for ``packed.fit_batch(W, A)``. This is the
+    paper's Table-2 uniform sampling scheme, vectorized: two ``integers``
+    draws instead of 2·n·L Python-level ``rng.choice`` calls.
+    """
+    packed = _policy_packed(report, policy)
+    rng = np.random.default_rng(seed)
+    allowed = np.array(sorted({int(b) for b in policy.allowed_bits}))
+    allowed_idx = np.array([packed.level_index(b) for b in allowed])
+
+    W = allowed_idx[rng.integers(0, len(allowed_idx),
+                                 (n, packed.n_weight_blocks))]
+    A = allowed_idx[rng.integers(0, len(allowed_idx),
+                                 (n, packed.n_act_sites))]
+
+    pin = _pin_level(packed, policy)
+    W = policy.sanitize_indices(W, policy.pinned_mask(packed.weight_names), pin)
+    A = policy.sanitize_indices(A, policy.pinned_mask(packed.act_names), pin)
+    if not policy.quantize_activations:
+        A[:] = packed.level_index(16)
+    return packed, W, A
+
+
+def sample_configs(
+    report: SensitivityReport,
+    policy: QuantPolicy,
+    n: int,
+    seed: int = 0,
+) -> List[BitConfig]:
+    """BitConfig-valued wrapper over ``sample_packed`` (compat API)."""
+    packed, W, A = sample_packed(report, policy, n, seed)
+    return [packed.decode(W[i], A[i]) for i in range(n)]
+
+
+def pareto_front(
+    report: SensitivityReport,
+    configs: Sequence[BitConfig],
+) -> List[Tuple[float, float, BitConfig]]:
+    """(size_bits, fit, cfg) tuples on the sensitivity-size Pareto front."""
+    if not configs:
+        return []
+    levels = {b for c in configs for b in c.weight_bits.values()}
+    levels |= {b for c in configs for b in c.act_bits.values()}
+    packed = report.packed(levels)
+    W, A = packed.encode(configs)
+
+    sizes = packed.cost_bits_batch(W)
+    fits = packed.fit_batch(W, A)
+    order = np.lexsort((fits, sizes))
+    ff = fits[order]
+    # keep strictly-improving fits in size order (vectorized running min)
+    prev_best = np.concatenate(([np.inf], np.minimum.accumulate(ff)[:-1]))
+    keep = ff < prev_best
+    return [(float(sizes[i]), float(fits[i]), configs[i])
+            for i in order[keep]]
 
 
 def greedy_allocate(
@@ -51,50 +120,59 @@ def greedy_allocate(
 ) -> BitConfig:
     """Marginal-utility greedy bit allocation under a weight-size budget.
 
-    Every weight block starts at min(allowed_bits); upgrades are applied
-    best-(ΔFIT per bit·param)-first while the budget allows. Activation
-    sites get ``act_bits_fixed`` (default: policy default) since they do
-    not consume storage budget.
+    Every weight block starts at min(allowed_bits) (pinned blocks at the
+    smallest allowed level >= pinned_bits); upgrades are applied
+    best-(ΔFIT per bit·param)-first while the budget allows. Because the
+    per-block FIT terms are convex in bits, per-block upgrade ratios are
+    non-increasing, so a single global argsort over all (block, rung)
+    moves visits each block's rungs in order — equivalent to the classic
+    lazy-heap greedy, with the gain/cost tables precomputed as arrays.
+    Activation sites get ``act_bits_fixed`` (default: policy default)
+    since they do not consume storage budget.
     """
-    bits_sorted = sorted(policy.allowed_bits)
-    lowest, levels = bits_sorted[0], bits_sorted
-    blocks = list(report.weight_traces)
+    levels = sorted({int(b) for b in policy.allowed_bits})
+    packed = report.packed(levels)
+    aidx = np.array([packed.level_index(b) for b in levels])
+    bits_arr = np.array(levels, np.float64)
+    n_b, n_l = packed.n_weight_blocks, len(levels)
 
-    cur = {k: (policy.pinned_bits if policy.is_pinned(k) else lowest) for k in blocks}
-    used = sum(report.param_sizes[k] * cur[k] for k in blocks)
+    pinned = policy.pinned_mask(packed.weight_names)
+    start = np.zeros(n_b, np.int64)
+    if pinned.any():
+        # smallest allowed level >= pinned_bits (max allowed as fallback;
+        # sanitize() re-raises to pinned_bits if no allowed level reaches it)
+        p = int(np.searchsorted(bits_arr, policy.pinned_bits))
+        start[pinned] = min(p, n_l - 1)
 
-    # max-heap of (gain per cost) upgrade moves, lazily re-pushed
-    heap: List[Tuple[float, str, int]] = []
+    sizes = packed.weight_sizes.astype(np.float64)
+    tbl = packed.weight_table[:, aidx]                     # (n_b, n_l)
+    gains = tbl[:, :-1] - tbl[:, 1:]                       # rung p -> p+1
+    costs = sizes[:, None] * (bits_arr[1:] - bits_arr[:-1])[None, :]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratio = np.where(costs > 0, gains / costs, -np.inf)
+    valid = np.arange(n_l - 1)[None, :] >= start[:, None]
 
-    def push_move(name: str):
-        b = cur[name]
-        nxt = next((x for x in levels if x > b), None)
-        if nxt is None or policy.is_pinned(name) and b >= policy.pinned_bits and nxt > max(levels):
-            return
-        if nxt is None:
-            return
-        gain = _term(report, "W", name, b) - _term(report, "W", name, nxt)
-        cost = report.param_sizes[name] * (nxt - b)
-        if cost <= 0:
-            return
-        heapq.heappush(heap, (-gain / cost, name, nxt))
-
-    for k in blocks:
-        push_move(k)
-
-    while heap:
-        neg_ratio, name, nxt = heapq.heappop(heap)
-        if nxt <= cur[name]:
-            continue  # stale move
-        cost = report.param_sizes[name] * (nxt - cur[name])
-        if used + cost > budget_bits:
+    cur = start.copy()
+    # charge pinned blocks at >= pinned_bits even when no allowed level
+    # reaches it (sanitize() will raise their bits after allocation, so
+    # budgeting them lower would let the result overshoot the budget)
+    eff_bits = bits_arr[cur].copy()
+    eff_bits[pinned] = np.maximum(eff_bits[pinned], policy.pinned_bits)
+    used = float((sizes * eff_bits).sum())
+    flat = np.argsort(-ratio, axis=None, kind="stable")
+    bs, ps = np.unravel_index(flat, ratio.shape)
+    for b, p in zip(bs, ps):
+        if not valid[b, p] or cur[b] != p:
+            continue       # below this block's floor, or a cheaper rung
+        c = costs[b, p]    # was skipped for budget — block is frozen
+        if c <= 0 or used + c > budget_bits:
             continue
-        cur[name] = nxt
-        used += cost
-        push_move(name)
+        cur[b] = p + 1
+        used += c
 
+    wb = {name: levels[cur[j]] for j, name in enumerate(packed.weight_names)}
     ab = act_bits_fixed if act_bits_fixed is not None else policy.default_act_bits
-    cfg = BitConfig(cur, {k: ab for k in report.act_traces})
+    cfg = BitConfig(wb, {k: ab for k in report.act_traces})
     return policy.sanitize(cfg)
 
 
@@ -105,10 +183,16 @@ def dp_allocate(
     act_bits_fixed: Optional[int] = None,
     resolution: int = 256,
 ) -> BitConfig:
-    """Exact knapsack DP (budget discretized into ``resolution`` buckets)."""
-    blocks = list(report.weight_traces)
-    levels = sorted(policy.allowed_bits)
-    sizes = np.array([report.param_sizes[k] for k in blocks], dtype=np.float64)
+    """Exact knapsack DP (budget discretized into ``resolution`` buckets).
+
+    The per-block relaxation sweep is vectorized over the bucket axis:
+    each (block, option) pair is one shifted elementwise min over the
+    bucket array instead of a Python loop per bucket.
+    """
+    packed = _policy_packed(report, policy)
+    blocks = list(packed.weight_names)
+    levels = sorted({int(b) for b in policy.allowed_bits})
+    sizes = packed.weight_sizes.astype(np.float64)
     unit = max(budget_bits / resolution, 1.0)
 
     n_buckets = resolution + 1
@@ -116,25 +200,25 @@ def dp_allocate(
     best = np.full(n_buckets, INF)
     best[0] = 0.0
     choice = np.full((len(blocks), n_buckets), -1, dtype=np.int64)
+    pinned = policy.pinned_mask(packed.weight_names)
 
     for bi, name in enumerate(blocks):
-        opts = [policy.pinned_bits] if policy.is_pinned(name) else levels
+        opts = [policy.pinned_bits] if pinned[bi] else levels
         new_best = np.full(n_buckets, INF)
         new_choice = np.full(n_buckets, -1, dtype=np.int64)
         for oi, bits in enumerate(opts):
             # round-to-nearest buckets: ceil would make exact-budget
             # configs infeasible; worst-case overshoot is n_blocks·unit/2,
             # i.e. ≤ 0.1% of budget at resolution 512.
-            cost_buckets = int(round(sizes[bi] * bits / unit))
-            term = _term(report, "W", name, bits)
-            for used in range(n_buckets - cost_buckets):
-                if best[used] == INF:
-                    continue
-                tot = used + cost_buckets
-                val = best[used] + term
-                if val < new_best[tot]:
-                    new_best[tot] = val
-                    new_choice[tot] = oi * n_buckets + used
+            cb = int(round(sizes[bi] * bits / unit))
+            if cb >= n_buckets:
+                continue
+            term = packed.weight_table[bi, packed.level_index(bits)]
+            span = n_buckets - cb
+            cand = best[:span] + term
+            upd = cand < new_best[cb:]
+            new_best[cb:][upd] = cand[upd]
+            new_choice[cb:][upd] = oi * n_buckets + np.nonzero(upd)[0]
         best, choice[bi] = new_best, new_choice
 
     # best reachable bucket
@@ -146,40 +230,12 @@ def dp_allocate(
     bits_out: Dict[str, int] = {}
     cursor = end
     for bi in range(len(blocks) - 1, -1, -1):
-        packed = choice[bi][cursor]
-        oi, prev = int(packed) // n_buckets, int(packed) % n_buckets
+        packed_choice = choice[bi][cursor]
+        oi, prev = int(packed_choice) // n_buckets, int(packed_choice) % n_buckets
         name = blocks[bi]
-        opts = [policy.pinned_bits] if policy.is_pinned(name) else levels
+        opts = [policy.pinned_bits] if pinned[bi] else levels
         bits_out[name] = opts[oi]
         cursor = prev
 
     ab = act_bits_fixed if act_bits_fixed is not None else policy.default_act_bits
     return policy.sanitize(BitConfig(bits_out, {k: ab for k in report.act_traces}))
-
-
-def pareto_front(
-    report: SensitivityReport,
-    configs: Sequence[BitConfig],
-) -> List[Tuple[float, float, BitConfig]]:
-    """(size_bits, fit, cfg) tuples on the sensitivity-size Pareto front."""
-    scored = [(config_cost_bits(report, c), report.fit(c), c) for c in configs]
-    scored.sort(key=lambda t: (t[0], t[1]))
-    front: List[Tuple[float, float, BitConfig]] = []
-    best_fit = float("inf")
-    for size, fit, cfg in scored:
-        if fit < best_fit:
-            front.append((size, fit, cfg))
-            best_fit = fit
-    return front
-
-
-def sample_configs(
-    report: SensitivityReport,
-    policy: QuantPolicy,
-    n: int,
-    seed: int = 0,
-) -> List[BitConfig]:
-    rng = np.random.default_rng(seed)
-    wblocks = list(report.weight_traces)
-    ablocks = list(report.act_traces)
-    return [random_bit_config(wblocks, ablocks, policy, rng) for _ in range(n)]

@@ -63,18 +63,23 @@ def build_report(
     microbatch: Optional[int] = None,
     tolerance: Optional[float] = 0.01,
     max_batches: int = 64,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    mesh_axis: str = "data",
 ) -> SensitivityReport:
     """Compute EF traces (weights + activations) and calibration ranges.
 
     ``batches`` is consumed up to ``max_batches`` times with early stopping
     at ``tolerance`` (relative SEM of the total trace, paper Sec. 4.3).
+    ``mesh`` runs the weight-trace estimation data-parallel over
+    ``mesh_axis`` (batch axis sharded, per-block squared norms psum'd).
     """
     batches = list(batches)[:max_batches]
     if not batches:
         raise ValueError("need at least one calibration batch")
 
     wtraces, used = ef_trace_weights_streaming(
-        loss_fn, params, batches, microbatch=microbatch, tolerance=tolerance)
+        loss_fn, params, batches, microbatch=microbatch, tolerance=tolerance,
+        mesh=mesh, mesh_axis=mesh_axis)
 
     atraces: Dict[str, float] = {}
     aranges: Dict[str, tuple] = {}

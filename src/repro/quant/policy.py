@@ -50,6 +50,22 @@ class QuantPolicy:
     def is_pinned(self, name: str) -> bool:
         return any(s in name.lower() for s in self.pinned_substrings)
 
+    def pinned_mask(self, names: Sequence[str]) -> np.ndarray:
+        """Boolean (len(names),) mask of pinned blocks — the vectorized
+        counterpart of ``is_pinned`` for array-backed scoring."""
+        return np.array([self.is_pinned(n) for n in names], dtype=bool)
+
+    def sanitize_indices(self, idx: np.ndarray, pinned: np.ndarray,
+                         pin_level: int) -> np.ndarray:
+        """Vectorized ``sanitize`` in level-index space: raise pinned
+        columns to at least ``pin_level`` (the index of the smallest
+        level >= ``pinned_bits`` in an ascending level set, where a
+        column-wise max on indices equals a max on bits)."""
+        idx = np.asarray(idx)
+        out = idx.copy()
+        out[..., pinned] = np.maximum(out[..., pinned], pin_level)
+        return out
+
     def sanitize(self, cfg: BitConfig) -> BitConfig:
         wb = dict(cfg.weight_bits)
         ab = dict(cfg.act_bits)

@@ -1,0 +1,67 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+Property tests degrade to a deterministic sweep of fixed-seed examples:
+``@given(**strategies)`` wraps the test in a loop that draws
+``max_examples`` argument tuples from a seeded generator (seeded by the
+test name, so every run sees the same examples). No shrinking, no
+database — just enough to keep the property tests meaningful in
+environments without the real dependency (install ``requirements-dev.txt``
+to get full hypothesis behaviour).
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+try:  # pragma: no cover - just a re-export when the real thing exists
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper():
+                n = wrapper._max_examples or 20
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__name__.encode("utf-8")))
+                for _ in range(n):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+            # no functools.wraps: pytest must see a zero-arg function, not
+            # the strategy parameters (it would look for fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = getattr(fn, "_max_examples", None)
+            return wrapper
+        return deco

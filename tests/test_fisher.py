@@ -112,7 +112,10 @@ def test_ef_variance_lower_than_hutchinson(rng):
 
     x, y = batch
     ef_iters, hu_iters = [], []
-    for i in range(24):
+    # 48 iterations: at 24 the two relative-std estimates are close
+    # enough (rel_ef 0.242 vs rel_hu 0.238 at seed 0) that estimator
+    # noise flips the comparison; 48 separates them across seeds.
+    for i in range(48):
         sel = rng.permutation(32)[:16]
         bi = (x[sel], y[sel])
         t = ef_trace_weights(loss_fn, p, bi)

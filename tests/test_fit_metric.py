@@ -7,7 +7,8 @@ import pytest
 
 from repro.core import (
     SensitivityReport, build_report, greedy_allocate, dp_allocate,
-    pareto_front, sample_configs, spearman, config_cost_bits)
+    pareto_front, sample_configs, sample_packed, spearman, config_cost_bits,
+    metric_values_batch)
 from repro.core.heuristics import ALL_METRICS
 from repro.data.synthetic import ClassifyConfig, classify_dataset, batched
 from repro.models.cnn import (
@@ -40,6 +41,120 @@ def test_report_serialization_roundtrip():
     r2 = SensitivityReport.from_json(report.to_json())
     cfg = BitConfig({"a": 3}, {"s": 5})
     assert np.isclose(report.fit(cfg), r2.fit(cfg))
+
+
+def _random_report(seed=0, n_w=24, n_a=8):
+    r = np.random.default_rng(seed)
+    wn = [f"layers/{i}/attn/wq" for i in range(n_w - 1)] + ["moe/router"]
+    an = [f"act{i}" for i in range(n_a)]
+    return SensitivityReport(
+        weight_traces={k: float(r.uniform(0.1, 5.0)) for k in wn},
+        act_traces={k: float(r.uniform(0.1, 5.0)) for k in an},
+        weight_ranges={k: (-float(r.uniform(0.5, 2)), float(r.uniform(0.5, 2)))
+                       for k in wn},
+        act_ranges={k: (0.0, float(r.uniform(1, 4))) for k in an},
+        param_sizes={k: int(r.integers(64, 4096)) for k in wn},
+    )
+
+
+def test_fit_batch_matches_per_config_fit():
+    """The packed gather+row-sum engine == the dict-loop FIT, 1e-6 rel."""
+    report = _random_report()
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3))
+    packed, W, A = sample_packed(report, policy, 256, seed=7)
+    fits = packed.fit_batch(W, A)
+    costs = packed.cost_bits_batch(W)
+    for i in range(len(W)):
+        cfg = packed.decode(W[i], A[i])
+        ref = report.fit(cfg)
+        assert abs(fits[i] - ref) <= 1e-6 * max(abs(ref), 1e-30)
+        assert np.isclose(costs[i], config_cost_bits(report, cfg))
+
+
+def test_packed_encode_decode_roundtrip():
+    report = _random_report(seed=3)
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=())
+    packed, W, A = sample_packed(report, policy, 32, seed=1)
+    cfgs = [packed.decode(W[i], A[i]) for i in range(32)]
+    W2, A2 = packed.encode(cfgs)
+    np.testing.assert_array_equal(W, W2)
+    np.testing.assert_array_equal(A, A2)
+
+
+def test_sample_packed_respects_policy():
+    report = _random_report()
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3))  # default pins routers
+    packed, W, A = sample_packed(report, policy, 128, seed=0)
+    j = packed.weight_names.index("moe/router")
+    assert all(packed.levels[l] >= 8 for l in W[:, j])
+    allowed = {3, 4, 6, 8}
+    assert {int(packed.levels[l]) for l in W.ravel()} <= allowed
+    # quantize_activations=False forces 16-bit activations
+    p2 = QuantPolicy(allowed_bits=(8, 4), quantize_activations=False)
+    packed2, _, A2 = sample_packed(report, p2, 16, seed=0)
+    assert {int(packed2.levels[l]) for l in A2.ravel()} == {16}
+
+
+def test_heuristic_metrics_batch_match_scalar():
+    """Every Table-2 metric scored via the packed tables == its dict loop."""
+    report = _random_report(seed=5)
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3), pinned_substrings=())
+    packed, W, A = sample_packed(report, policy, 64, seed=2)
+    cfgs = [packed.decode(W[i], A[i]) for i in range(64)]
+    for mname, fn in ALL_METRICS.items():
+        vec = metric_values_batch(report, mname, packed.levels, W, A)
+        ref = np.array([fn(report, c) for c in cfgs])
+        np.testing.assert_allclose(vec, ref, rtol=1e-9, atol=1e-30)
+
+
+def test_fit_acts_missing_ranges_skips_instead_of_crashing():
+    """build_report(act_fn=None, tap_loss_fn=...) leaves act_ranges empty;
+    scoring sub-16-bit activations must skip those sites, not KeyError."""
+    report = SensitivityReport(
+        weight_traces={"a": 2.0}, act_traces={"s": 1.0, "t": 3.0},
+        weight_ranges={"a": (-1.0, 1.0)}, act_ranges={"t": (0.0, 2.0)},
+        param_sizes={"a": 10},
+    )
+    cfg = BitConfig({"a": 4}, {"s": 4, "t": 4})
+    expected = (2.0 * noise_power(-1, 1, 4)    # weights
+                + 3.0 * noise_power(0, 2, 4))  # ranged site only
+    assert np.isclose(report.fit(cfg), expected)
+    # packed path agrees and only materializes the ranged site
+    packed = report.packed((4, 8))
+    assert packed.act_names == ("t",)
+    W, A = packed.encode([cfg])
+    assert np.isclose(packed.fit_batch(W, A)[0], expected)
+
+
+def test_greedy_pinned_with_16_in_allowed_bits():
+    """Pinned blocks stay >= pinned_bits and may legitimately be upgraded
+    to 16 when 16 is an allowed level (regression for the old dead
+    ``nxt > max(levels)`` guard that pretended to forbid this)."""
+    report = _random_report()
+    policy = QuantPolicy(allowed_bits=(3, 4, 8, 16))
+    total = sum(report.param_sizes.values())
+
+    # tight budget: pinned block sits at its floor, never below
+    tight = greedy_allocate(report, policy, budget_bits=4.0 * total)
+    assert tight.weight_bits["moe/router"] >= 8
+    assert config_cost_bits(report, tight) <= 4.0 * total
+
+    # ample budget: everything (pinned included) reaches 16
+    ample = greedy_allocate(report, policy, budget_bits=17.0 * total)
+    assert all(b == 16 for b in ample.weight_bits.values())
+
+
+def test_greedy_budget_holds_when_pin_exceeds_allowed():
+    """pinned_bits above every allowed level: sanitize raises the pinned
+    block to 8 after allocation, so greedy must budget it at 8 up front
+    or the result overshoots the budget."""
+    report = _random_report()
+    policy = QuantPolicy(allowed_bits=(3, 4, 6))   # pinned_bits=8 unreachable
+    total = sum(report.param_sizes.values())
+    budget = 5.0 * total
+    cfg = greedy_allocate(report, policy, budget)
+    assert cfg.weight_bits["moe/router"] == 8
+    assert config_cost_bits(report, cfg) <= budget
 
 
 @pytest.fixture(scope="module")

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.fake_quant import fake_quant_pallas, fake_quant_per_channel_pallas
