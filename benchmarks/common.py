@@ -1,6 +1,7 @@
-"""Shared benchmark utilities: testbed training + CSV emission."""
+"""Shared benchmark utilities: testbed training + CSV/JSON emission."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, List
 
@@ -14,6 +15,15 @@ from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
 def emit(name: str, us_per_call: float, derived: str) -> str:
     line = f"{name},{us_per_call:.2f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def emit_json(name: str, payload: Dict) -> str:
+    """One machine-readable result line: ``<name> {json}`` (the serving
+    benchmarks report structured metrics — TTFT percentiles, tok/s,
+    occupancy — that don't fit the us-per-call CSV shape)."""
+    line = f"{name} {json.dumps(payload, sort_keys=True, default=str)}"
     print(line, flush=True)
     return line
 

@@ -18,6 +18,7 @@ MODULES = [
     ("fig4", "benchmarks.fig4_segmentation"),
     ("fig5", "benchmarks.fig5_assumptions"),
     ("kernels", "benchmarks.kernels_bench"),
+    ("serve", "benchmarks.serve_bench"),
     ("roofline", "benchmarks.roofline_report"),
 ]
 

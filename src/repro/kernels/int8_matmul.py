@@ -4,7 +4,13 @@ The quantized-serving hot path. TPU v5e executes int8×int8→int32 on the
 MXU at 2× bf16 throughput (394 TOPS); this kernel tiles (M,K)×(K,N) into
 MXU-aligned VMEM blocks, accumulates int32 in a VMEM scratch across the
 K grid axis, and dequantizes once on the final K step with per-channel
-weight scales and a per-tensor activation scale.
+weight scales and per-ROW activation scales.
+
+Per-row activation scales are what the continuous-batching engine needs:
+each batch row is one request slot quantized with its own dynamic scale,
+so a request's numerics never depend on which other requests share the
+batch. A scalar (per-tensor) activation scale is accepted too and simply
+broadcast over rows.
 
 Grid: (M/bm, N/bn, K/bk), K innermost so the scratch accumulator for a
 given (i, j) tile stays resident between K steps.
@@ -35,7 +41,7 @@ def _int8_mm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, k_steps: in
 
     @pl.when(k == k_steps - 1)
     def _dequant():
-        xs = xs_ref[0, 0]                     # per-tensor activation scale
+        xs = xs_ref[...]                      # (bm, 1) per-row activation scales
         ws = ws_ref[...]                      # (1, bn) per-channel weight scales
         o_ref[...] = (acc_ref[...].astype(jnp.float32) * xs * ws).astype(o_ref.dtype)
 
@@ -46,7 +52,8 @@ def int8_matmul_pallas(x_q: jnp.ndarray, w_q: jnp.ndarray, x_scale: jnp.ndarray,
                        w_scale: jnp.ndarray, bm: int = DEFAULT_BM,
                        bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
                        out_dtype=jnp.float32, interpret: bool = False):
-    """x_q: (M,K) int8; w_q: (K,N) int8; w_scale: (N,) fp32; x_scale scalar."""
+    """x_q: (M,K) int8; w_q: (K,N) int8; w_scale: (N,) fp32;
+    x_scale: scalar (per-tensor) or (M,)/(M,1) (per-row) fp32."""
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2, (x_q.shape, w_q.shape)
@@ -58,6 +65,10 @@ def int8_matmul_pallas(x_q: jnp.ndarray, w_q: jnp.ndarray, x_scale: jnp.ndarray,
         x_q = jnp.pad(x_q, ((0, pm), (0, pk)))
     if pk or pn:
         w_q = jnp.pad(w_q, ((0, pk), (0, pn)))
+    x_scale = jnp.asarray(x_scale, jnp.float32).reshape(-1)
+    if x_scale.size == 1:
+        x_scale = jnp.broadcast_to(x_scale, (m,))
+    x_scale = jnp.pad(x_scale, (0, pm))
     w_scale = jnp.pad(jnp.asarray(w_scale, jnp.float32).reshape(-1), (0, pn))
     m2, n2, k2p = m + pm, n + pn, k + pk
     k_steps = pl.cdiv(k2p, bk)
@@ -69,13 +80,12 @@ def int8_matmul_pallas(x_q: jnp.ndarray, w_q: jnp.ndarray, x_scale: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m2, n2), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q, jnp.asarray(x_scale, jnp.float32).reshape(1, 1),
-      w_scale.reshape(1, n2))
+    )(x_q, w_q, x_scale.reshape(m2, 1), w_scale.reshape(1, n2))
     return out[:m, :n]

@@ -51,7 +51,13 @@ def ef_sqnorm(g):
 
 
 def int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype=jnp.float32):
+    """x_scale: scalar (per-tensor) or (M,)/(M,1) per-row — per-row scales
+    keep each batch row's dequantization independent of its batch-mates
+    (continuous-batching parity)."""
     mode = _mode()
+    x_scale = jnp.asarray(x_scale, jnp.float32)
+    if x_scale.size > 1:
+        x_scale = x_scale.reshape(-1, 1)          # (M, 1) for row broadcast
     if mode == "ref":
         return _ref.int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype)
     return int8_matmul_pallas(x_q, w_q, x_scale, w_scale, out_dtype=out_dtype,

@@ -1,28 +1,38 @@
-"""Serving driver: batched prefill + decode with quantized weights.
+"""Serving CLI: thin driver over the ``repro.serve`` continuous-batching
+engine.
 
-The end-to-end inference path: initialize (or restore) a model, optionally
-post-training-quantize the weights per a FIT-derived bit configuration,
-prefill a batch of prompts, then decode tokens autoregressively,
-reporting throughput.
+Two traffic shapes:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \\
-      --batch 8 --prompt-len 64 --gen-len 32 --weight-bits 8
+  * closed-loop (default) — ``--batch`` identical requests at t=0, the
+    legacy benchmark shape; returns a dense ``generated`` matrix.
+  * open-loop — ``--requests N --rate R`` Poisson arrivals through the
+    load generator, exercising admission/eviction/backfill under load.
+
+Quantization: ``--weight-bits B`` fake-quantizes in fp storage (PTQ
+numerics check, any layout); adding ``--int8`` materializes REAL int8
+storage + a DequantContext (unrolled layout), and ``--int8-compute``
+routes those matmuls through the int8 MXU kernel path.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
+      --smoke --batch 8 --prompt-len 64 --gen-len 32 --weight-bits 8
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
+import json
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.models import init_params
-from repro.models.decode import decode_step, init_decode_state
+from repro.quant.policy import QuantPolicy
 from repro.quant.quantizer import QuantSpec, fake_quant_ref
+from repro.serve import (
+    Engine, EngineConfig, SamplingParams, poisson_requests,
+    quantize_params_int8, trace_requests)
 from repro.utils.logging import get_logger
 from repro.utils.pytree import map_with_names
 
@@ -30,13 +40,19 @@ log = get_logger("repro.serve")
 
 
 def quantize_weights(params, weight_bits: Optional[int],
-                     pinned=("norm", "ln", "router", "final")):
-    """PTQ: fake-quantize every matmul weight to ``weight_bits``."""
+                     policy: Optional[QuantPolicy] = None):
+    """PTQ: fake-quantize matmul weights to ``weight_bits`` (fp storage).
+
+    Pinning comes from ``QuantPolicy`` (DEFAULT_PINNED) — the same rule
+    set MPQ search uses, so serving and search never disagree about which
+    blocks stay high-precision.
+    """
     if weight_bits is None or weight_bits >= 16:
         return params
+    policy = policy or QuantPolicy()
 
     def one(name, leaf):
-        if leaf.ndim < 2 or any(s in name.lower() for s in pinned):
+        if not policy.quantizable(name, leaf.ndim):
             return leaf
         return fake_quant_ref(leaf, QuantSpec(bits=weight_bits))
 
@@ -44,71 +60,101 @@ def quantize_weights(params, weight_bits: Optional[int],
 
 
 def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
-          weight_bits: Optional[int], seed: int = 0) -> Dict:
+          weight_bits: Optional[int], seed: int = 0, int8: bool = False,
+          int8_compute: bool = False, n_requests: Optional[int] = None,
+          rate: float = 1.0, sampling: Optional[SamplingParams] = None,
+          prefill_chunk: int = 32, decode_burst: int = 16,
+          clock: str = "steps") -> Dict:
+    """Build the model + engine, run the load, return results + metrics."""
     cfg = smoke_config(arch) if smoke else get_config(arch)
+    if int8:
+        # per-layer dequant scales are path-keyed: needs unrolled layers
+        cfg = dataclasses.replace(cfg, scan_layers=False)
     params = init_params(cfg, jax.random.key(seed))
-    params = quantize_weights(params, weight_bits)
 
-    max_len = prompt_len + gen_len
-    rng = np.random.default_rng(seed)
-    if cfg.family == "audio":
-        prompts = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (batch, prompt_len, cfg.num_codebooks)),
-            jnp.int32)
+    scales = None
+    policy = QuantPolicy()
+    if int8 and weight_bits is None:
+        weight_bits = 8          # --int8 alone means W8 int8 storage
+    if weight_bits is not None and weight_bits < 16:
+        if int8:
+            params, scales = quantize_params_int8(params, weight_bits, policy)
+        else:
+            params = quantize_weights(params, weight_bits, policy)
+
+    sampling = sampling or SamplingParams()
+    if n_requests is None:
+        reqs = trace_requests(cfg, [(0.0, prompt_len, gen_len)] * batch,
+                              sampling=sampling, seed=seed)
     else:
-        prompts = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)
+        reqs = poisson_requests(
+            cfg, n_requests, rate,
+            prompt_len=(max(1, prompt_len // 2), prompt_len),
+            gen_len=(max(1, gen_len // 2), gen_len),
+            sampling=sampling, seed=seed)
 
-    step = jax.jit(lambda p, s, t: decode_step(p, s, t, cfg),
-                   donate_argnums=(1,))
+    ecfg = EngineConfig(
+        max_slots=batch, max_len=prompt_len + gen_len, max_new_tokens=gen_len,
+        prefill_chunk=min(prefill_chunk, max(prompt_len, 1)),
+        decode_burst=decode_burst, clock=clock, int8_compute=int8_compute)
+    engine = Engine(params, cfg, ecfg, scales=scales)
+    finished, metrics = engine.run(reqs)
+    summ = metrics.summary()
 
-    # ---- prefill (token-by-token replay keeps one compiled step) ----
-    state = init_decode_state(cfg, batch, max_len)
-    t0 = time.time()
-    logits = None
-    for i in range(prompt_len):
-        tok = prompts[:, i:i + 1]
-        logits, state = step(params, state, tok)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    # ---- decode ----
-    def sample(lg):
-        nxt = jnp.argmax(lg[:, -1:], axis=-1)
-        if cfg.family == "audio":
-            return nxt.astype(jnp.int32)           # (B, 1, CB)
-        return nxt.astype(jnp.int32)               # (B, 1)
-
-    generated = []
-    tok = sample(logits)
-    t0 = time.time()
-    for _ in range(gen_len):
-        generated.append(np.asarray(tok))
-        logits, state = step(params, state, tok)
-        tok = sample(logits)
-    jax.block_until_ready(logits)
-    t_decode = time.time() - t0
-
-    toks_per_s = batch * gen_len / max(t_decode, 1e-9)
-    log.info("%s batch=%d prompt=%d gen=%d bits=%s | prefill %.2fs, decode "
-             "%.2fs (%.1f tok/s)", cfg.name, batch, prompt_len, gen_len,
-             weight_bits, t_prefill, t_decode, toks_per_s)
-    return {"prefill_s": t_prefill, "decode_s": t_decode,
-            "tokens_per_s": toks_per_s,
-            "generated": np.concatenate(generated, axis=1)}
+    out = {
+        "prefill_s": metrics.prefill_s,
+        "decode_s": metrics.decode_s,
+        "tokens_per_s": summ["decode_tokens_per_s"] or 0.0,
+        "metrics": summ,
+        "requests": finished,
+    }
+    if n_requests is None:
+        # closed-loop: uniform lengths -> legacy dense (B, G) matrix
+        out["generated"] = np.stack([r.output_tokens for r in finished])
+    log.info("%s slots=%d bits=%s%s | prefill %.2fs, decode %.2fs "
+             "(%.1f tok/s, occupancy %.0f%%)", cfg.name, batch, weight_bits,
+             " int8" if int8 else "", metrics.prefill_s, metrics.decode_s,
+             out["tokens_per_s"], 100 * (summ["slot_occupancy"] or 0))
+    return out
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="slot count (batch capacity)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--weight-bits", type=int, default=None)
+    ap.add_argument("--int8", action="store_true",
+                    help="real int8 storage + DequantContext")
+    ap.add_argument("--int8-compute", action="store_true",
+                    help="route int8 blocks through the MXU kernel path")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="open-loop: number of Poisson requests")
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="open-loop arrival rate (requests per clock unit)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--clock", choices=("steps", "wall"), default="steps")
+    ap.add_argument("--json", default=None, help="write metrics JSON here")
     args = ap.parse_args()
-    serve(args.arch, args.smoke, args.batch, args.prompt_len, args.gen_len,
-          args.weight_bits)
+
+    out = serve(args.arch, args.smoke, args.batch, args.prompt_len,
+                args.gen_len, args.weight_bits, seed=args.seed,
+                int8=args.int8, int8_compute=args.int8_compute,
+                n_requests=args.requests, rate=args.rate,
+                sampling=SamplingParams(temperature=args.temperature,
+                                        top_k=args.top_k, top_p=args.top_p,
+                                        seed=args.seed),
+                clock=args.clock)
+    print(json.dumps(out["metrics"], indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out["metrics"], f, indent=2)
 
 
 if __name__ == "__main__":

@@ -91,9 +91,9 @@ def attention_apply(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
     if positions is None:
         positions = jnp.arange(s)
 
-    q = grad_barrier((x @ ctx.qw("wq", p["wq"])).reshape(b, s, h, hd))
-    k = grad_barrier((x @ ctx.qw("wk", p["wk"])).reshape(b, s, kv, hd))
-    v = grad_barrier((x @ ctx.qw("wv", p["wv"])).reshape(b, s, kv, hd))
+    q = grad_barrier(ctx.matmul("wq", x, p["wq"]).reshape(b, s, h, hd))
+    k = grad_barrier(ctx.matmul("wk", x, p["wk"]).reshape(b, s, kv, hd))
+    v = grad_barrier(ctx.matmul("wv", x, p["wv"]).reshape(b, s, kv, hd))
     # land on the attention layout BEFORE the GQA repeat: the seq
     # all-gather (SP boundary) then moves the small kv-head tensor, and
     # the repeat + head-shard below is a local broadcast/slice.
@@ -112,7 +112,7 @@ def attention_apply(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
         v = constrain(v, "batch", "seq_noshard", "heads", None)
     o = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
     o = ctx.tap("attn_out", o.reshape(b, s, h * hd))
-    return o @ ctx.qw("wo", p["wo"])
+    return ctx.matmul("wo", o, p["wo"])
 
 
 class KVCache(NamedTuple):
@@ -133,16 +133,23 @@ class KVCache(NamedTuple):
 def attention_decode(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
                      cache: KVCache, pos: jnp.ndarray
                      ) -> Tuple[jnp.ndarray, KVCache]:
-    """One-token decode. x: (B, 1, D); pos: () current position scalar."""
+    """One-token decode. x: (B, 1, D).
+
+    ``pos`` is either a () scalar (whole batch at one position — the
+    static-batch path) or a (B,) vector of per-slot positions (the
+    continuous-batching engine, where every slot runs its own request at
+    its own offset). Per-row cache scatter + per-row causal masks keep
+    each row's numerics identical to a batch-of-one decode.
+    """
     b = x.shape[0]
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = h // kv
     t = cache.k.shape[1]
 
-    q = (x @ ctx.qw("wq", p["wq"])).reshape(b, 1, h, hd)
-    knew = (x @ ctx.qw("wk", p["wk"])).reshape(b, 1, kv, hd)
-    vnew = (x @ ctx.qw("wv", p["wv"])).reshape(b, 1, kv, hd)
-    posb = jnp.broadcast_to(pos[None], (b, 1)) if pos.ndim == 0 else pos
+    q = ctx.matmul("wq", x, p["wq"]).reshape(b, 1, h, hd)
+    knew = ctx.matmul("wk", x, p["wk"]).reshape(b, 1, kv, hd)
+    vnew = ctx.matmul("wv", x, p["wv"]).reshape(b, 1, kv, hd)
+    posb = jnp.broadcast_to(pos[None], (b, 1)) if pos.ndim == 0 else pos[:, None]
     q = apply_rope(q, posb, cfg.rope_theta)
     knew = apply_rope(knew, posb, cfg.rope_theta)
 
@@ -157,10 +164,15 @@ def attention_decode(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
         return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_SCALE),
                         -127, 127).astype(jnp.int8)
 
-    kc = jax.lax.dynamic_update_slice_in_dim(cache.k, to_cache(knew), pos, 1) \
-        if pos.ndim == 0 else cache.k.at[:, pos[0]].set(to_cache(knew)[:, 0])
-    vc = jax.lax.dynamic_update_slice_in_dim(cache.v, to_cache(vnew), pos, 1) \
-        if pos.ndim == 0 else cache.v.at[:, pos[0]].set(to_cache(vnew)[:, 0])
+    if pos.ndim == 0:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, to_cache(knew), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, to_cache(vnew), pos, 1)
+        mask = jnp.arange(t)[None, None, None, :] <= pos
+    else:
+        rows = jnp.arange(b)
+        kc = cache.k.at[rows, pos].set(to_cache(knew)[:, 0])
+        vc = cache.v.at[rows, pos].set(to_cache(vnew)[:, 0])
+        mask = jnp.arange(t)[None, None, None, :] <= pos[:, None, None, None]
     kc = constrain(kc, "batch", "cache_seq", "kv_heads", None)
     vc = constrain(vc, "batch", "cache_seq", "kv_heads", None)
     k_eff = kc.astype(x.dtype) * KV_SCALE if quant_cache else kc
@@ -170,9 +182,8 @@ def attention_decode(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
     qg = q.reshape(b, kv, g, hd)
     sc = jnp.einsum("bkgd,btkd->bkgt", qg, k_eff,
                     preferred_element_type=jnp.float32) * (hd ** -0.5)
-    mask = jnp.arange(t)[None, None, None, :] <= pos
     sc = jnp.where(mask, sc, NEG_INF)
     pr = jax.nn.softmax(sc, axis=-1)
     o = jnp.einsum("bkgt,btkd->bkgd", pr.astype(v_eff.dtype), v_eff)
     o = ctx.tap("attn_out", o.reshape(b, 1, h * hd))
-    return o @ ctx.qw("wo", p["wo"]), KVCache(kc, vc)
+    return ctx.matmul("wo", o, p["wo"]), KVCache(kc, vc)

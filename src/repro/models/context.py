@@ -1,8 +1,8 @@
 """Forward-pass context: the single interception point for FIT and QAT.
 
-Every weight matmul calls ``ctx.qw(name, w)`` and every designated
-activation site calls ``ctx.tap(name, a)``. The context decides what
-happens there:
+Every weight matmul calls ``ctx.matmul(name, x, w)`` (which defaults to
+``x @ ctx.qw(name, w)``) and every designated activation site calls
+``ctx.tap(name, a)``. The context decides what happens there:
 
   * plain forward            — identity
   * QAT forward              — STE fake-quant with per-block bit widths
@@ -11,6 +11,11 @@ happens there:
                                body serves all layers)
   * FIT activation traces    — add a zero-valued tap parameter
   * calibration              — record min/max statistics
+  * int8 serving             — ``DequantContext``: weights live as int8;
+                               ``matmul`` either dequantizes at the point
+                               of use (fp path) or quantizes the
+                               activation row-wise and dispatches to the
+                               int8 MXU kernel (``kernels.ops``)
 
 Names are scoped with ``ctx.scope("layers/attn")`` so block paths align
 with the parameter-tree paths used by QuantPolicy / SensitivityReport.
@@ -65,6 +70,14 @@ class Context:
 
     def qw(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
         return w
+
+    def matmul(self, name: str, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        """The weight-matmul interception point: ``x @ qw(name, w)``.
+
+        Subclasses override to change the *compute* (not just the weight
+        value) — e.g. DequantContext routes int8-stored blocks through
+        the int8 MXU kernel instead of dequantize-then-fp-matmul."""
+        return x @ self.qw(name, w)
 
     def tap(self, name: str, a: jnp.ndarray) -> jnp.ndarray:
         return a
@@ -129,19 +142,51 @@ class CollectContext(Context):
 
 
 class DequantContext(Context):
-    """Serve-time weight dequantization: params hold int8 matmul weights;
-    ``qw`` upcasts with the per-block scale at the point of use. On TPU
-    the convert+scale fuses into the consuming matmul (or runs through
-    the int8 MXU kernel), so HBM reads stay 1 byte/element."""
+    """Serve-time quantized execution: params hold int8 matmul weights.
+
+    ``qw`` upcasts with the per-block (per-channel) scale at the point of
+    use, so the convert+scale fuses into the consuming matmul and HBM
+    reads stay 1 byte/element. With ``int8_compute=True``, ``matmul``
+    additionally quantizes the activation with a dynamic per-row scale
+    and dispatches to ``kernels.ops.int8_matmul`` (the Pallas MXU kernel
+    on TPU, the jnp reference elsewhere) — true W8A8 execution. Per-ROW
+    activation scales (not per-tensor) keep every batch row's numerics
+    independent of its batch-mates, which is what makes continuous-
+    batching output bit-identical to isolated decode.
+
+    Scales are keyed by the scoped block path ("layers/0/attn/wq"), so
+    quantized serving requires the unrolled (``scan_layers=False``)
+    parameter layout — under scan one compiled body serves all layers
+    and per-layer scales cannot be looked up by path.
+    """
 
     def __init__(self, scales: Mapping[str, jnp.ndarray], dtype,
-                 scope_prefix: str = ""):
+                 int8_compute: bool = False, scope_prefix: str = ""):
         super().__init__(scope_prefix)
         self.scales = scales
         self.dtype = dtype
+        self.int8_compute = int8_compute
 
     def qw(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
         s = self.scales.get(self.path(name))
         if s is None or w.dtype != jnp.int8:
             return w
         return (w.astype(jnp.float32) * s).astype(self.dtype)
+
+    def matmul(self, name: str, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        s = self.scales.get(self.path(name))
+        if s is None or w.dtype != jnp.int8:
+            return x @ w
+        if not self.int8_compute or w.ndim != 2:
+            return x @ (w.astype(jnp.float32) * s).astype(self.dtype)
+        from repro.kernels import ops as kops  # avoid import cycle at module load
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        # dynamic symmetric per-row activation scale: row b's quantization
+        # depends only on row b, preserving batch-composition invariance
+        amax = jnp.max(jnp.abs(x2), axis=-1, keepdims=True)
+        xs = jnp.maximum(amax, 1e-8) / 127.0                      # (M, 1)
+        xq = jnp.clip(jnp.round(x2 / xs), -127, 127).astype(jnp.int8)
+        y = kops.int8_matmul(xq, w, xs, s.reshape(1, -1),
+                             out_dtype=jnp.float32)
+        return y.astype(self.dtype).reshape(lead + (w.shape[-1],))

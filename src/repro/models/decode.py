@@ -9,6 +9,12 @@ State layouts (stacked on a leading layer dim for lax.scan):
 ``decode_step`` lowers as ONE jit (the serve_step of the dry-run): embeds
 the previous token, scans the layer stack updating caches in place
 (donated), and returns next-token logits.
+
+Continuous batching (``repro.serve``): ``pos`` may be a (B,) vector so
+every slot decodes its own request at its own offset; ``prefill_into``
+continues an existing state (chunked prefill); ``state_insert_slot``
+scatters a batch-1 prefilled state into one slot of a batched state
+(admission / backfill after eviction).
 """
 from __future__ import annotations
 
@@ -55,9 +61,13 @@ def _ssm_struct(cfg: ModelConfig, lead: Tuple[int, ...], b: int,
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      abstract: bool = False) -> DecodeState:
-    pos = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
-           else jnp.zeros((), jnp.int32))
+                      abstract: bool = False,
+                      per_slot_pos: bool = False) -> DecodeState:
+    """``per_slot_pos`` makes ``pos`` a (batch,) vector — each batch row
+    (slot) tracks its own sequence offset, as the serving engine needs."""
+    pshape = (batch,) if per_slot_pos else ()
+    pos = (jax.ShapeDtypeStruct(pshape, jnp.int32) if abstract
+           else jnp.zeros(pshape, jnp.int32))
     if cfg.family in ("dense", "moe", "audio", "vlm"):
         return DecodeState(pos=pos,
                            kv=_kv_struct(cfg, cfg.num_layers, batch, max_len, abstract))
@@ -109,8 +119,9 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
             caches = []
             for i in range(cfg.num_layers):
                 ci = jax.tree.map(lambda c: c[i], state.kv)
-                x, ci = _attn_mlp_block_decode(x, params["layers"][str(i)],
-                                               cfg, ctx, ci, pos)
+                with ctx.scope(f"layers/{i}"):
+                    x, ci = _attn_mlp_block_decode(x, params["layers"][str(i)],
+                                                   cfg, ctx, ci, pos)
                 caches.append(ci)
             new_kv = jax.tree.map(lambda *cs: jnp.stack(cs), *caches)
         else:
@@ -126,7 +137,9 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
             sts = []
             for i in range(cfg.num_layers):
                 si = jax.tree.map(lambda s: s[i], state.ssm)
-                x, si = _mamba_block_decode(x, params["layers"][str(i)], cfg, ctx, si)
+                with ctx.scope(f"layers/{i}"):
+                    x, si = _mamba_block_decode(x, params["layers"][str(i)],
+                                                cfg, ctx, si)
                 sts.append(si)
             new_ssm = jax.tree.map(lambda *ss: jnp.stack(ss), *sts)
         else:
@@ -144,13 +157,15 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
             kvs, ssms, rests = [], [], []
             for g in range(n_groups):
                 cg = jax.tree.map(lambda c: c[g], state.kv)
-                x, cg = _attn_mlp_block_decode(x, shared, cfg, ctx, cg, pos)
+                with ctx.scope("shared"):
+                    x, cg = _attn_mlp_block_decode(x, shared, cfg, ctx, cg, pos)
                 kvs.append(cg)
                 row = []
                 for i in range(cfg.attn_period):
                     si = jax.tree.map(lambda s: s[g, i], state.ssm)
-                    x, si = _mamba_block_decode(
-                        x, params["groups"][str(g)][str(i)], cfg, ctx, si)
+                    with ctx.scope(f"groups/{g}/{i}"):
+                        x, si = _mamba_block_decode(
+                            x, params["groups"][str(g)][str(i)], cfg, ctx, si)
                     row.append(si)
                 ssms.append(jax.tree.map(lambda *ss: jnp.stack(ss), *row))
             new_kv = jax.tree.map(lambda *cs: jnp.stack(cs), *kvs)
@@ -159,7 +174,9 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
             if state.rest is not None:
                 for i in range(rem):
                     si = jax.tree.map(lambda s: s[i], state.rest)
-                    x, si = _mamba_block_decode(x, params["rest"][str(i)], cfg, ctx, si)
+                    with ctx.scope(f"rest/{i}"):
+                        x, si = _mamba_block_decode(x, params["rest"][str(i)],
+                                                    cfg, ctx, si)
                     rests.append(si)
                 new_rest = jax.tree.map(lambda *ss: jnp.stack(ss), *rests)
         else:
@@ -190,38 +207,84 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
     return logits, new_state
 
 
+def prefill_into(params, state: DecodeState, tokens: jnp.ndarray,
+                 cfg: ModelConfig, ctx: Optional[Context] = None
+                 ) -> Tuple[jnp.ndarray, DecodeState]:
+    """Continue an existing decode state over a span of tokens.
+
+    The chunked-prefill primitive: one ``lax.scan`` of ``decode_step``
+    over ``tokens`` (B, C[, CB]) starting at ``state.pos`` — exact decode
+    numerics, one compiled dispatch per chunk instead of one per token.
+    Returns per-position logits (B, C, V) and the advanced state.
+    """
+    def step(st, tok):
+        logits, st = decode_step(params, st, tok[:, None], cfg, ctx=ctx)
+        return st, logits[:, 0]
+
+    order = jnp.moveaxis(tokens, 1, 0)          # (C, B[, CB])
+    state, logits_seq = jax.lax.scan(step, state, order)
+    return jnp.moveaxis(logits_seq, 0, 1), state
+
+
 def prefill(params, inputs: Dict[str, jnp.ndarray], cfg: ModelConfig,
-            max_len: int) -> Tuple[jnp.ndarray, DecodeState]:
+            max_len: int, ctx: Optional[Context] = None
+            ) -> Tuple[jnp.ndarray, DecodeState]:
     """Run the full prompt, returning last-position logits + filled state.
 
-    Implemented as forward() for logits plus a decode-state fill. For
-    attention families the cache fill reuses the forward K/V computation
-    pattern; for simplicity and correctness it replays tokens through
-    decode_step via lax.scan (exact same numerics as decode).
+    Implemented as a decode-state fill: replays tokens through
+    decode_step via lax.scan (``prefill_into`` — exact same numerics as
+    decode, one compiled dispatch).
     """
-    from repro.models.transformer import forward  # cycle-free local import
-
     tokens = inputs["tokens"]
-    b, s = tokens.shape[0], tokens.shape[1]
+    b = tokens.shape[0]
     state = init_decode_state(cfg, b, max_len)
 
     img_logits = None
     if cfg.family == "vlm" and "image_embed" in inputs:
         def istep(st, emb):
-            logits, st = decode_step(params, st, None, cfg, embed=emb[:, None])
+            logits, st = decode_step(params, st, None, cfg, embed=emb[:, None],
+                                     ctx=ctx)
             return st, logits[:, 0]
 
         img = jnp.moveaxis(inputs["image_embed"], 1, 0)     # (T_img, B, D)
         state, img_logits = jax.lax.scan(istep, state, img)
         img_logits = jnp.moveaxis(img_logits, 0, 1)
 
-    def step(st, tok):
-        logits, st = decode_step(params, st, tok[:, None], cfg)
-        return st, logits[:, 0]
-
-    order = jnp.moveaxis(tokens, 1, 0)          # (S, B[, CB])
-    state, logits_seq = jax.lax.scan(step, state, order)
-    logits_seq = jnp.moveaxis(logits_seq, 0, 1)
+    logits_seq, state = prefill_into(params, state, tokens, cfg, ctx=ctx)
     if img_logits is not None:
         logits_seq = jnp.concatenate([img_logits, logits_seq], axis=1)
     return logits_seq, state
+
+
+def state_insert_slot(cfg: ModelConfig, state: DecodeState,
+                      sub: DecodeState, slot) -> DecodeState:
+    """Scatter a batch-1 state ``sub`` into row ``slot`` of a batched state.
+
+    The admission/backfill primitive of the serving engine: a request is
+    prefilled alone (batch 1), then its caches/SSM states and position are
+    written into the slot it was assigned. ``slot`` may be a traced int32
+    scalar — one compiled specialization serves every slot.
+
+    Batch-axis layout per family (see the module docstring): KV caches and
+    plain SSM stacks carry batch at axis 1; hybrid per-group SSM states at
+    axis 2 (after the (group, period) leading dims).
+    """
+    def put(ax):
+        def one(dst, src):
+            idx = (slice(None),) * ax + (slot,)
+            return dst.at[idx].set(jax.lax.index_in_dim(src, 0, ax,
+                                                        keepdims=False))
+        return one
+
+    pos = state.pos
+    sub_pos = sub.pos.reshape(()) if sub.pos.ndim else sub.pos
+    pos = pos.at[slot].set(sub_pos) if pos.ndim else sub_pos
+    kv = ssm = rest = None
+    if state.kv is not None:
+        kv = jax.tree.map(put(1), state.kv, sub.kv)
+    if state.ssm is not None:
+        ssm_ax = 2 if cfg.family == "hybrid" else 1
+        ssm = jax.tree.map(put(ssm_ax), state.ssm, sub.ssm)
+    if state.rest is not None:
+        rest = jax.tree.map(put(1), state.rest, sub.rest)
+    return DecodeState(pos=pos, kv=kv, ssm=ssm, rest=rest)

@@ -91,17 +91,17 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndar
 def mlp_apply(x: jnp.ndarray, p: Dict[str, jnp.ndarray], act: str, ctx) -> jnp.ndarray:
     """SwiGLU / GELU / squared-ReLU MLP with quant hooks."""
     if act == "swiglu":
-        up = x @ ctx.qw("w_up", p["w_up"])
-        gate = jax.nn.silu(x @ ctx.qw("w_gate", p["w_gate"]))
+        up = ctx.matmul("w_up", x, p["w_up"])
+        gate = jax.nn.silu(ctx.matmul("w_gate", x, p["w_gate"]))
         h = ctx.tap("mlp_h", up * gate)
     elif act == "gelu":
-        h = ctx.tap("mlp_h", jax.nn.gelu(x @ ctx.qw("w_up", p["w_up"])))
+        h = ctx.tap("mlp_h", jax.nn.gelu(ctx.matmul("w_up", x, p["w_up"])))
     elif act == "relu2":
-        h = jax.nn.relu(x @ ctx.qw("w_up", p["w_up"]))
+        h = jax.nn.relu(ctx.matmul("w_up", x, p["w_up"]))
         h = ctx.tap("mlp_h", h * h)
     else:
         raise ValueError(act)
-    return h @ ctx.qw("w_down", p["w_down"])
+    return ctx.matmul("w_down", h, p["w_down"])
 
 
 def init_mlp(key, d_model: int, d_ff: int, act: str, dtype, abstract: bool):

@@ -85,11 +85,11 @@ def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 def _project_in(x: jnp.ndarray, prm: Dict, ctx):
     """x -> (z, xs, B, C, dt) via the split segment projections."""
-    z = grad_barrier(x @ ctx.qw("wz", prm["wz"]))
-    xs = grad_barrier(x @ ctx.qw("wx", prm["wx"]))
-    Bm = grad_barrier(x @ ctx.qw("wB", prm["wB"]))
-    Cm = grad_barrier(x @ ctx.qw("wC", prm["wC"]))
-    dt = grad_barrier(x @ ctx.qw("wdt", prm["wdt"]))
+    z = grad_barrier(ctx.matmul("wz", x, prm["wz"]))
+    xs = grad_barrier(ctx.matmul("wx", x, prm["wx"]))
+    Bm = grad_barrier(ctx.matmul("wB", x, prm["wB"]))
+    Cm = grad_barrier(ctx.matmul("wC", x, prm["wC"]))
+    dt = grad_barrier(ctx.matmul("wdt", x, prm["wdt"]))
     return z, xs, Bm, Cm, dt
 
 
@@ -199,7 +199,7 @@ def mamba2_apply(x: jnp.ndarray, prm: Dict, cfg: ModelConfig, ctx) -> jnp.ndarra
     y = y.reshape(b, s, di).astype(x.dtype)
     y = ctx.tap("ssd_out", y)
     y = rmsnorm(y * jax.nn.silu(z), prm["norm_w"], cfg.norm_eps).astype(x.dtype)
-    return y @ ctx.qw("out_proj", prm["out_proj"])
+    return ctx.matmul("out_proj", y, prm["out_proj"])
 
 
 class MambaState(NamedTuple):
@@ -249,5 +249,5 @@ def mamba2_decode(x: jnp.ndarray, prm: Dict, cfg: ModelConfig, ctx,
     y = y + prm["D"][None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(b, di).astype(x.dtype)
     y = rmsnorm(y * jax.nn.silu(z), prm["norm_w"], cfg.norm_eps).astype(x.dtype)
-    out = (y @ ctx.qw("out_proj", prm["out_proj"]))[:, None, :]
+    out = ctx.matmul("out_proj", y, prm["out_proj"])[:, None, :]
     return out, MambaState(hnew, new_conv)

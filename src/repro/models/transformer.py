@@ -237,7 +237,7 @@ def embed_inputs(params, inputs: Dict[str, jnp.ndarray], cfg: ModelConfig,
 
 def logits_from_hidden(params, x, cfg: ModelConfig, ctx) -> jnp.ndarray:
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = x @ ctx.qw("head", params["head"])
+    logits = ctx.matmul("head", x, params["head"])
     if cfg.family == "audio":
         b, s, _ = logits.shape
         logits = logits.reshape(b, s, cfg.num_codebooks, vocab_padded(cfg))

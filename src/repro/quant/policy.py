@@ -50,6 +50,15 @@ class QuantPolicy:
     def is_pinned(self, name: str) -> bool:
         return any(s in name.lower() for s in self.pinned_substrings)
 
+    def quantizable(self, name: str, ndim: int) -> bool:
+        """Whether a weight block may be quantized below ``pinned_bits``.
+
+        The ONE rule shared by serving PTQ (`launch/serve.py`,
+        `repro.serve.quantized`) and MPQ search, so both always pin the
+        same blocks: vectors (norm scales, biases, conv tails) and pinned
+        substrings stay high-precision."""
+        return ndim >= 2 and not self.is_pinned(name)
+
     def pinned_mask(self, names: Sequence[str]) -> np.ndarray:
         """Boolean (len(names),) mask of pinned blocks — the vectorized
         counterpart of ``is_pinned`` for array-backed scoring."""

@@ -1,0 +1,21 @@
+"""repro.serve — continuous-batching quantized inference engine.
+
+FIT's deployment story: take the ``BitConfig`` a sensitivity report
+recommends, materialize it as real int8 storage, and serve it under
+realistic request loads with continuous batching. See ``engine.py`` for
+the architecture and ROADMAP.md for the north star this serves.
+"""
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.loadgen import poisson_requests, synth_prompt, trace_requests
+from repro.serve.metrics import EngineMetrics
+from repro.serve.quantized import (
+    bit_config_from_report, make_dequant_context, quantize_params_int8)
+from repro.serve.request import Request, RequestStatus
+from repro.serve.sampling import SamplingParams, request_keys, sample_tokens
+
+__all__ = [
+    "Engine", "EngineConfig", "EngineMetrics", "Request", "RequestStatus",
+    "SamplingParams", "bit_config_from_report", "make_dequant_context",
+    "poisson_requests", "quantize_params_int8", "request_keys",
+    "sample_tokens", "synth_prompt", "trace_requests",
+]

@@ -1,0 +1,444 @@
+"""Continuous-batching inference engine.
+
+Architecture (see README "Serving" and ROADMAP.md):
+
+    loadgen ──> arrival queue ──> admission ──> slots [0..S) ──> finished
+                                   │                 ▲
+                                   │ chunked prefill │ eviction on
+                                   ▼ (batch-1 scan)  │ EOS / max-len,
+                              state_insert_slot ─────┘ immediate backfill
+
+Two compiled step functions drive everything, regardless of how many
+requests flow through:
+
+  * ``engine_step`` — ONE decode step × ``steps`` (a fused ``lax.scan``
+    burst) for the whole slot batch: per-slot positions, per-request
+    seeded sampling, masked output-buffer writes. Inactive slots ride
+    along (their position is frozen; their state is fully overwritten at
+    backfill), so the shape never changes and nothing recompiles.
+  * ``prefill_chunk`` — ``models.decode.prefill_into``'s lax.scan over
+    one prompt chunk at batch 1. Chunking bounds both compile count
+    (≤ chunk_size distinct shapes, cached across requests) and the
+    decode-latency bubble a long prompt would otherwise cause: the
+    scheduler interleaves in-flight decode bursts between chunks.
+
+Numerics contract: every batch row is computed independently (row-wise
+matmuls, per-row cache scatter, per-row causal mask, per-row activation
+scales on the int8 path, per-request sampling keys), so a request's
+tokens are bit-identical to running it alone — the property the parity
+tests in ``tests/test_serve.py`` pin down.
+
+Quantized serving: pass ``scales`` from ``repro.serve.quantized`` and the
+engine runs the whole decode graph through a ``DequantContext`` — int8
+weight storage, optionally int8 MXU matmuls (``int8_compute=True``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models.context import Context, DequantContext
+from repro.models.decode import (
+    decode_step, init_decode_state, prefill_into, state_insert_slot)
+from repro.serve.metrics import EngineMetrics
+from repro.serve.request import Request, RequestStatus
+from repro.serve.sampling import greedy_tokens, request_keys, sample_tokens
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.serve.engine")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine shape: slot count, KV capacity, scheduling grain."""
+
+    max_slots: int = 4
+    max_len: int = 256            # per-slot KV / position capacity
+    max_new_tokens: int = 128     # output-buffer width
+    prefill_chunk: int = 32       # prompt tokens per compiled prefill call
+    decode_burst: int = 16        # decode steps fused per compiled dispatch
+    interleave_steps: int = 4     # decode steps run between prefill chunks
+    clock: str = "steps"          # "steps" (deterministic) | "wall" (seconds)
+    int8_compute: bool = False    # route int8 blocks through the MXU kernel
+
+
+class Engine:
+    """Slot-based continuous-batching engine over ``decode_step``."""
+
+    def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
+                 scales: Optional[Dict[str, jnp.ndarray]] = None):
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.scales = dict(scales) if scales else {}
+        self._audio = cfg.family == "audio"
+
+        S, G = ecfg.max_slots, ecfg.max_new_tokens
+        cb = (cfg.num_codebooks,) if self._audio else ()
+        self._tok_shape = (S, 1) + cb
+        self._out_shape = (S, G) + cb
+
+        def make_ctx(scales):
+            if not scales:
+                return Context()
+            return DequantContext(scales, cfg.param_dtype,
+                                  int8_compute=ecfg.int8_compute)
+
+        def prefill_fn(params, scales, state, toks):
+            return prefill_into(params, state, toks, cfg, ctx=make_ctx(scales))
+
+        def sample_first_fn(scales, logits_last, seed, temp, top_k, top_p):
+            del scales
+            lg = logits_last[..., :cfg.vocab_size]
+            keys = request_keys(seed, jnp.zeros_like(seed))
+            return sample_tokens(lg, keys, temp, top_k, top_p)
+
+        def insert_fn(state, sub, slot, tok, tok0, out, slots, seed, temp,
+                      top_k, top_p, budget):
+            """Admit into ``slot``: scatter the prefilled state + write the
+            slot-table row. All slot bookkeeping lives on device so decode
+            bursts take no host->device transfers."""
+            state = state_insert_slot(cfg, state, sub, slot)
+            tok = tok.at[slot].set(tok0)
+            out = out.at[slot, 0].set(tok0[0])
+            slots = {
+                "active": slots["active"].at[slot].set(True),
+                "nwritten": slots["nwritten"].at[slot].set(1),
+                "seeds": slots["seeds"].at[slot].set(seed),
+                "temps": slots["temps"].at[slot].set(temp),
+                "top_ks": slots["top_ks"].at[slot].set(top_k),
+                "top_ps": slots["top_ps"].at[slot].set(top_p),
+                "budget": slots["budget"].at[slot].set(budget),
+            }
+            return state, tok, out, slots
+
+        def deactivate_fn(slots, slot):
+            return dict(slots, active=slots["active"].at[slot].set(False))
+
+        def engine_step_fn(params, scales, state, tok, out, slots, steps,
+                           mode):
+            ctx = make_ctx(scales)
+            active, nwritten = slots["active"], slots["nwritten"]
+            act_tok = active.reshape((-1,) + (1,) * (tok.ndim - 1))
+
+            def body(carry, i):
+                state, tok = carry
+                logits, new = decode_step(params, state, tok, cfg, ctx=ctx)
+                # inactive slots: freeze position (cache/ssm writes are
+                # harmless — fully overwritten at backfill)
+                new = new._replace(pos=jnp.where(active, new.pos, state.pos))
+                lg = logits[:, 0, ..., :cfg.vocab_size]
+                # ``mode`` statically specializes the sampler to what the
+                # ACTIVE requests need: per-row outputs are identical
+                # across modes, so the specialization is invisible to
+                # parity — it only removes dead compute (sorts / PRNG)
+                if mode == "greedy":
+                    nxt = greedy_tokens(lg)
+                else:
+                    keys = request_keys(slots["seeds"], nwritten + i)
+                    nxt = sample_tokens(lg, keys, slots["temps"],
+                                        slots["top_ks"], slots["top_ps"],
+                                        skip_filters=(mode == "nofilter"))
+                tok = jnp.where(act_tok, nxt[:, None], tok)
+                return (new, tok), nxt
+
+            (state, tok), ys = jax.lax.scan(
+                body, (state, tok), jnp.arange(steps))
+            # one scatter per burst (a per-step scatter in the scan body
+            # costs ~2x the whole decode step on CPU): ys is (steps, S
+            # [, CB]). Inactive slots and columns past a slot's token
+            # budget get an out-of-range column and are dropped — bursts
+            # may overshoot a nearly-done slot so the batch keeps moving.
+            cols = nwritten[None, :] + jnp.arange(steps)[:, None]
+            keep = active[None, :] & (cols < slots["budget"][None, :])
+            cols = jnp.where(keep, cols, out.shape[1])
+            rows = jnp.broadcast_to(jnp.arange(ecfg.max_slots)[None, :],
+                                    cols.shape)
+            out = out.at[rows, cols].set(ys, mode="drop")
+            slots = dict(slots, nwritten=jnp.minimum(
+                nwritten + steps * active, slots["budget"]))
+            return state, tok, out, slots
+
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
+        self._sample_first = jax.jit(sample_first_fn)
+        self._insert = jax.jit(insert_fn, donate_argnums=(0, 3, 5, 6))
+        self._deactivate = jax.jit(deactivate_fn, donate_argnums=(0,))
+        self._engine_step = jax.jit(engine_step_fn,
+                                    static_argnames=("steps", "mode"),
+                                    donate_argnums=(2, 3, 4, 5))
+        self._warmed_modes: set = set()
+
+    def _fresh_slot_table(self) -> Dict[str, jnp.ndarray]:
+        S = self.ecfg.max_slots
+        return {
+            "active": jnp.zeros(S, bool),
+            "nwritten": jnp.zeros(S, jnp.int32),
+            "seeds": jnp.zeros(S, jnp.int32),
+            "temps": jnp.zeros(S, jnp.float32),
+            "top_ks": jnp.zeros(S, jnp.int32),
+            "top_ps": jnp.ones(S, jnp.float32),
+            "budget": jnp.zeros(S, jnp.int32),
+        }
+
+    @staticmethod
+    def _mode_for(sampling_params) -> str:
+        """The cheapest sampler specialization that serves these requests
+        exactly (see engine_step_fn: outputs are mode-invariant)."""
+        if all(s.temperature <= 0 for s in sampling_params):
+            return "greedy"
+        if all(s.top_k <= 0 and s.top_p >= 1 for s in sampling_params):
+            return "nofilter"
+        return "full"
+
+    def warmup(self, modes: Sequence[str] = ("greedy",)) -> None:
+        """Compile every shape the serving loop dispatches: all power-of-
+        two burst sizes (per sampler mode), the full prefill chunk, and
+        the per-request admission helpers. Without this the first
+        requests pay compile time inside the latency/throughput numbers.
+        ``run`` calls this with the modes its request set needs."""
+        modes = [m for m in modes if m not in self._warmed_modes]
+        if not modes and self._warmed_modes:
+            return
+        cfg, ecfg = self.cfg, self.ecfg
+        state = init_decode_state(cfg, ecfg.max_slots, ecfg.max_len,
+                                  per_slot_pos=True)
+        tok = jnp.zeros(self._tok_shape, jnp.int32)
+        out = jnp.zeros(self._out_shape, jnp.int32)
+        slots = self._fresh_slot_table()
+        for mode in modes:
+            k = 1
+            while k <= ecfg.decode_burst:
+                state, tok, out, slots = self._engine_step(
+                    self.params, self.scales, state, tok, out, slots,
+                    steps=k, mode=mode)
+                k *= 2
+            self._warmed_modes.add(mode)
+        cb = self._tok_shape[2:]
+        ps = init_decode_state(cfg, 1, ecfg.max_len)
+        logits, ps = self._prefill(
+            self.params, self.scales, ps,
+            jnp.zeros((1, ecfg.prefill_chunk) + cb, jnp.int32))
+        z1 = jnp.zeros(1, jnp.int32)
+        tok0 = self._sample_first(self.scales, logits[:, -1], z1,
+                                  jnp.zeros(1, jnp.float32), z1,
+                                  jnp.ones(1, jnp.float32))
+        state, tok, out, slots = self._insert(
+            state, ps, jnp.int32(0), tok, tok0, out, slots, jnp.int32(0),
+            jnp.float32(0), jnp.int32(0), jnp.float32(1), jnp.int32(1))
+        slots = self._deactivate(slots, jnp.int32(0))
+        jax.block_until_ready(slots["active"])
+
+    # ------------------------------------------------------------------
+    # clock
+    # ------------------------------------------------------------------
+    def _now(self) -> float:
+        if self.ecfg.clock == "wall":
+            return time.perf_counter() - self._t0
+        return float(self._ticks)
+
+    def _advance_to(self, t: float) -> None:
+        if self.ecfg.clock == "wall":
+            dt = t - self._now()
+            if dt > 0:
+                time.sleep(min(dt, 0.05))
+        else:
+            self._ticks = max(self._ticks, int(math.ceil(t)))
+
+    # ------------------------------------------------------------------
+    # run loop
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request]
+            ) -> Tuple[List[Request], EngineMetrics]:
+        """Serve ``requests`` to completion; returns (finished, metrics)."""
+        # the aggregate mode is correct for any subset of the requests; a
+        # burst uses the cheapest warmed mode its active slots allow
+        self._run_mode = (self._mode_for([r.sampling for r in requests])
+                          if requests else "greedy")
+        self.warmup({"greedy", self._run_mode})
+        cfg, ecfg = self.cfg, self.ecfg
+        S = ecfg.max_slots
+        self._state = init_decode_state(cfg, S, ecfg.max_len,
+                                        per_slot_pos=True)
+        self._tok = jnp.zeros(self._tok_shape, jnp.int32)
+        self._out = jnp.zeros(self._out_shape, jnp.int32)
+        # device-resident slot table (bursts take zero host->device
+        # transfers) + host mirrors for scheduling decisions
+        self._dslots = self._fresh_slot_table()
+        self._slots: List[Optional[Request]] = [None] * S
+        self._active = np.zeros(S, bool)
+        self._nwritten = np.zeros(S, np.int64)
+        self._budget = np.zeros(S, np.int64)
+        self._ticks = 0
+        self._t0 = time.perf_counter()
+        self.metrics = EngineMetrics(max_slots=S)
+        finished: List[Request] = []
+
+        pending = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival_time, r.id)))
+
+        while pending or self._active.any():
+            # ---- admission: fill free slots with arrived requests ----
+            while (pending and not self._active.all()
+                   and pending[0].arrival_time <= self._now()):
+                self._admit(pending.popleft())
+                self._harvest(finished)          # max_new_tokens == 1
+            if not self._active.any():
+                if pending:
+                    self._advance_to(pending[0].arrival_time)
+                continue
+
+            # ---- decode burst ----
+            # size by the SOONEST-finishing active slot (zero overshoot,
+            # freed slot backfills right after), but floor at 4 steps so
+            # dispatch overhead amortizes — a nearly-done slot overshoots
+            # at most 3 steps, and the budget clamp drops those writes
+            remaining = (self._budget - self._nwritten)[self._active]
+            k = min(ecfg.decode_burst, int(remaining.min()))
+            if k < 4:
+                k = min(ecfg.decode_burst, 4, int(remaining.max()))
+            if (pending and not self._active.all()
+                    and self.ecfg.clock == "steps"):
+                # a free slot exists: don't decode past the next arrival.
+                # Only meaningful in the step clock, where the gap IS a
+                # step count; in wall mode a burst is ~ms, so admission
+                # latency is bounded by the burst itself.
+                gap = pending[0].arrival_time - self._now()
+                if gap > 0:
+                    k = max(1, min(k, int(math.ceil(gap))))
+            self._burst(max(k, 1))
+            self._harvest(finished)
+
+        finished.sort(key=lambda r: r.id)
+        return finished, self.metrics
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request) -> None:
+        ecfg = self.ecfg
+        slot = int(np.flatnonzero(~self._active)[0])
+        req.slot, req.status = slot, RequestStatus.PREFILLING
+        req.t_admitted = self._now()
+        if req.prompt_len >= ecfg.max_len:
+            raise ValueError(
+                f"request {req.id}: prompt ({req.prompt_len}) does not fit "
+                f"the engine's max_len ({ecfg.max_len})")
+        # token budget is bounded by BOTH the KV capacity and the output
+        # buffer width — without the latter, tokens past the buffer would
+        # be computed and then scatter-dropped silently
+        budget = min(ecfg.max_len - req.prompt_len, ecfg.max_new_tokens)
+        if req.max_new_tokens > budget:
+            log.warning("request %d: max_new_tokens %d clipped to %d "
+                        "(max_len %d, max_new_tokens %d)", req.id,
+                        req.max_new_tokens, budget, ecfg.max_len,
+                        ecfg.max_new_tokens)
+            req.max_new_tokens = budget
+
+        pstate = init_decode_state(self.cfg, 1, ecfg.max_len)
+        prompt = jnp.asarray(req.prompt)[None]               # (1, P[, CB])
+        logits = None
+        for lo in range(0, req.prompt_len, ecfg.prefill_chunk):
+            chunk = prompt[:, lo:lo + ecfg.prefill_chunk]
+            t0 = time.perf_counter()
+            logits, pstate = self._prefill(self.params, self.scales,
+                                           pstate, chunk)
+            jax.block_until_ready(logits)
+            self.metrics.record_prefill(time.perf_counter() - t0,
+                                        chunk.shape[1])
+            if self.ecfg.clock == "steps":
+                self._ticks += chunk.shape[1]
+            # chunked prefill: keep in-flight decodes moving between
+            # chunks — but only once the batch is nearly full (during the
+            # initial ramp it's better to fill slots first and decode at
+            # full occupancy than to burn low-occupancy bursts)
+            if (ecfg.interleave_steps
+                    and int(self._active.sum()) >= max(1, ecfg.max_slots - 1)
+                    and lo + ecfg.prefill_chunk < req.prompt_len):
+                rem = (self._budget - self._nwritten)[self._active]
+                self._burst(min(ecfg.interleave_steps, int(rem.min())))
+
+        s = req.sampling
+        tok0 = self._sample_first(
+            self.scales, logits[:, -1],
+            jnp.asarray([s.seed], jnp.int32),
+            jnp.asarray([s.temperature], jnp.float32),
+            jnp.asarray([s.top_k], jnp.int32),
+            jnp.asarray([s.top_p], jnp.float32))
+        self._state, self._tok, self._out, self._dslots = self._insert(
+            self._state, pstate, jnp.int32(slot), self._tok, tok0, self._out,
+            self._dslots, jnp.int32(s.seed), jnp.float32(s.temperature),
+            jnp.int32(s.top_k), jnp.float32(s.top_p),
+            jnp.int32(req.max_new_tokens))
+
+        self._slots[slot] = req
+        self._active[slot] = True
+        self._nwritten[slot] = 1
+        self._budget[slot] = req.max_new_tokens
+        req.t_first_token = self._now()
+        req.status = RequestStatus.RUNNING
+
+    # ------------------------------------------------------------------
+    def _burst(self, steps: int) -> None:
+        if steps <= 0:
+            return
+        # round down to a power of two: callers pass upper bounds, and a
+        # bounded set of burst shapes keeps the compile count at
+        # O(log decode_burst) instead of one per distinct remaining-count
+        steps = 1 << (steps.bit_length() - 1)
+        exact = self._mode_for([self._slots[b].sampling
+                                for b in np.flatnonzero(self._active)])
+        mode = exact if exact in self._warmed_modes else self._run_mode
+        t0 = time.perf_counter()
+        self._state, self._tok, self._out, self._dslots = self._engine_step(
+            self.params, self.scales, self._state, self._tok, self._out,
+            self._dslots, steps=steps, mode=mode)
+        jax.block_until_ready(self._tok)
+        # host mirror of the device-side clamp (tokens past a slot's
+        # budget were dropped)
+        before = self._nwritten[self._active]
+        after = np.minimum(before + steps, self._budget[self._active])
+        self._nwritten[self._active] = after
+        self.metrics.record_burst(time.perf_counter() - t0, steps,
+                                  int(self._active.sum()),
+                                  n_tokens=int((after - before).sum()))
+        if self.ecfg.clock == "steps":
+            self._ticks += steps
+
+    # ------------------------------------------------------------------
+    def _harvest(self, finished: List[Request]) -> None:
+        """Evict finished slots (max-len/max-new or EOS) and record them."""
+        if not self._active.any():
+            return
+        if ((self._nwritten < self._budget)[self._active].all()
+                and all(self._slots[b].eos_id is None
+                        for b in np.flatnonzero(self._active))):
+            return                      # nothing can have finished
+        for b in np.flatnonzero(self._active):
+            req = self._slots[b]
+            count = int(self._nwritten[b])
+            done = count >= self._budget[b]
+            toks = None
+            if done or req.eos_id is not None:
+                toks = np.asarray(self._out[b, :count])
+                if req.eos_id is not None:
+                    flat = toks if toks.ndim == 1 else toks[:, 0]
+                    hits = np.flatnonzero(flat == req.eos_id)
+                    if hits.size:
+                        toks = toks[:hits[0] + 1]
+                        done = True
+            if not done:
+                continue
+            req.output_tokens = toks
+            req.t_finished = self._now()
+            req.status = RequestStatus.FINISHED
+            self.metrics.record_request(req)
+            finished.append(req)
+            self._slots[b] = None          # slot freed: backfilled by the
+            self._active[b] = False        # admission loop next iteration
+            self._dslots = self._deactivate(self._dslots, jnp.int32(b))

@@ -1,0 +1,89 @@
+"""Load generation: Poisson / trace-driven request streams with synthetic
+prompts.
+
+Two shapes of load:
+
+  * ``poisson_requests`` — open-loop arrivals with exponential
+    inter-arrival gaps at a target rate (requests per clock unit), the
+    standard serving-benchmark model. Prompt and generation lengths draw
+    uniformly from ranges, so slots free up at different times and the
+    engine's eviction/backfill path is continuously exercised.
+  * ``trace_requests`` — explicit (arrival, prompt_len, gen_len) tuples,
+    for deterministic tests and replaying recorded traffic.
+
+All randomness is seeded; the same seed reproduces the same trace.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.serve.request import Request
+from repro.serve.sampling import SamplingParams
+
+LenRange = Union[int, Tuple[int, int]]
+
+
+def _draw(rng: np.random.Generator, r: LenRange) -> int:
+    if isinstance(r, int):
+        return r
+    lo, hi = r
+    return int(rng.integers(lo, hi + 1))
+
+
+def synth_prompt(rng: np.random.Generator, length: int, cfg: ModelConfig
+                 ) -> np.ndarray:
+    """Random token prompt with the family's shape ((P,) or (P, CB))."""
+    shape = (length, cfg.num_codebooks) if cfg.family == "audio" else (length,)
+    return rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
+
+
+def poisson_requests(cfg: ModelConfig, n: int, rate: float,
+                     prompt_len: LenRange = (16, 64),
+                     gen_len: LenRange = (8, 32),
+                     sampling: Optional[SamplingParams] = None,
+                     eos_id: Optional[int] = None,
+                     seed: int = 0) -> list:
+    """``n`` requests with Poisson arrivals at ``rate`` per clock unit."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), n)
+    arrivals = np.cumsum(gaps)
+    base = sampling or SamplingParams()
+    out = []
+    for i in range(n):
+        out.append(Request(
+            id=i,
+            prompt=synth_prompt(rng, _draw(rng, prompt_len), cfg),
+            max_new_tokens=_draw(rng, gen_len),
+            arrival_time=float(arrivals[i]),
+            sampling=SamplingParams(temperature=base.temperature,
+                                    top_k=base.top_k, top_p=base.top_p,
+                                    seed=base.seed + i),
+            eos_id=eos_id,
+        ))
+    return out
+
+
+def trace_requests(cfg: ModelConfig,
+                   trace: Iterable[Tuple[float, int, int]],
+                   sampling: Optional[SamplingParams] = None,
+                   eos_id: Optional[int] = None,
+                   seed: int = 0) -> list:
+    """Requests from explicit (arrival_time, prompt_len, gen_len) rows."""
+    rng = np.random.default_rng(seed)
+    base = sampling or SamplingParams()
+    out = []
+    for i, (at, plen, glen) in enumerate(trace):
+        out.append(Request(
+            id=i,
+            prompt=synth_prompt(rng, int(plen), cfg),
+            max_new_tokens=int(glen),
+            arrival_time=float(at),
+            sampling=SamplingParams(temperature=base.temperature,
+                                    top_k=base.top_k, top_p=base.top_p,
+                                    seed=base.seed + i),
+            eos_id=eos_id,
+        ))
+    return out

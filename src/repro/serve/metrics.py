@@ -1,0 +1,86 @@
+"""Serving metrics: TTFT, per-token decode latency, throughput, occupancy.
+
+The engine reports events (prefill chunks, decode bursts, request
+completions); ``summary()`` reduces them to the numbers a serving
+dashboard wants — p50/p95 TTFT and token latency, decode tokens/s, and
+mean slot occupancy (the continuous-batching figure of merit: a static
+batch drains to one straggler, continuous batching keeps slots full).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def _pct(xs: List[float], q: float) -> Optional[float]:
+    return float(np.percentile(np.asarray(xs), q)) if xs else None
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    max_slots: int = 1
+
+    # raw event streams
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    e2e_latencies: List[float] = dataclasses.field(default_factory=list)
+    token_lat_s: List[float] = dataclasses.field(default_factory=list)
+    prefill_s: float = 0.0
+    prefill_tokens: int = 0
+    decode_s: float = 0.0
+    decode_tokens: int = 0
+    decode_steps: int = 0
+    occupied_slot_steps: int = 0
+    n_finished: int = 0
+    prefill_dispatches: int = 0
+
+    def record_prefill(self, wall_dt: float, n_tokens: int) -> None:
+        self.prefill_s += wall_dt
+        self.prefill_tokens += n_tokens
+        self.prefill_dispatches += 1
+
+    def record_burst(self, wall_dt: float, steps: int, n_active: int,
+                     n_tokens: Optional[int] = None) -> None:
+        """``n_tokens`` is the USEFUL token count (bursts may overshoot a
+        nearly-finished slot; those writes are dropped)."""
+        if n_tokens is None:
+            n_tokens = steps * n_active
+        self.decode_s += wall_dt
+        self.decode_tokens += n_tokens
+        self.decode_steps += steps
+        self.occupied_slot_steps += n_tokens
+        if n_tokens and steps:
+            # per-token latency attributed evenly across the burst,
+            # weighted by the tokens it actually produced
+            self.token_lat_s.extend([wall_dt / steps] * n_tokens)
+
+    def record_request(self, req) -> None:
+        self.n_finished += 1
+        if req.ttft is not None:
+            self.ttfts.append(float(req.ttft))
+        if req.t_finished is not None:
+            self.e2e_latencies.append(float(req.t_finished - req.arrival_time))
+
+    def summary(self) -> Dict:
+        slot_steps = self.decode_steps * self.max_slots
+        return {
+            "n_finished": self.n_finished,
+            "ttft_p50": _pct(self.ttfts, 50),
+            "ttft_p95": _pct(self.ttfts, 95),
+            "e2e_p50": _pct(self.e2e_latencies, 50),
+            "e2e_p95": _pct(self.e2e_latencies, 95),
+            "token_latency_p50_ms": (None if not self.token_lat_s else
+                                     1e3 * _pct(self.token_lat_s, 50)),
+            "token_latency_p95_ms": (None if not self.token_lat_s else
+                                     1e3 * _pct(self.token_lat_s, 95)),
+            "decode_tokens": self.decode_tokens,
+            "decode_tokens_per_s": (self.decode_tokens / self.decode_s
+                                    if self.decode_s > 0 else None),
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_tokens_per_s": (self.prefill_tokens / self.prefill_s
+                                     if self.prefill_s > 0 else None),
+            "prefill_dispatches": self.prefill_dispatches,
+            "slot_occupancy": (self.occupied_slot_steps / slot_steps
+                               if slot_steps else None),
+        }

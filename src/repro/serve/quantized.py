@@ -1,0 +1,124 @@
+"""Materialize a FIT-derived ``BitConfig`` into real int8 weight storage.
+
+The missing link between MPQ search and serving: ``examples/mpq_search``
+produces a ``BitConfig`` (block path -> bits) from a
+``SensitivityReport``; this module turns it into
+
+  * a parameter tree whose quantized matmul blocks are stored as int8
+    (sub-8-bit blocks use a reduced symmetric grid inside int8 — the
+    storage-format view of the paper's uniform quantizer), and
+  * a ``DequantContext`` holding the per-channel scales, keyed by the
+    scoped block paths the decode graph emits.
+
+Requires the unrolled (``scan_layers=False``) parameter layout: scales
+are looked up per layer path, which a scanned stack cannot provide.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.core.fit import SensitivityReport
+from repro.core.mpq import greedy_allocate
+from repro.models.context import DequantContext
+from repro.quant.policy import BitConfig, QuantPolicy
+from repro.utils.logging import get_logger
+from repro.utils.pytree import map_with_names, named_leaves
+
+log = get_logger("repro.serve.quantized")
+
+# Leaf names reached through ctx.matmul / ctx.qw in the decode graph —
+# the only blocks that may change dtype (everything else, e.g. the embed
+# table consumed by jnp.take or the mamba conv tail, stays fp).
+MATMUL_LEAVES = frozenset({
+    "wq", "wk", "wv", "wo",                      # attention
+    "w_up", "w_gate", "w_down",                  # mlp / moe experts / shared
+    "wz", "wx", "wB", "wC", "wdt", "out_proj",   # mamba2
+    "head", "router",                            # top level (router is pinned)
+})
+
+
+def qw_path(leaf_path: str) -> str:
+    """Parameter-tree leaf path -> the scoped path ``ctx.qw`` sees.
+
+    They coincide except MoE shared experts, which are stored under
+    ``.../moe/shared/w_up`` but intercepted as ``.../moe/shared_w_up``.
+    """
+    return leaf_path.replace("shared/w_", "shared_w_")
+
+
+def _require_unrolled(params) -> None:
+    layers = params.get("layers") or params.get("groups")
+    if isinstance(layers, dict) and any(k.isdigit() for k in layers):
+        return
+    raise ValueError(
+        "int8 serving needs the unrolled parameter layout "
+        "(init_params with scan_layers=False): per-layer scales are keyed "
+        "by block path, which a lax.scan-stacked tree cannot provide")
+
+
+def quantize_params_int8(
+    params,
+    bits: Union[int, BitConfig],
+    policy: Optional[QuantPolicy] = None,
+) -> Tuple[Dict, Dict[str, jnp.ndarray]]:
+    """PTQ the matmul blocks of ``params`` into int8 storage.
+
+    ``bits`` is a uniform width or a full ``BitConfig`` (block path ->
+    bits; missing blocks stay fp). Symmetric per-channel (last axis)
+    quantization; a b-bit block uses the ±(2^(b-1)−1) sub-grid of int8.
+    Returns ``(qparams, scales)`` with ``scales`` keyed by scoped qw path.
+    """
+    _require_unrolled(params)
+    policy = policy or QuantPolicy()
+    if isinstance(bits, int):
+        wb = {name: bits for name, leaf in named_leaves(params)}
+        bit_cfg = policy.sanitize(BitConfig(wb, {}))
+    else:
+        bit_cfg = policy.sanitize(bits)
+
+    scales: Dict[str, jnp.ndarray] = {}
+    n_quant = 0
+
+    def one(name, leaf):
+        nonlocal n_quant
+        tail = name.split("/")[-1]
+        b = bit_cfg.weight_bits.get(qw_path(name),
+                                    bit_cfg.weight_bits.get(name, 16))
+        if (tail not in MATMUL_LEAVES or b >= 16
+                or not policy.quantizable(name, leaf.ndim)):
+            return leaf
+        qmax = float(2 ** (min(b, 8) - 1) - 1)
+        w32 = leaf.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(w32), axis=tuple(range(leaf.ndim - 1)),
+                       keepdims=True)
+        scale = jnp.maximum(amax, 1e-12) / qmax
+        q = jnp.clip(jnp.round(w32 / scale), -qmax, qmax).astype(jnp.int8)
+        # scale shaped for broadcast against the weight: (1,..,1,N)
+        scales[qw_path(name)] = scale
+        n_quant += 1
+        return q
+
+    qparams = map_with_names(one, params)
+    log.info("int8 PTQ: %d blocks quantized, %d scales", n_quant, len(scales))
+    return qparams, scales
+
+
+def make_dequant_context(cfg: ModelConfig, scales: Mapping[str, jnp.ndarray],
+                         int8_compute: bool = False) -> DequantContext:
+    return DequantContext(dict(scales), cfg.param_dtype,
+                          int8_compute=int8_compute)
+
+
+def bit_config_from_report(report: SensitivityReport,
+                           policy: Optional[QuantPolicy] = None,
+                           avg_bits: float = 8.0) -> BitConfig:
+    """FIT policy -> serving BitConfig: greedy knapsack at an average
+    weight budget of ``avg_bits`` bits/param (activations left fp — the
+    engine quantizes activations dynamically when int8 compute is on)."""
+    policy = policy or QuantPolicy()
+    total = sum(report.param_sizes.values())
+    cfg = greedy_allocate(report, policy, budget_bits=avg_bits * total)
+    return BitConfig(cfg.weight_bits, {})

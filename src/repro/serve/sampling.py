@@ -1,0 +1,100 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k /
+top-p, vectorized over request slots with per-request PRNG keys.
+
+Determinism contract (what the parity tests rely on): the key for token
+``t`` of a request is ``fold_in(fold_in(base, request_seed), t)`` — a
+function of the request's seed and the token index ONLY. A request
+therefore samples the same tokens whether it runs alone or batched with
+arbitrary other requests, in any slot, after any eviction/backfill
+history.
+
+``top_k``/``top_p`` are per-slot *traced* values (requests with different
+settings share one compiled step), so the masks are built with sort +
+threshold rather than ``lax.top_k`` (which needs a static k).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    temperature <= 0 selects greedy decoding; ``top_k <= 0`` and
+    ``top_p >= 1`` disable their respective filters.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+def request_keys(seeds: jnp.ndarray, token_idx: jnp.ndarray) -> jnp.ndarray:
+    """(B,) int32 seeds + (B,) int32 token indices -> (B,) typed PRNG keys."""
+    base = jax.random.key(0)
+
+    def one(seed, t):
+        return jax.random.fold_in(jax.random.fold_in(base, seed), t)
+
+    return jax.vmap(one)(seeds, token_idx)
+
+
+def sample_tokens(logits: jnp.ndarray, keys: jnp.ndarray,
+                  temperature: jnp.ndarray, top_k: jnp.ndarray,
+                  top_p: jnp.ndarray, skip_filters: bool = False) -> jnp.ndarray:
+    """Sample one token per slot.
+
+    logits: (B, V) — or (B, CB, V) for the audio family (codebooks sample
+    independently under one key). temperature/top_k/top_p: (B,). Returns
+    int32 (B,) (or (B, CB)).
+
+    ``skip_filters=True`` statically elides the sort-based top-k/top-p
+    masks (they dominate the decode-step cost at small model sizes); the
+    engine sets it when no active request uses a filter. A row with
+    ``top_k<=0, top_p>=1`` samples identically either way, so batching a
+    filterless request with filtered ones cannot change its tokens.
+    """
+    v = logits.shape[-1]
+    shape1 = (logits.shape[0],) + (1,) * (logits.ndim - 1)
+    lg32 = logits.astype(jnp.float32)
+    # broadcastable against the (B[, CB]) sampled-token shape
+    greedy = (temperature <= 0.0).reshape(shape1[:-1])
+
+    t = jnp.maximum(temperature, 1e-6).reshape(shape1)
+    lg = lg32 / t
+
+    if not skip_filters:
+        # top-k: keep entries >= the k-th largest value (per row)
+        desc = -jnp.sort(-lg, axis=-1)                        # descending
+        k_idx = jnp.clip(top_k - 1, 0, v - 1).reshape(shape1)
+        kth = jnp.take_along_axis(desc, jnp.broadcast_to(k_idx, shape1),
+                                  axis=-1)
+        k_on = (top_k > 0).reshape(shape1)
+        lg = jnp.where(k_on & (lg < kth), NEG, lg)
+
+        # top-p (nucleus): keep the smallest prefix of the descending
+        # distribution whose cumulative mass reaches top_p
+        probs = jax.nn.softmax(lg, axis=-1)
+        p_desc = -jnp.sort(-probs, axis=-1)
+        csum = jnp.cumsum(p_desc, axis=-1)
+        keep_sorted = (csum - p_desc) < top_p.reshape(shape1)  # keeps argmax
+        thresh = jnp.min(jnp.where(keep_sorted, p_desc, jnp.inf), axis=-1,
+                         keepdims=True)
+        lg = jnp.where(probs < thresh, NEG, lg)
+
+    sampled = jax.vmap(lambda key, row: jax.random.categorical(key, row))(
+        keys, lg)
+    return jnp.where(greedy, jnp.argmax(lg32, axis=-1), sampled).astype(jnp.int32)
+
+
+def greedy_tokens(logits: jnp.ndarray) -> jnp.ndarray:
+    """Pure argmax — bit-identical to ``sample_tokens`` with temperature
+    <= 0, without the PRNG/sort machinery (the all-greedy fast path)."""
+    return jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
