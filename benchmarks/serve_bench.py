@@ -14,10 +14,21 @@ warmed (compile excluded), and are scored on useful decode tokens/s —
 padding tokens don't count. Emits CSV lines (benchmarks/common.emit) and
 one JSON line (emit_json) with TTFT / tok-s / occupancy.
 
+KV-cache additions (repro.kvcache): the paged-engine section reports KV
+HBM bytes per request and peak page occupancy, and the capacity section
+measures how many concurrent requests a FIXED KV HBM budget admits —
+dense fp16 per-slot buffers vs 16-token int8 pages on mixed-length
+Poisson traffic with a shared prompt prefix (target >= 4x).
+
+The full JSON payload is also written to ``serve_bench.json`` (override
+with SERVE_BENCH_JSON) so CI can upload it as an artifact.
+
     PYTHONPATH=src python benchmarks/serve_bench.py
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -29,6 +40,8 @@ try:
 except ImportError:                                 # direct execution
     from common import emit, emit_json
 from repro.configs import smoke_config
+from repro.kvcache import BlockAllocator, PagedKVConfig, kv_layer_count
+from repro.kvcache.paged import page_bytes_all_layers
 from repro.models import init_params
 from repro.models.decode import decode_step, init_decode_state
 from repro.serve import (
@@ -86,6 +99,56 @@ def seed_style_driver(cfg, params, requests):
             "useful_tokens_per_s": useful / max(t_decode, 1e-9)}
 
 
+def kv_capacity_bench(cfg, dense_slots: int = 4, max_len: int = 256,
+                      page_size: int = 16, seed: int = 0) -> dict:
+    """Concurrent requests admitted at a FIXED KV HBM budget.
+
+    The dense engine reserves max_len fp16 tokens per slot, so the
+    budget admits exactly ``dense_slots`` requests. The paged pool
+    spends the SAME bytes on int8 pages and admits mixed-length Poisson
+    requests (each reserving pages for prompt + full token budget, the
+    engine's deadlock-free reservation rule) until the pool is full —
+    allocator-level, no model in the loop, so it measures the memory
+    system alone.
+    """
+    # fp16 dense baseline (2 bytes/elem regardless of the smoke config's
+    # compute dtype — the production serving precision)
+    budget = (kv_layer_count(cfg) * 2 * dense_slots * max_len
+              * cfg.num_kv_heads * cfg.head_dim * 2)
+    pcfg = PagedKVConfig.build(cfg, max_len, dense_slots,
+                               page_size=page_size, kv_bits=8)
+    pb = page_bytes_all_layers(cfg, pcfg)
+    num_pages = int(budget // pb)
+    alloc = BlockAllocator(num_pages, page_size)
+    reqs = poisson_requests(cfg, 1024, rate=1.0,
+                            prompt_len=(16, 5 * max_len // 8),
+                            gen_len=(8, 64), prefix_len=48, seed=seed)
+    admitted, shared = 0, 0
+    for r in reqs:
+        plen = r.prompt_len
+        full, shared_len, _ = alloc.match_prefix(np.asarray(r.prompt),
+                                                 plen - 1)
+        total = -(-min(plen + r.max_new_tokens, max_len) // page_size)
+        need = total - len(full)
+        if alloc.available() < need:
+            break
+        alloc.claim(full)
+        ids = alloc.allocate(need)
+        row = list(full) + list(ids)
+        alloc.register_prompt(np.asarray(r.prompt), row, plen)
+        admitted += 1
+        shared += shared_len
+    return {
+        "hbm_budget_bytes": budget,
+        "dense_fp16_slots": dense_slots,
+        "paged_int8_pages": num_pages,
+        "paged_int8_slots": admitted,
+        "capacity_ratio": admitted / dense_slots,
+        "prefix_shared_tokens": shared,
+        "pages_in_use": alloc.pages_in_use,
+    }
+
+
 def run() -> None:
     cfg = smoke_config(ARCH)
     params = init_params(cfg, jax.random.key(0))
@@ -134,7 +197,31 @@ def run() -> None:
     _, ometrics = engine.run(reqs)
     om = ometrics.summary()
 
-    emit_json("serve_bench", {
+    # ---- paged int8 KV cache on prefix-shared Poisson traffic ----
+    import dataclasses as _dc
+    pcfg_model = _dc.replace(cfg, scan_layers=False)
+    pparams = init_params(pcfg_model, jax.random.key(0))
+    pecfg = EngineConfig(max_slots=BATCH, max_len=MAX_LEN, max_new_tokens=GEN_RANGE[1],
+                         prefill_chunk=16, decode_burst=16,
+                         kv_cache="paged", page_size=16)
+    pengine = Engine(pparams, pcfg_model, pecfg, kv_bits=8)
+    preqs = poisson_requests(pcfg_model, 16, 0.02, prompt_len=PROMPT_RANGE,
+                             gen_len=GEN_RANGE, prefix_len=48, seed=1)
+    _, pmetrics = pengine.run(preqs)
+    pm = pmetrics.summary()
+    emit("serve_paged_kv_bytes_per_request", pm["kv_bytes_per_request"],
+         f"int8 pages; peak occupancy {pm['kv_peak_occupancy']:.0%}, "
+         f"{pm['kv_shared_tokens']} prompt tokens prefix-shared")
+
+    # ---- capacity at fixed HBM: dense fp16 slots vs int8 pages ----
+    cap = kv_capacity_bench(cfg)
+    emit("serve_kv_capacity_ratio", cap["capacity_ratio"],
+         f"{cap['paged_int8_slots']} paged slots vs "
+         f"{cap['dense_fp16_slots']} dense at "
+         f"{cap['hbm_budget_bytes'] / 1024:.0f} KiB "
+         f"({cap['prefix_shared_tokens']} tokens shared)")
+
+    payload = {
         "closed_loop": {
             "legacy_tokens_per_s": round(legacy["useful_tokens_per_s"], 2),
             "engine_tokens_per_s": round(etps, 2),
@@ -150,10 +237,28 @@ def run() -> None:
             "token_latency_p95_ms": om["token_latency_p95_ms"],
             "slot_occupancy": om["slot_occupancy"],
         },
-    })
+        "paged_kv": {
+            "kv_bytes_per_request": pm["kv_bytes_per_request"],
+            "kv_peak_bytes": pm["kv_peak_bytes"],
+            "kv_pool_bytes": pm["kv_pool_bytes"],
+            "kv_peak_occupancy": pm["kv_peak_occupancy"],
+            "kv_shared_tokens": pm["kv_shared_tokens"],
+            "kv_cow_copies": pm["kv_cow_copies"],
+            "tokens_per_s": pm["decode_tokens_per_s"],
+        },
+        "kv_capacity": cap,
+    }
+    emit_json("serve_bench", payload)
+    out_path = os.environ.get("SERVE_BENCH_JSON", "serve_bench.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+
     assert speedup >= 2.0, (
         f"engine decode {etps:.1f} tok/s is less than 2x the seed driver's "
         f"{legacy['useful_tokens_per_s']:.1f} tok/s")
+    assert cap["capacity_ratio"] >= 4.0, (
+        f"paged int8 capacity {cap['capacity_ratio']:.2f}x dense fp16 is "
+        "below the 4x target")
 
 
 if __name__ == "__main__":

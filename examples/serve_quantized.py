@@ -6,7 +6,10 @@ continuous-batching engine.
 Reports per-request greedy-token agreement vs the fp engine (flat-array
 agreement is meaningless once batches are ragged — requests differ in
 prompt/generation length), then a seeded-sampling run to show sampled
-decoding is deterministic per request seed.
+decoding is deterministic per request seed, then the paged KV cache:
+FIT's activation sensitivities allocate per-layer KV bit widths under an
+HBM budget and the engine serves prefix-shared traffic from int8/int4
+pages (``repro.kvcache``).
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -18,11 +21,13 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.core import build_report
 from repro.data.synthetic import LMStreamConfig, lm_batches
+from repro.kvcache import dense_kv_bytes
 from repro.models import init_params, loss_fn
 from repro.quant.policy import QuantPolicy
 from repro.serve import (
-    Engine, EngineConfig, SamplingParams, bit_config_from_report,
-    poisson_requests, quantize_params_int8)
+    Engine, EngineConfig, SamplingParams, allocate_kv_bits,
+    bit_config_from_report, kv_bit_config, kv_report_fns, poisson_requests,
+    quantize_params_int8)
 
 ARCH = "internlm2_1_8b"
 N_REQ, RATE = 8, 0.05
@@ -34,7 +39,11 @@ stream = lm_batches(LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                    global_batch=4, seed=0))
 
 print("== FIT sensitivity report (per-sample gradient traces) ==")
-report = build_report(lambda p, b: loss_fn(p, b, cfg), None, None, None,
+# tap the per-layer attn/k + attn/v sites too: the KV cache is a
+# persistent activation, so its sensitivities ride the same report
+tap_loss, tap_shapes, act_fn = kv_report_fns(cfg)
+report = build_report(lambda p, b: loss_fn(p, b, cfg), tap_loss,
+                      lambda b: tap_shapes(params, b), act_fn,
                       params, [next(stream) for _ in range(2)],
                       microbatch=4, tolerance=None, max_batches=2)
 
@@ -85,5 +94,36 @@ s2, _ = run(qparams, scales, sp)
 same = all(np.array_equal(a.output_tokens, b.output_tokens)
            for a, b in zip(s1, s2))
 print("two runs, same request seeds -> identical samples:", same)
+
+print("\n== FIT-allocated paged KV cache ==")
+# budget: 6 bits/element on average (2.7x under fp16) -> the greedy
+# allocator keeps the most KV-sensitive layers at int8 and packs the
+# rest into int4 nibbles
+kv_elems = dense_kv_bytes(cfg, SLOTS, MAX_LEN, bits=8)   # 1 B/elem = count
+budget = 6.0 / 8.0 * kv_elems
+kv_bits = allocate_kv_bits(report, cfg, QuantPolicy(), budget,
+                           tokens=SLOTS * MAX_LEN)
+print(f"KV bits per layer @ {budget:.0f}B budget "
+      f"(fp16 = {2 * kv_elems:.0f}B): {kv_bits}")
+print("as a policy BitConfig (act sites):",
+      dict(sorted(kv_bit_config(kv_bits, cfg).act_bits.items())))
+
+pecfg = EngineConfig(max_slots=SLOTS, max_len=MAX_LEN, max_new_tokens=MAX_NEW,
+                     prefill_chunk=16, decode_burst=8, kv_cache="paged",
+                     page_size=16)
+pengine = Engine(qparams, cfg, pecfg, scales=scales, kv_bits=kv_bits,
+                 kv_ranges=report.act_ranges)
+preqs = poisson_requests(cfg, N_REQ, RATE, prompt_len=(8, 32),
+                         gen_len=(8, MAX_NEW), prefix_len=24, seed=1)
+pfin, pm = pengine.run(preqs)
+ps = pm.summary()
+print(f"paged int8/int4 engine: {ps['n_finished']} finished, "
+      f"{ps['decode_tokens_per_s']:.1f} tok/s, "
+      f"KV peak {ps['kv_peak_bytes']:.0f}B of {ps['kv_pool_bytes']:.0f}B "
+      f"pool ({ps['kv_peak_occupancy']:.0%}), "
+      f"{ps['kv_shared_tokens']} prompt tokens prefix-shared, "
+      f"{ps['kv_cow_copies']} copy-on-writes")
 print("(on TPU the int8 path runs the W8A8 MXU Pallas kernel at 2x bf16 "
-      "throughput; on CPU this example validates numerics + scheduling.)")
+      "throughput and paged attention walks page tables via the "
+      "scalar-prefetch Pallas kernel; on CPU this example validates "
+      "numerics + scheduling.)")

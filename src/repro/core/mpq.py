@@ -16,6 +16,13 @@ Three allocators, increasing in optimality:
     independent, monotone and convex in bits.
   * ``dp_allocate``  — exact DP over (block, discretized budget); the
     knapsack analogue of HAWQ-V3's ILP, used to validate greedy.
+
+Both budgeted allocators run on generic (contribution-table, sizes,
+budget) cores — ``_greedy_spend`` / ``_dp_spend`` — so the same
+machinery allocates WEIGHT bits (sizes = parameter counts) and
+persistent-ACTIVATION bits: ``allocate_act_sites`` assigns per-site bit
+widths to activation sites whose quantized values are *stored* (the
+serving KV cache — ``repro.kvcache``) under an HBM budget.
 """
 from __future__ import annotations
 
@@ -112,6 +119,143 @@ def pareto_front(
             for i in order[keep]]
 
 
+def _greedy_spend(tbl: np.ndarray, sizes: np.ndarray, bits_arr: np.ndarray,
+                  start: np.ndarray, used: float,
+                  budget_bits: float) -> np.ndarray:
+    """Marginal-utility greedy over a contribution table.
+
+    ``tbl`` is (n, n_levels) FIT contributions at ascending bit levels,
+    ``sizes`` the per-row stored-element counts, ``start`` per-row level
+    floors, ``used`` the bits already charged at the floors. Because the
+    per-row terms are convex in bits, per-row upgrade ratios are
+    non-increasing, so one global stable argsort over all (row, rung)
+    moves visits each row's rungs in order — the classic lazy-heap
+    greedy with the gain/cost tables precomputed as arrays. Returns the
+    chosen level index per row.
+    """
+    n_l = tbl.shape[1]
+    gains = tbl[:, :-1] - tbl[:, 1:]                       # rung p -> p+1
+    costs = sizes[:, None] * (bits_arr[1:] - bits_arr[:-1])[None, :]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratio = np.where(costs > 0, gains / costs, -np.inf)
+    valid = np.arange(n_l - 1)[None, :] >= start[:, None]
+    cur = start.copy()
+    flat = np.argsort(-ratio, axis=None, kind="stable")
+    bs, ps = np.unravel_index(flat, ratio.shape)
+    for b, p in zip(bs, ps):
+        if not valid[b, p] or cur[b] != p:
+            continue       # below this row's floor, or a cheaper rung
+        c = costs[b, p]    # was skipped for budget — row is frozen
+        if c <= 0 or used + c > budget_bits:
+            continue
+        cur[b] = p + 1
+        used += c
+    return cur
+
+
+def _dp_spend(terms: np.ndarray, bits_opts: np.ndarray, valid: np.ndarray,
+              sizes: np.ndarray, budget_bits: float,
+              resolution: int) -> np.ndarray:
+    """Exact knapsack DP over a contribution table (budget discretized
+    into ``resolution`` buckets). ``terms``/``bits_opts``/``valid`` are
+    (n, n_opt) per-row option arrays. Returns the chosen option per row.
+
+    The per-row relaxation sweep is vectorized over the bucket axis:
+    each (row, option) pair is one shifted elementwise min over the
+    bucket array instead of a Python loop per bucket.
+    """
+    n = terms.shape[0]
+    unit = max(budget_bits / resolution, 1.0)
+    n_buckets = resolution + 1
+    INF = float("inf")
+    best = np.full(n_buckets, INF)
+    best[0] = 0.0
+    choice = np.full((n, n_buckets), -1, dtype=np.int64)
+    for bi in range(n):
+        new_best = np.full(n_buckets, INF)
+        new_choice = np.full(n_buckets, -1, dtype=np.int64)
+        for oi in range(terms.shape[1]):
+            if not valid[bi, oi]:
+                continue
+            # round-to-nearest buckets: ceil would make exact-budget
+            # configs infeasible; worst-case overshoot is n·unit/2,
+            # i.e. ≤ 0.1% of budget at resolution 512.
+            cb = int(round(sizes[bi] * bits_opts[bi, oi] / unit))
+            if cb >= n_buckets:
+                continue
+            span = n_buckets - cb
+            cand = best[:span] + terms[bi, oi]
+            upd = cand < new_best[cb:]
+            new_best[cb:][upd] = cand[upd]
+            new_choice[cb:][upd] = oi * n_buckets + np.nonzero(upd)[0]
+        best, choice[bi] = new_best, new_choice
+
+    finite = np.where(best < INF)[0]
+    if len(finite) == 0:
+        raise ValueError("budget too small for the mandatory options")
+    cursor = int(finite[np.argmin(best[finite])])
+
+    out = np.empty(n, np.int64)
+    for bi in range(n - 1, -1, -1):
+        packed = int(choice[bi][cursor])
+        out[bi], cursor = packed // n_buckets, packed % n_buckets
+    return out
+
+
+def allocate_act_sites(
+    report: SensitivityReport,
+    policy: QuantPolicy,
+    budget_bits: float,
+    site_groups: Sequence[Sequence[str]],
+    group_sizes: Sequence[float],
+    levels: Optional[Sequence[int]] = None,
+    exact: bool = False,
+) -> List[int]:
+    """Bit allocation for STORED activation state under a size budget.
+
+    The serving KV cache is a persistent activation (PAPER.md §3: weight
+    and activation sensitivities fuse into one metric), so its per-layer
+    bit widths come from the same FIT tables as weight MPQ — only the
+    cost model changes: a site's storage is ``group_sizes`` elements
+    (e.g. KV capacity · heads · head_dim), not a parameter count.
+
+    ``site_groups`` are activation-site name groups that must share one
+    bit width (a layer's k and v caches — one storage dtype per layer);
+    each group's FIT contribution is the sum of its sites' table rows.
+    Returns bits per group (greedy by default, exact DP with ``exact``).
+    """
+    levels = sorted({int(b) for b in (levels or policy.kv_allowed_bits)})
+    packed = report.packed(levels)
+    row_of = {n: i for i, n in enumerate(packed.act_names)}
+    aidx = [packed.level_index(b) for b in levels]
+    tbl = np.zeros((len(site_groups), len(levels)), np.float64)
+    for gi, group in enumerate(site_groups):
+        for site in group:
+            if site not in row_of:
+                raise KeyError(
+                    f"activation site {site!r} has no trace+range in the "
+                    "report — build_report needs tap_loss_fn/act_fn "
+                    "covering the KV sites (see repro.kvcache.fit)")
+            tbl[gi] += packed.act_table[row_of[site], aidx]
+    sizes = np.asarray(group_sizes, np.float64)
+    bits_arr = np.asarray(levels, np.float64)
+    if exact:
+        n_opt = len(levels)
+        cur = _dp_spend(tbl, np.broadcast_to(bits_arr, tbl.shape),
+                        np.ones((len(site_groups), n_opt), bool), sizes,
+                        budget_bits, resolution=512)
+    else:
+        used = float((sizes * bits_arr[0]).sum())
+        if used > budget_bits:
+            raise ValueError(
+                f"budget {budget_bits:.3g} bits cannot hold the KV cache "
+                f"even at {levels[0]} bits ({used:.3g} bits)")
+        cur = _greedy_spend(tbl, sizes, bits_arr,
+                            np.zeros(len(site_groups), np.int64), used,
+                            budget_bits)
+    return [levels[int(c)] for c in cur]
+
+
 def greedy_allocate(
     report: SensitivityReport,
     policy: QuantPolicy,
@@ -146,29 +290,13 @@ def greedy_allocate(
 
     sizes = packed.weight_sizes.astype(np.float64)
     tbl = packed.weight_table[:, aidx]                     # (n_b, n_l)
-    gains = tbl[:, :-1] - tbl[:, 1:]                       # rung p -> p+1
-    costs = sizes[:, None] * (bits_arr[1:] - bits_arr[:-1])[None, :]
-    with np.errstate(divide="ignore", invalid="ignore"):
-        ratio = np.where(costs > 0, gains / costs, -np.inf)
-    valid = np.arange(n_l - 1)[None, :] >= start[:, None]
-
-    cur = start.copy()
     # charge pinned blocks at >= pinned_bits even when no allowed level
     # reaches it (sanitize() will raise their bits after allocation, so
     # budgeting them lower would let the result overshoot the budget)
-    eff_bits = bits_arr[cur].copy()
+    eff_bits = bits_arr[start].copy()
     eff_bits[pinned] = np.maximum(eff_bits[pinned], policy.pinned_bits)
     used = float((sizes * eff_bits).sum())
-    flat = np.argsort(-ratio, axis=None, kind="stable")
-    bs, ps = np.unravel_index(flat, ratio.shape)
-    for b, p in zip(bs, ps):
-        if not valid[b, p] or cur[b] != p:
-            continue       # below this block's floor, or a cheaper rung
-        c = costs[b, p]    # was skipped for budget — block is frozen
-        if c <= 0 or used + c > budget_bits:
-            continue
-        cur[b] = p + 1
-        used += c
+    cur = _greedy_spend(tbl, sizes, bits_arr, start, used, budget_bits)
 
     wb = {name: levels[cur[j]] for j, name in enumerate(packed.weight_names)}
     ab = act_bits_fixed if act_bits_fixed is not None else policy.default_act_bits
@@ -193,49 +321,26 @@ def dp_allocate(
     blocks = list(packed.weight_names)
     levels = sorted({int(b) for b in policy.allowed_bits})
     sizes = packed.weight_sizes.astype(np.float64)
-    unit = max(budget_bits / resolution, 1.0)
-
-    n_buckets = resolution + 1
-    INF = float("inf")
-    best = np.full(n_buckets, INF)
-    best[0] = 0.0
-    choice = np.full((len(blocks), n_buckets), -1, dtype=np.int64)
     pinned = policy.pinned_mask(packed.weight_names)
 
-    for bi, name in enumerate(blocks):
-        opts = [policy.pinned_bits] if pinned[bi] else levels
-        new_best = np.full(n_buckets, INF)
-        new_choice = np.full(n_buckets, -1, dtype=np.int64)
-        for oi, bits in enumerate(opts):
-            # round-to-nearest buckets: ceil would make exact-budget
-            # configs infeasible; worst-case overshoot is n_blocks·unit/2,
-            # i.e. ≤ 0.1% of budget at resolution 512.
-            cb = int(round(sizes[bi] * bits / unit))
-            if cb >= n_buckets:
-                continue
-            term = packed.weight_table[bi, packed.level_index(bits)]
-            span = n_buckets - cb
-            cand = best[:span] + term
-            upd = cand < new_best[cb:]
-            new_best[cb:][upd] = cand[upd]
-            new_choice[cb:][upd] = oi * n_buckets + np.nonzero(upd)[0]
-        best, choice[bi] = new_best, new_choice
+    n, n_opt = len(blocks), len(levels)
+    bits_opts = np.broadcast_to(np.array(levels, np.float64),
+                                (n, n_opt)).copy()
+    valid = np.ones((n, n_opt), bool)
+    bits_opts[pinned, 0] = policy.pinned_bits    # pinned: single option
+    valid[pinned, 1:] = False
+    terms = np.empty((n, n_opt), np.float64)
+    for oi in range(n_opt):
+        terms[:, oi] = packed.weight_table[
+            np.arange(n), [packed.level_index(int(b)) for b in bits_opts[:, oi]]]
 
-    # best reachable bucket
-    finite = np.where(best < INF)[0]
-    if len(finite) == 0:
+    try:
+        opt_idx = _dp_spend(terms, bits_opts, valid, sizes, budget_bits,
+                            resolution)
+    except ValueError:
         raise ValueError("budget too small for pinned blocks")
-    end = int(finite[np.argmin(best[finite])])
-
-    bits_out: Dict[str, int] = {}
-    cursor = end
-    for bi in range(len(blocks) - 1, -1, -1):
-        packed_choice = choice[bi][cursor]
-        oi, prev = int(packed_choice) // n_buckets, int(packed_choice) % n_buckets
-        name = blocks[bi]
-        opts = [policy.pinned_bits] if pinned[bi] else levels
-        bits_out[name] = opts[oi]
-        cursor = prev
+    bits_out = {name: int(bits_opts[bi, opt_idx[bi]])
+                for bi, name in enumerate(blocks)}
 
     ab = act_bits_fixed if act_bits_fixed is not None else policy.default_act_bits
     return policy.sanitize(BitConfig(bits_out, {k: ab for k in report.act_traces}))

@@ -8,4 +8,6 @@ Kernels:
   ef_sqnorm        per-sample squared-grad-norm reduction (EF trace)
   int8_matmul      W8A8 MXU matmul with fused dequant (serving)
   flash_attention  online-softmax attention (no SxT materialization)
+  paged_attention  page-table decode attention with in-kernel KV dequant
+                   (scalar-prefetched page walk; serving KV cache)
 """

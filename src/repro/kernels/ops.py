@@ -19,6 +19,7 @@ from repro.kernels.fake_quant import fake_quant_pallas, fake_quant_per_channel_p
 from repro.kernels.ef_sqnorm import ef_sqnorm_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 
 
 def _mode() -> str:
@@ -70,3 +71,25 @@ def flash_attention(q, k, v, causal: bool = True):
         return _ref.flash_attention(q, k, v, causal=causal)
     return flash_attention_pallas(q, k, v, causal=causal,
                                   interpret=(mode == "interpret"))
+
+
+def paged_attention(q, k_pages, v_pages, table, pos, k_scale=None,
+                    v_scale=None, bits: int = 16):
+    """Decode GQA over paged KV. q: (B, 1, H, Dh) -> (B, KV, G, Dh).
+
+    Off-TPU this always takes the jnp oracle, even in interpret mode: the
+    serving engine's paged-vs-dense BIT-IDENTICAL parity contract holds
+    on the oracle path only (the flash-style kernel accumulates online),
+    and an interpreted kernel inside the engine's per-step scan would be
+    ruinously slow. Interpret-mode kernel coverage lives in the dedicated
+    kernel tests, which call ``paged_attention_pallas`` directly.
+    """
+    mode = _mode()
+    if mode != "tpu":
+        return _ref.paged_attention(q, k_pages, v_pages, table, pos,
+                                    k_scale, v_scale, bits)
+    kvh = k_pages.shape[2]
+    b, _, h, dh = q.shape
+    qh = q.reshape(b, kvh, h // kvh, dh)
+    return paged_attention_pallas(qh, k_pages, v_pages, table, pos + 1,
+                                  k_scale, v_scale, bits=bits)

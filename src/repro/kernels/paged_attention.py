@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: paged-attention decode with in-kernel dequant.
+
+One-token GQA decode where the KV cache lives in a paged pool: physical
+pages of ``page_size`` tokens, per-slot page tables mapping logical
+positions to pages (``repro.kvcache``). The kernel walks the page table
+via scalar prefetch — the table is available before the body runs, so
+each grid step's BlockSpec index_map DMAs exactly the page it needs —
+and never materializes the gathered (B, T, KV, Dh) view the jnp
+reference builds.
+
+Quantized pages dequantize in-kernel: int8 (or packed-int4 nibbles)
+loads stay 1 (or 0.5) byte/element in HBM and expand to fp32 only in
+VMEM, with the per-page per-kv-head scale fetched alongside the page.
+
+Grid: (B, KV, NP) with the page axis innermost; fp32 online-softmax
+running stats (m, l) and the output accumulator live in VMEM scratch
+across page steps. Pages whose positions are entirely past a slot's
+length still run (grid shapes are static) but are fully masked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import unpack_int4
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
+                       vs_ref, o_ref, m_ref, l_ref, acc_ref,
+                       *, page: int, bits: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k = k_ref[0, :, 0, :]                          # (page, Dh')
+    v = v_ref[0, :, 0, :]
+    if bits < 16:
+        if bits <= 4:
+            k, v = unpack_int4(k), unpack_int4(v)
+        k = k.astype(jnp.float32) * ks_ref[0, 0]
+        v = v.astype(jnp.float32) * vs_ref[0, 0]
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, Dh)
+    dh = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (dh ** -0.5)                           # (G, page)
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, table: jnp.ndarray,
+                           lengths: jnp.ndarray,
+                           k_scale=None, v_scale=None,
+                           bits: int = 16, interpret: bool = False):
+    """q: (B, KV, G, Dh); k_pages/v_pages: (P, page, KV, Dh') where
+    Dh' = Dh/2 for packed int4; table: (B, NP) page ids (>= P allowed —
+    clipped, those pages are masked); lengths: (B,) valid token counts.
+    k_scale/v_scale: (P, KV) fp32 (required when bits < 16).
+    Returns (B, KV, G, Dh)."""
+    b, kvh, g, dh = q.shape
+    num_pages, page = k_pages.shape[0], k_pages.shape[1]
+    npg = table.shape[1]
+    table = jnp.clip(table.astype(jnp.int32), 0, num_pages - 1)
+    lengths = lengths.astype(jnp.int32)
+    if k_scale is None:
+        k_scale = jnp.ones((num_pages, kvh), jnp.float32)
+    if v_scale is None:
+        v_scale = jnp.ones((num_pages, kvh), jnp.float32)
+
+    dhp = k_pages.shape[3]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, npg),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, h, j, t, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, dhp),
+                         lambda bi, h, j, t, ln: (t[bi, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, dhp),
+                         lambda bi, h, j, t, ln: (t[bi, j], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, j, t, ln: (t[bi, j], h)),
+            pl.BlockSpec((1, 1), lambda bi, h, j, t, ln: (t[bi, j], h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, h, j, t, ln: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),    # running max
+            pltpu.VMEM((g, 1), jnp.float32),    # running denom
+            pltpu.VMEM((g, dh), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_attn_kernel, page=page, bits=bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
+        interpret=interpret,
+    )(table, lengths, q, k_pages, v_pages, k_scale, v_scale)

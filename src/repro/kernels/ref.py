@@ -42,6 +42,75 @@ def int8_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, x_scale: jnp.ndarray,
     return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
 
 
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """int8 values in [-8, 7], even last dim -> uint8 nibbles, 2 per byte.
+
+    Packing runs along the LAST axis (head_dim for KV pages): one token's
+    (KV, Dh) row owns whole bytes, so single-token cache writes never
+    read-modify-write a byte shared with another token.
+    """
+    u = q.astype(jnp.int32) & 0xF
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
+    """uint8 nibble pairs -> int8 (..., 2*D) (inverse of ``pack_int4``)."""
+    u = p.astype(jnp.int32)
+    nibbles = jnp.stack([u & 0xF, (u >> 4) & 0xF], axis=-1)
+    nibbles = jnp.where(nibbles >= 8, nibbles - 16, nibbles)
+    return nibbles.reshape(p.shape[:-1] + (2 * p.shape[-1],)).astype(jnp.int8)
+
+
+NEG_INF = -1e30
+
+
+def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                    table: jnp.ndarray, pos: jnp.ndarray,
+                    k_scale=None, v_scale=None, bits: int = 16) -> jnp.ndarray:
+    """Decode-time GQA over a paged KV pool — the jnp oracle.
+
+    q: (B, 1, H, Dh) current-token queries (post-RoPE);
+    k_pages/v_pages: (P, page, KV, Dh) — int8 / uint8-packed-int4 when
+    ``bits`` < 16 (Dh/2 bytes for int4), else a float dtype;
+    table: (B, NP) page ids per slot (entries >= P are padding);
+    pos: (B,) per-slot current position (positions <= pos attend);
+    k_scale/v_scale: (P, KV) per-page per-kv-head dequant scales.
+    Returns (B, KV, G, Dh).
+
+    At float precision this is BIT-IDENTICAL to the dense
+    ``attention_decode`` read path (same gathered values, same einsum
+    shapes/dtypes, same masked-softmax construction) — the serving
+    engine's paged-vs-dense parity contract rests on it, so mirror any
+    change here in ``repro.models.attention.attention_decode``.
+    """
+    b = q.shape[0]
+    num_pages, page = k_pages.shape[0], k_pages.shape[1]
+    kvh = k_pages.shape[2]
+    ids = jnp.clip(table, 0, num_pages - 1)
+    kg = k_pages[ids]                      # (B, NP, page, KV, Dh')
+    vg = v_pages[ids]
+    if bits < 16:
+        if bits <= 4:
+            kg, vg = unpack_int4(kg), unpack_int4(vg)
+        ks = k_scale[ids][:, :, None, :, None]      # (B, NP, 1, KV, 1)
+        vs = v_scale[ids][:, :, None, :, None]
+        kg = kg.astype(jnp.float32) * ks
+        vg = vg.astype(jnp.float32) * vs
+    dh = kg.shape[-1]
+    t = table.shape[1] * page
+    kg = kg.reshape(b, t, kvh, dh)
+    vg = vg.reshape(b, t, kvh, dh)
+    g = q.shape[2] // kvh
+    qg = q.reshape(b, kvh, g, dh)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, kg,
+                    preferred_element_type=jnp.float32) * (dh ** -0.5)
+    mask = jnp.arange(t)[None, None, None, :] <= pos[:, None, None, None]
+    sc = jnp.where(mask, sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", pr.astype(vg.dtype), vg)
+
+
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     causal: bool = True, scale: float | None = None) -> jnp.ndarray:
     """Reference attention. q,k,v: (B, H, S, D) -> (B, H, S, D).

@@ -1,0 +1,113 @@
+"""FIT-driven KV-cache bit allocation.
+
+The KV cache is a persistent activation: the values written to it are
+exactly the ``attn/k`` / ``attn/v`` activation-tap sites of the forward
+graph, so their FIT sensitivity terms (EF trace x quantization noise
+power, paper Sec. 3.2) are already what ``build_report`` computes —
+per-layer KV sites enter the ``PackedReport`` as ordinary activation
+sites. This module supplies
+
+  * ``kv_report_fns`` — tap/shape/act closures (cnn_tap_loss-style) that
+    expose ONLY the k/v sites of an unrolled transformer to
+    ``build_report``, so KV sensitivity reports stay cheap;
+  * ``allocate_kv_bits`` — per-layer KV bit widths under an HBM budget
+    via ``repro.core.mpq.allocate_act_sites`` (greedy or exact DP over
+    the same FIT tables that drive weight MPQ);
+  * ``kv_bit_config`` / ``kv_bits_from_config`` — round-trip between a
+    per-layer bits dict and a policy-sanitized ``BitConfig`` whose
+    act_bits entries are the KV sites (the serving-config interchange
+    format).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+import jax
+
+from repro.configs import ModelConfig
+from repro.core.fit import SensitivityReport
+from repro.core.mpq import allocate_act_sites
+from repro.kvcache.paged import kv_layer_count, kv_sites_for_layer
+from repro.quant.policy import BitConfig, QuantPolicy
+
+
+def kv_sites(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    """(k_site, v_site) tap paths per attention layer (unrolled scopes)."""
+    return [kv_sites_for_layer(cfg, i) for i in range(kv_layer_count(cfg))]
+
+
+def _is_kv_site(name: str) -> bool:
+    return name.endswith("/attn/k") or name.endswith("/attn/v")
+
+
+def kv_report_fns(cfg: ModelConfig
+                  ) -> Tuple[Callable, Callable, Callable]:
+    """(tap_loss_fn, tap_shapes_fn, act_fn) for ``build_report`` limited
+    to the KV activation sites. ``cfg`` must be unrolled
+    (``scan_layers=False``) — site names are per-layer paths."""
+    from repro.models.context import CollectContext, TapContext
+    from repro.models.transformer import loss_fn
+
+    def tap_loss_fn(params, taps, batch):
+        return loss_fn(params, batch, cfg, ctx=TapContext(taps))
+
+    def tap_shapes_fn(params, batch):
+        ctx = CollectContext()
+        loss_fn(params, batch, cfg, ctx=ctx)
+        return {k: jax.ShapeDtypeStruct(a.shape, a.dtype)
+                for k, a in ctx.acts.items() if _is_kv_site(k)}
+
+    def act_fn(params, batch):
+        ctx = CollectContext()
+        loss_fn(params, batch, cfg, ctx=ctx)
+        return {k: a for k, a in ctx.acts.items() if _is_kv_site(k)}
+
+    return tap_loss_fn, tap_shapes_fn, act_fn
+
+
+def allocate_kv_bits(
+    report: SensitivityReport,
+    cfg: ModelConfig,
+    policy: QuantPolicy,
+    budget_bytes: float,
+    tokens: int,
+    exact: bool = False,
+) -> Dict[int, int]:
+    """Per-layer KV bit widths under ``budget_bytes`` of KV HBM.
+
+    ``tokens`` is the cache's token capacity (slots x max_len, or the
+    page pool's num_pages x page_size); each layer stores
+    ``tokens * KV * Dh`` elements for k and the same for v, and a
+    layer's k/v share one bit width (one storage dtype per pool).
+    """
+    groups = [list(pair) for pair in kv_sites(cfg)]
+    elems = 2 * tokens * cfg.num_kv_heads * cfg.head_dim
+    bits = allocate_act_sites(
+        report, policy, budget_bits=budget_bytes * 8.0,
+        site_groups=groups, group_sizes=[elems] * len(groups),
+        levels=policy.kv_allowed_bits, exact=exact)
+    return {i: b for i, b in enumerate(bits)}
+
+
+def kv_bit_config(bits_by_layer: Mapping[int, int], cfg: ModelConfig,
+                  policy: Optional[QuantPolicy] = None) -> BitConfig:
+    """Per-layer bits -> policy-sanitized BitConfig on the KV act sites."""
+    policy = policy or QuantPolicy()
+    ab = {}
+    for i, (ks, vs) in enumerate(kv_sites(cfg)):
+        b = int(bits_by_layer.get(i, bits_by_layer.get(str(i), 16)))
+        ab[ks] = b
+        ab[vs] = b
+    return policy.sanitize(BitConfig({}, ab))
+
+
+def kv_bits_from_config(bit_cfg: BitConfig, cfg: ModelConfig
+                        ) -> Dict[int, int]:
+    """Inverse of ``kv_bit_config``: read per-layer KV bits back out of a
+    BitConfig's act_bits (a layer's k/v widths are unified with max —
+    the conservative storage choice)."""
+    out: Dict[int, int] = {}
+    for i, (ks, vs) in enumerate(kv_sites(cfg)):
+        b = max(bit_cfg.act_bits.get(ks, 16), bit_cfg.act_bits.get(vs, 16))
+        out[i] = int(b)
+    return out

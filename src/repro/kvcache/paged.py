@@ -1,0 +1,270 @@
+"""Device-side paged KV storage: per-layer page pools + page-table state.
+
+Layout (see the package docstring for the page-table diagram): each
+attention layer owns a ``(P, page, KV, Dh)`` pool for k and v. Layers
+are kept as a dict (not stacked on a leading axis) so every layer can
+store at its OWN bit width — the FIT-allocated mixed-precision KV cache
+stores an 8-bit layer as int8 bytes and a 4-bit layer as packed uint8
+nibbles (Dh/2 bytes), which a single stacked array could not express.
+This mirrors the unrolled (``scan_layers=False``) parameter layout that
+quantized serving already requires.
+
+Quantization is symmetric with per-page per-kv-head scales, stored as
+``(P, KV)`` fp32 alongside each pool. Scales are materialized from the
+sensitivity report's calibrated activation ranges
+(``repro.core.report.act_ranges`` at the ``attn/k`` / ``attn/v`` tap
+sites) — the AIMET-style calibrated-range pattern — with a static
+fallback matching the legacy dense int8 KV path. Sub-8-bit widths other
+than 4 use the reduced symmetric grid inside int8, exactly like
+``quantize_params_int8`` does for weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.kernels.ref import pack_int4, unpack_int4
+
+# Fallback |activation| max when no calibrated range is supplied: matches
+# the legacy dense int8 KV path's static scale (0.05 * 127 ≈ 6.35).
+DEFAULT_KV_AMAX = 6.35
+
+
+def kv_layer_count(cfg: ModelConfig) -> int:
+    """Number of attention layers holding KV state (0 for pure SSM)."""
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return cfg.num_layers
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_period
+    return 0
+
+
+def qmax_for_bits(bits: int) -> float:
+    return float(2 ** (min(bits, 8) - 1) - 1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LayerPages:
+    """One attention layer's page pool. ``bits`` is static pytree aux
+    data (it selects storage dtype and quantization grid, which must be
+    trace-time constants under jit)."""
+
+    k: jnp.ndarray          # (P, page, KV, Dh) fp/int8 | (P, page, KV, Dh/2) uint8
+    v: jnp.ndarray
+    k_scale: jnp.ndarray    # (P, KV) fp32 per-page per-kv-head dequant scale
+    v_scale: jnp.ndarray
+    bits: int = 16
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.k_scale, self.v_scale), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, bits, children):
+        return cls(*children, bits=bits)
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
+class PagedState(NamedTuple):
+    """Paged KV component of a decode state (slots share one pool)."""
+
+    layers: Dict[str, LayerPages]   # attn-layer index (as str) -> pool
+    table: jnp.ndarray              # (S, NP) int32; entries >= P = unmapped
+    write_limit: jnp.ndarray        # (S,) int32 — positions >= limit drop
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    """Static shape of a paged KV cache pool."""
+
+    page_size: int                  # tokens per page
+    num_pages: int                  # pool size (shared by all slots)
+    pages_per_slot: int             # NP — page-table width (max_len / page)
+    kv_bits: Tuple[int, ...]        # per attention layer (16 = fp)
+
+    @classmethod
+    def build(cls, cfg: ModelConfig, max_len: int, slots: int,
+              page_size: int = 16, num_pages: Optional[int] = None,
+              kv_bits=None) -> "PagedKVConfig":
+        """``kv_bits``: None/int uniform, or a mapping {layer index ->
+        bits} (missing layers stay fp) — e.g. from ``fit.allocate_kv_bits``."""
+        n = kv_layer_count(cfg)
+        if n == 0:
+            raise ValueError(f"family {cfg.family!r} holds no KV cache")
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len ({max_len}) must be a multiple of page_size "
+                f"({page_size}) — the paged-vs-dense parity contract needs "
+                "equal attention spans")
+        if kv_bits is None:
+            bits = (16,) * n
+        elif isinstance(kv_bits, int):
+            bits = (kv_bits,) * n
+        else:
+            bits = tuple(int(kv_bits.get(i, kv_bits.get(str(i), 16)))
+                         for i in range(n))
+        if any(b == 4 for b in bits) and cfg.head_dim % 2:
+            raise ValueError("packed int4 KV needs an even head_dim")
+        nps = max_len // page_size
+        return cls(page_size=page_size,
+                   num_pages=num_pages if num_pages else slots * nps,
+                   pages_per_slot=nps, kv_bits=bits)
+
+
+def _scale_from_ranges(ranges, site: str, bits: int) -> float:
+    if ranges is not None and site in ranges:
+        lo, hi = ranges[site]
+        amax = max(abs(float(lo)), abs(float(hi)), 1e-8)
+    else:
+        amax = DEFAULT_KV_AMAX
+    return amax / qmax_for_bits(bits)
+
+
+def kv_sites_for_layer(cfg: ModelConfig, i: int) -> Tuple[str, str]:
+    """Scoped tap paths of layer ``i``'s k/v activation sites — the names
+    the unrolled forward emits (and the sensitivity report records)."""
+    base = f"shared/{i}/attn" if cfg.family == "hybrid" else f"layers/{i}/attn"
+    return f"{base}/k", f"{base}/v"
+
+
+def init_paged_kv(cfg: ModelConfig, pcfg: PagedKVConfig, slots: int,
+                  ranges: Optional[Mapping[str, Tuple[float, float]]] = None
+                  ) -> PagedState:
+    """Zeroed pools + unmapped page tables. ``ranges`` (site -> (lo, hi),
+    from ``SensitivityReport.act_ranges``) calibrate the dequant scales."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    layers: Dict[str, LayerPages] = {}
+    for i, bits in enumerate(pcfg.kv_bits):
+        if bits >= 16:
+            dtype, last = cfg.param_dtype, hd
+        elif bits > 4:
+            dtype, last = jnp.int8, hd
+        else:
+            dtype, last = jnp.uint8, hd // 2
+        shape = (pcfg.num_pages, pcfg.page_size, kv, last)
+        ksite, vsite = kv_sites_for_layer(cfg, i)
+        layers[str(i)] = LayerPages(
+            k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+            k_scale=jnp.full((pcfg.num_pages, kv),
+                             _scale_from_ranges(ranges, ksite, bits),
+                             jnp.float32),
+            v_scale=jnp.full((pcfg.num_pages, kv),
+                             _scale_from_ranges(ranges, vsite, bits),
+                             jnp.float32),
+            bits=bits)
+    return PagedState(
+        layers=layers,
+        table=jnp.full((slots, pcfg.pages_per_slot), pcfg.num_pages,
+                       jnp.int32),
+        write_limit=jnp.zeros(slots, jnp.int32))
+
+
+def quantize_kv(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Float (..., KV, Dh) -> page storage dtype at ``bits``.
+    ``scale``: (..., KV) per-kv-head."""
+    qmax = qmax_for_bits(bits)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -qmax, qmax).astype(jnp.int8)
+    return pack_int4(q) if bits <= 4 else q
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of ``quantize_kv`` (fp32 output)."""
+    if bits <= 4:
+        q = unpack_int4(q)
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def gather_layer(lp: LayerPages, row: jnp.ndarray, n_tokens,
+                 out_dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Page row -> dense (NP*page, KV, Dh) cache span, zero past
+    ``n_tokens`` (the prefix-reuse read: seeds a dense scratch state so
+    suffix prefill attends to a shared prefix without recomputing it)."""
+    ids = jnp.clip(row, 0, lp.num_pages - 1)
+    kg, vg = lp.k[ids], lp.v[ids]                  # (NP, page, KV, Dh')
+    if lp.bits < 16:
+        kg = dequantize_kv(kg, lp.k_scale[ids][:, None, :], lp.bits)
+        vg = dequantize_kv(vg, lp.v_scale[ids][:, None, :], lp.bits)
+    t = row.shape[0] * lp.page_size
+    kg = kg.reshape(t, *kg.shape[2:]).astype(out_dtype)
+    vg = vg.reshape(t, *vg.shape[2:]).astype(out_dtype)
+    valid = (jnp.arange(t) < n_tokens)[:, None, None]
+    return jnp.where(valid, kg, 0), jnp.where(valid, vg, 0)
+
+
+def scatter_span(lp: LayerPages, row: jnp.ndarray, k_span: jnp.ndarray,
+                 v_span: jnp.ndarray, start, stop) -> LayerPages:
+    """Write dense tokens [start, stop) of (T, KV, Dh) spans into the
+    pages of ``row`` (the admission insert: prefilled KV -> pool)."""
+    t = k_span.shape[0]
+    pos = jnp.arange(t)
+    cols = pos // lp.page_size
+    valid = (pos >= start) & (pos < stop)
+    pids = jnp.where(valid, row[jnp.clip(cols, 0, row.shape[0] - 1)],
+                     lp.num_pages)
+    offs = pos % lp.page_size
+    sp = jnp.clip(pids, 0, lp.num_pages - 1)
+    if lp.bits < 16:
+        kq = quantize_kv(k_span, lp.k_scale[sp], lp.bits)
+        vq = quantize_kv(v_span, lp.v_scale[sp], lp.bits)
+    else:
+        kq, vq = k_span.astype(lp.k.dtype), v_span.astype(lp.v.dtype)
+    return dataclasses.replace(
+        lp,
+        k=lp.k.at[pids, offs].set(kq, mode="drop"),
+        v=lp.v.at[pids, offs].set(vq, mode="drop"))
+
+
+def copy_page(lp: LayerPages, src, dst) -> LayerPages:
+    """Physical page copy (the copy-on-write primitive)."""
+    return dataclasses.replace(
+        lp,
+        k=lp.k.at[dst].set(lp.k[src]),
+        v=lp.v.at[dst].set(lp.v[src]),
+        k_scale=lp.k_scale.at[dst].set(lp.k_scale[src]),
+        v_scale=lp.v_scale.at[dst].set(lp.v_scale[src]))
+
+
+# ---------------------------------------------------------------------------
+# HBM accounting
+# ---------------------------------------------------------------------------
+
+def _bytes_per_elem(cfg: ModelConfig, bits: int) -> float:
+    if bits >= 16:
+        return float(jnp.dtype(cfg.param_dtype).itemsize)
+    return 1.0 if bits > 4 else 0.5
+
+
+def layer_page_bytes(cfg: ModelConfig, page_size: int, bits: int) -> float:
+    """Bytes of ONE page (k + v) of one layer at ``bits``."""
+    elems = page_size * cfg.num_kv_heads * cfg.head_dim
+    return 2 * elems * _bytes_per_elem(cfg, bits)
+
+
+def page_bytes_all_layers(cfg: ModelConfig, pcfg: PagedKVConfig) -> float:
+    """Bytes one logical page costs summed over every layer's pool."""
+    return sum(layer_page_bytes(cfg, pcfg.page_size, b) for b in pcfg.kv_bits)
+
+
+def pool_bytes(cfg: ModelConfig, pcfg: PagedKVConfig) -> float:
+    """Total HBM of the paged pools (scales excluded — O(P*KV) fp32)."""
+    return pcfg.num_pages * page_bytes_all_layers(cfg, pcfg)
+
+
+def dense_kv_bytes(cfg: ModelConfig, slots: int, max_len: int,
+                   bits: int = 16) -> float:
+    """HBM of the dense per-slot cache this subsystem replaces."""
+    n = kv_layer_count(cfg)
+    elems = slots * max_len * cfg.num_kv_heads * cfg.head_dim
+    return n * 2 * elems * _bytes_per_elem(cfg, bits)

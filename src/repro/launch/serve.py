@@ -13,8 +13,17 @@ numerics check, any layout); adding ``--int8`` materializes REAL int8
 storage + a DequantContext (unrolled layout), and ``--int8-compute``
 routes those matmuls through the int8 MXU kernel path.
 
+KV cache: ``--paged`` switches the dense per-slot cache for the paged
+pool (``repro.kvcache``) with ``--page-size`` token pages, ``--kv-bits``
+storage (8 = int8, 4 = packed int4), an optional ``--kv-pages`` pool
+budget, and hash-based prefix sharing (``--shared-prefix N`` makes the
+generated prompts actually share one).
+
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
       --smoke --batch 8 --prompt-len 64 --gen-len 32 --weight-bits 8
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
+      --smoke --batch 4 --requests 8 --rate 0.05 --paged --kv-bits 8 \\
+      --shared-prefix 32
 """
 from __future__ import annotations
 
@@ -64,11 +73,14 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
           int8_compute: bool = False, n_requests: Optional[int] = None,
           rate: float = 1.0, sampling: Optional[SamplingParams] = None,
           prefill_chunk: int = 32, decode_burst: int = 16,
-          clock: str = "steps") -> Dict:
+          clock: str = "steps", paged: bool = False, page_size: int = 16,
+          kv_bits: Optional[int] = None, kv_pages: Optional[int] = None,
+          prefix_sharing: bool = True, shared_prefix: int = 0) -> Dict:
     """Build the model + engine, run the load, return results + metrics."""
     cfg = smoke_config(arch) if smoke else get_config(arch)
-    if int8:
-        # per-layer dequant scales are path-keyed: needs unrolled layers
+    if int8 or paged:
+        # per-layer dequant scales / page pools are path-keyed: needs the
+        # unrolled layer layout
         cfg = dataclasses.replace(cfg, scan_layers=False)
     params = init_params(cfg, jax.random.key(seed))
 
@@ -85,19 +97,25 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
     sampling = sampling or SamplingParams()
     if n_requests is None:
         reqs = trace_requests(cfg, [(0.0, prompt_len, gen_len)] * batch,
-                              sampling=sampling, seed=seed)
+                              sampling=sampling, seed=seed,
+                              prefix_len=shared_prefix)
     else:
         reqs = poisson_requests(
             cfg, n_requests, rate,
             prompt_len=(max(1, prompt_len // 2), prompt_len),
             gen_len=(max(1, gen_len // 2), gen_len),
-            sampling=sampling, seed=seed)
+            sampling=sampling, seed=seed, prefix_len=shared_prefix)
 
+    max_len = prompt_len + gen_len
+    if paged:
+        max_len = -(-max_len // page_size) * page_size    # page multiple
     ecfg = EngineConfig(
-        max_slots=batch, max_len=prompt_len + gen_len, max_new_tokens=gen_len,
+        max_slots=batch, max_len=max_len, max_new_tokens=gen_len,
         prefill_chunk=min(prefill_chunk, max(prompt_len, 1)),
-        decode_burst=decode_burst, clock=clock, int8_compute=int8_compute)
-    engine = Engine(params, cfg, ecfg, scales=scales)
+        decode_burst=decode_burst, clock=clock, int8_compute=int8_compute,
+        kv_cache="paged" if paged else "dense", page_size=page_size,
+        kv_pages=kv_pages, prefix_sharing=prefix_sharing)
+    engine = Engine(params, cfg, ecfg, scales=scales, kv_bits=kv_bits)
     finished, metrics = engine.run(reqs)
     summ = metrics.summary()
 
@@ -135,6 +153,21 @@ def main() -> None:
                     help="open-loop: number of Poisson requests")
     ap.add_argument("--rate", type=float, default=1.0,
                     help="open-loop arrival rate (requests per clock unit)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (repro.kvcache): page pool + "
+                         "prefix sharing instead of the dense per-slot cache")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size in tokens (paged mode)")
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    help="uniform KV storage width: 16 (fp), 8 (int8), "
+                         "4 (packed int4); per-layer FIT allocation via "
+                         "examples/serve_quantized.py")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="page-pool size (default: full slot capacity)")
+    ap.add_argument("--no-prefix-sharing", action="store_true")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give all generated prompts a common prefix of "
+                         "this many tokens (exercises prefix sharing)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -150,7 +183,10 @@ def main() -> None:
                 sampling=SamplingParams(temperature=args.temperature,
                                         top_k=args.top_k, top_p=args.top_p,
                                         seed=args.seed),
-                clock=args.clock)
+                clock=args.clock, paged=args.paged, page_size=args.page_size,
+                kv_bits=args.kv_bits, kv_pages=args.kv_pages,
+                prefix_sharing=not args.no_prefix_sharing,
+                shared_prefix=args.shared_prefix)
     print(json.dumps(out["metrics"], indent=2))
     if args.json:
         with open(args.json, "w") as f:

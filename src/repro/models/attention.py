@@ -13,6 +13,7 @@ mask; GQA keeps the cache at kv_heads and contracts with grouped queries
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -187,3 +188,58 @@ def attention_decode(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
     o = jnp.einsum("bkgt,btkd->bkgd", pr.astype(v_eff.dtype), v_eff)
     o = ctx.tap("attn_out", o.reshape(b, 1, h * hd))
     return ctx.matmul("wo", o, p["wo"]), KVCache(kc, vc)
+
+
+def attention_decode_paged(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
+                           lp, table: jnp.ndarray, pos: jnp.ndarray,
+                           write_limit: jnp.ndarray):
+    """One-token decode against a paged KV pool (``repro.kvcache``).
+
+    ``lp`` is this layer's ``LayerPages`` pool; ``table`` (B, NP) maps
+    each slot's logical pages to physical ones; ``pos`` is the (B,)
+    per-slot position vector (the continuous-batching engine is the only
+    caller). The new token's K/V scatter into the slot's current page —
+    quantized with the page's scale when the pool stores int8/int4 —
+    and the read walks the page table (Pallas kernel on TPU, the
+    bit-identical jnp oracle elsewhere). Writes at positions >=
+    ``write_limit`` (slot budget exhausted / slot inactive after its
+    table row was unmapped) are dropped so a recycled page can never be
+    corrupted by a stale slot.
+
+    At fp page precision each row's output is bit-identical to
+    ``attention_decode`` over a dense cache — the paged-vs-dense engine
+    parity contract (see ``kernels.ref.paged_attention``).
+    """
+    from repro.kernels import ops as kops       # deferred: import cycle
+    from repro.kvcache.paged import quantize_kv
+
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = ctx.matmul("wq", x, p["wq"]).reshape(b, 1, h, hd)
+    knew = ctx.matmul("wk", x, p["wk"]).reshape(b, 1, kv, hd)
+    vnew = ctx.matmul("wv", x, p["wv"]).reshape(b, 1, kv, hd)
+    posb = pos[:, None]
+    q = apply_rope(q, posb, cfg.rope_theta)
+    knew = apply_rope(knew, posb, cfg.rope_theta)
+
+    page, num_pages = lp.page_size, lp.num_pages
+    rows = jnp.arange(b)
+    col = jnp.clip(pos // page, 0, table.shape[1] - 1)
+    pid = jnp.where(pos < write_limit, table[rows, col], num_pages)
+    off = pos % page
+    sp = jnp.clip(pid, 0, num_pages - 1)
+    if lp.bits < 16:
+        kq = quantize_kv(knew[:, 0], lp.k_scale[sp], lp.bits)
+        vq = quantize_kv(vnew[:, 0], lp.v_scale[sp], lp.bits)
+    else:
+        kq = knew[:, 0].astype(lp.k.dtype)
+        vq = vnew[:, 0].astype(lp.v.dtype)
+    kc = lp.k.at[pid, off].set(kq, mode="drop")
+    vc = lp.v.at[pid, off].set(vq, mode="drop")
+
+    o = kops.paged_attention(q, kc, vc, table, pos, lp.k_scale, lp.v_scale,
+                             lp.bits)
+    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+    o = ctx.tap("attn_out", o)
+    return ctx.matmul("wo", o, p["wo"]), dataclasses.replace(lp, k=kc, v=vc)

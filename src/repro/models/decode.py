@@ -15,10 +15,18 @@ every slot decodes its own request at its own offset; ``prefill_into``
 continues an existing state (chunked prefill); ``state_insert_slot``
 scatters a batch-1 prefilled state into one slot of a batched state
 (admission / backfill after eviction).
+
+Paged KV (``repro.kvcache``): when ``DecodeState.paged`` is set, the
+attention caches live in per-layer page pools addressed through a page
+table instead of the dense ``kv`` buffer; ``decode_step`` routes through
+the paged attention path. Requires the unrolled (``scan_layers=False``)
+parameter layout — per-layer pools carry per-layer storage dtypes, which
+a scanned stack cannot express. Prefill stays dense (batch-1 scratch);
+the engine scatters the result into pages at admission.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Mapping, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +37,8 @@ from repro.models.context import Context
 from repro.models.mamba2 import MambaState, _conv_channels
 from repro.models.partition import constrain
 from repro.models.transformer import (
-    _attn_mlp_block_decode, _mamba_block_decode, logits_from_hidden,
-    vocab_padded)
+    _attn_mlp_block_decode, _attn_mlp_block_decode_paged,
+    _mamba_block_decode, logits_from_hidden, vocab_padded)
 
 
 class DecodeState(NamedTuple):
@@ -38,6 +46,7 @@ class DecodeState(NamedTuple):
     kv: Optional[KVCache] = None          # attention caches (stacked)
     ssm: Optional[MambaState] = None      # mamba states (stacked)
     rest: Optional[MambaState] = None     # hybrid remainder layers
+    paged: Optional[Any] = None           # kvcache.PagedState (else dense kv)
 
 
 def _kv_struct(cfg: ModelConfig, n: int, b: int, t: int, abstract: bool) -> KVCache:
@@ -85,6 +94,30 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     raise ValueError(cfg.family)
 
 
+def init_paged_decode_state(cfg: ModelConfig, pcfg, batch: int,
+                            ranges: Optional[Mapping] = None) -> DecodeState:
+    """Decode state whose attention caches are paged pools (per-slot
+    positions — the serving engine is the only consumer). SSM states of
+    hybrid stacks stay dense per-slot (they are O(1) per slot)."""
+    from repro.kvcache.paged import init_paged_kv      # deferred: cycle
+    pos = jnp.zeros((batch,), jnp.int32)
+    paged = init_paged_kv(cfg, pcfg, batch, ranges)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return DecodeState(pos=pos, paged=paged)
+    if cfg.family == "hybrid":
+        n_groups, rem = divmod(cfg.num_layers, cfg.attn_period)
+        return DecodeState(
+            pos=pos, paged=paged,
+            ssm=_ssm_struct(cfg, (n_groups, cfg.attn_period), batch, False),
+            rest=_ssm_struct(cfg, (rem,), batch, False) if rem else None)
+    raise ValueError(f"family {cfg.family!r} holds no KV cache to page")
+
+
+def _require_unrolled_decode(params) -> bool:
+    layers = params.get("layers") or params.get("groups") or {}
+    return isinstance(layers, dict) and "0" in layers
+
+
 def _embed_token(params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     """tokens: (B, 1) (or (B, 1, CB) for audio) -> (B, 1, D)."""
     if cfg.family == "audio":
@@ -93,6 +126,37 @@ def _embed_token(params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
             x = x + jnp.take(params["embed"][cb], tokens[..., cb], axis=0)
         return x
     return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _hybrid_unrolled_sweep(params, state: DecodeState, x, cfg: ModelConfig,
+                           ctx, attn_for_group):
+    """Unrolled hybrid stack shared by the dense- and paged-cache decode
+    paths: ``attn_for_group(g, x) -> x`` runs group ``g``'s shared
+    attention block (recording its own cache); the mamba blocks and the
+    remainder layers live here, in exactly one place."""
+    n_groups, rem = divmod(cfg.num_layers, cfg.attn_period)
+    ssms, rests = [], []
+    for g in range(n_groups):
+        x = attn_for_group(g, x)
+        row = []
+        for i in range(cfg.attn_period):
+            si = jax.tree.map(lambda s: s[g, i], state.ssm)
+            with ctx.scope(f"groups/{g}/{i}"):
+                x, si = _mamba_block_decode(
+                    x, params["groups"][str(g)][str(i)], cfg, ctx, si)
+            row.append(si)
+        ssms.append(jax.tree.map(lambda *ss: jnp.stack(ss), *row))
+    new_ssm = jax.tree.map(lambda *ss: jnp.stack(ss), *ssms)
+    new_rest = state.rest
+    if state.rest is not None:
+        for i in range(rem):
+            si = jax.tree.map(lambda s: s[i], state.rest)
+            with ctx.scope(f"rest/{i}"):
+                x, si = _mamba_block_decode(x, params["rest"][str(i)],
+                                            cfg, ctx, si)
+            rests.append(si)
+        new_rest = jax.tree.map(lambda *ss: jnp.stack(ss), *rests)
+    return x, new_ssm, new_rest
 
 
 def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
@@ -106,6 +170,8 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
     frontend-stub embeddings (VLM image patches) during prefill.
     ``ctx`` hooks weight access (e.g. DequantContext for int8 serving)."""
     ctx = ctx or Context()
+    if state.paged is not None:
+        return _decode_step_paged(params, state, tokens, cfg, embed, ctx)
     x = embed if embed is not None else _embed_token(params, tokens, cfg)
     x = x.astype(cfg.param_dtype)
     x = constrain(x, "batch", None, None)
@@ -153,32 +219,19 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
     elif cfg.family == "hybrid":
         shared = params["shared"]
         if unrolled or (isinstance(params["groups"], dict) and "0" in params["groups"]):
-            n_groups, rem = divmod(cfg.num_layers, cfg.attn_period)
-            kvs, ssms, rests = [], [], []
-            for g in range(n_groups):
+            kvs = []
+
+            def attn_for_group(g, h):
                 cg = jax.tree.map(lambda c: c[g], state.kv)
                 with ctx.scope("shared"):
-                    x, cg = _attn_mlp_block_decode(x, shared, cfg, ctx, cg, pos)
+                    h, cg = _attn_mlp_block_decode(h, shared, cfg, ctx, cg,
+                                                   pos)
                 kvs.append(cg)
-                row = []
-                for i in range(cfg.attn_period):
-                    si = jax.tree.map(lambda s: s[g, i], state.ssm)
-                    with ctx.scope(f"groups/{g}/{i}"):
-                        x, si = _mamba_block_decode(
-                            x, params["groups"][str(g)][str(i)], cfg, ctx, si)
-                    row.append(si)
-                ssms.append(jax.tree.map(lambda *ss: jnp.stack(ss), *row))
+                return h
+
+            x, new_ssm, new_rest = _hybrid_unrolled_sweep(
+                params, state, x, cfg, ctx, attn_for_group)
             new_kv = jax.tree.map(lambda *cs: jnp.stack(cs), *kvs)
-            new_ssm = jax.tree.map(lambda *ss: jnp.stack(ss), *ssms)
-            new_rest = state.rest
-            if state.rest is not None:
-                for i in range(rem):
-                    si = jax.tree.map(lambda s: s[i], state.rest)
-                    with ctx.scope(f"rest/{i}"):
-                        x, si = _mamba_block_decode(x, params["rest"][str(i)],
-                                                    cfg, ctx, si)
-                    rests.append(si)
-                new_rest = jax.tree.map(lambda *ss: jnp.stack(ss), *rests)
         else:
             def group_body(h, xs):
                 gp, cache, sts = xs
@@ -202,6 +255,63 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
         new_state = DecodeState(pos=pos + 1, kv=new_kv, ssm=new_ssm, rest=new_rest)
     else:
         raise ValueError(cfg.family)
+
+    logits = logits_from_hidden(params, x, cfg, ctx)
+    return logits, new_state
+
+
+def _decode_step_paged(params, state: DecodeState, tokens: jnp.ndarray,
+                       cfg: ModelConfig, embed, ctx
+                       ) -> Tuple[jnp.ndarray, DecodeState]:
+    """One decode step with paged attention caches (see module docstring).
+
+    Same structure as ``decode_step``'s unrolled branches — the block
+    skeleton (``_decode_block``) and the hybrid SSM sweep
+    (``_hybrid_unrolled_sweep``) are shared code, only the attention
+    state plumbing differs. ``pos`` must be the (B,) per-slot vector
+    (the engine's layout).
+    """
+    if not _require_unrolled_decode(params):
+        raise ValueError(
+            "paged KV serving needs the unrolled parameter layout "
+            "(init_params with scan_layers=False): per-layer page pools "
+            "carry per-layer storage dtypes, which a lax.scan-stacked "
+            "tree cannot express")
+    ps = state.paged
+    x = embed if embed is not None else _embed_token(params, tokens, cfg)
+    x = x.astype(cfg.param_dtype)
+    x = constrain(x, "batch", None, None)
+    pos = state.pos
+    table, limit = ps.table, ps.write_limit
+    new_layers: Dict[str, Any] = {}
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        for i in range(cfg.num_layers):
+            lp = ps.layers[str(i)]
+            with ctx.scope(f"layers/{i}"):
+                x, lp = _attn_mlp_block_decode_paged(
+                    x, params["layers"][str(i)], cfg, ctx, lp, table, pos,
+                    limit)
+            new_layers[str(i)] = lp
+        new_state = DecodeState(pos=pos + 1,
+                                paged=ps._replace(layers=new_layers))
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def attn_for_group(g, h):
+            lp = ps.layers[str(g)]
+            with ctx.scope("shared"):
+                h, lp = _attn_mlp_block_decode_paged(
+                    h, shared, cfg, ctx, lp, table, pos, limit)
+            new_layers[str(g)] = lp
+            return h
+
+        x, new_ssm, new_rest = _hybrid_unrolled_sweep(
+            params, state, x, cfg, ctx, attn_for_group)
+        new_state = DecodeState(pos=pos + 1, ssm=new_ssm, rest=new_rest,
+                                paged=ps._replace(layers=new_layers))
+    else:
+        raise ValueError(f"family {cfg.family!r} holds no KV cache to page")
 
     logits = logits_from_hidden(params, x, cfg, ctx)
     return logits, new_state

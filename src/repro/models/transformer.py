@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.configs import ModelConfig
 from repro.models.attention import (
-    KVCache, attention_apply, attention_decode, init_attention)
+    KVCache, attention_apply, attention_decode, attention_decode_paged,
+    init_attention)
 from repro.models.context import Context, QATContext
 from repro.models.layers import init_dense, init_norm, mlp_apply, init_mlp, rmsnorm
 from repro.models.mamba2 import (
@@ -164,10 +165,14 @@ def _mamba_block(x, bp, cfg: ModelConfig, ctx):
     return constrain(x, "batch", "seq", None)
 
 
-def _attn_mlp_block_decode(x, bp, cfg, ctx, cache: KVCache, pos):
+def _decode_block(x, bp, cfg, ctx, attn):
+    """Decode-block skeleton shared by the dense- and paged-cache paths:
+    ``attn(h)`` runs the attention step and returns (output, new attention
+    state) — the residual/MoE/MLP structure lives in exactly one place so
+    the paged path can never drift from the dense one."""
     with ctx.scope("attn"):
         h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
-        a, cache = attention_decode(h, bp["attn"], cfg, ctx, cache, pos)
+        a, st = attn(h)
         x = x + a
     if cfg.family == "moe":
         with ctx.scope("moe"):
@@ -178,7 +183,24 @@ def _attn_mlp_block_decode(x, bp, cfg, ctx, cache: KVCache, pos):
         with ctx.scope("mlp"):
             h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
             x = x + mlp_apply(h, bp["mlp"], cfg.act, ctx)
-    return x, cache
+    return x, st
+
+
+def _attn_mlp_block_decode(x, bp, cfg, ctx, cache: KVCache, pos):
+    return _decode_block(
+        x, bp, cfg, ctx,
+        lambda h: attention_decode(h, bp["attn"], cfg, ctx, cache, pos))
+
+
+def _attn_mlp_block_decode_paged(x, bp, cfg, ctx, lp, table, pos,
+                                 write_limit):
+    """``_attn_mlp_block_decode`` over a paged KV pool (repro.kvcache):
+    the attention state is a LayerPages pool + page table instead of a
+    dense KVCache."""
+    return _decode_block(
+        x, bp, cfg, ctx,
+        lambda h: attention_decode_paged(h, bp["attn"], cfg, ctx, lp,
+                                         table, pos, write_limit))
 
 
 def _mamba_block_decode(x, bp, cfg, ctx, state: MambaState):

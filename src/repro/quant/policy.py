@@ -46,6 +46,10 @@ class QuantPolicy:
     pinned_substrings: Sequence[str] = DEFAULT_PINNED
     pinned_bits: int = 8
     quantize_activations: bool = True
+    # Bit widths the paged KV cache can STORE (repro.kvcache): 16 = fp,
+    # 8 = int8 bytes, 4 = packed nibbles. Unlike ``allowed_bits`` these
+    # must be byte-realizable storage formats, not just fake-quant grids.
+    kv_allowed_bits: Sequence[int] = (4, 8, 16)
 
     def is_pinned(self, name: str) -> bool:
         return any(s in name.lower() for s in self.pinned_substrings)

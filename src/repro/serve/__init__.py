@@ -2,9 +2,13 @@
 
 FIT's deployment story: take the ``BitConfig`` a sensitivity report
 recommends, materialize it as real int8 storage, and serve it under
-realistic request loads with continuous batching. See ``engine.py`` for
-the architecture and ROADMAP.md for the north star this serves.
+realistic request loads with continuous batching. The KV cache can run
+paged (``EngineConfig(kv_cache="paged")`` — ``repro.kvcache``): page
+pools with prefix sharing and FIT-allocated per-layer KV bit widths
+(``allocate_kv_bits``). See ``engine.py`` for the architecture and
+ROADMAP.md for the north star this serves.
 """
+from repro.kvcache.fit import allocate_kv_bits, kv_bit_config, kv_report_fns
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.loadgen import poisson_requests, synth_prompt, trace_requests
 from repro.serve.metrics import EngineMetrics
@@ -15,7 +19,8 @@ from repro.serve.sampling import SamplingParams, request_keys, sample_tokens
 
 __all__ = [
     "Engine", "EngineConfig", "EngineMetrics", "Request", "RequestStatus",
-    "SamplingParams", "bit_config_from_report", "make_dequant_context",
+    "SamplingParams", "allocate_kv_bits", "bit_config_from_report",
+    "kv_bit_config", "kv_report_fns", "make_dequant_context",
     "poisson_requests", "quantize_params_int8", "request_keys",
     "sample_tokens", "synth_prompt", "trace_requests",
 ]

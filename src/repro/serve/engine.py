@@ -31,6 +31,17 @@ tests in ``tests/test_serve.py`` pin down.
 Quantized serving: pass ``scales`` from ``repro.serve.quantized`` and the
 engine runs the whole decode graph through a ``DequantContext`` — int8
 weight storage, optionally int8 MXU matmuls (``int8_compute=True``).
+
+Paged KV cache (``kv_cache="paged"``, see ``repro.kvcache``): attention
+state moves from the dense per-slot buffer into fixed-size pages with
+per-slot page tables — KV memory becomes O(actual tokens) instead of
+O(slots x max_len), per-layer bit widths (int8 / packed int4) come from
+FIT's activation sensitivities, and identical prompt prefixes are stored
+once (hash-matched full pages are refcount-shared; the boundary page is
+copied on write). Admission gathers a shared prefix out of the pool into
+the batch-1 scratch state and prefills only the suffix. At fp page
+precision the engine's outputs remain bit-identical to the dense-cache
+engine (and therefore to isolated decode).
 """
 from __future__ import annotations
 
@@ -38,16 +49,22 @@ import collections
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelConfig
+from repro.models.attention import KVCache
 from repro.models.context import Context, DequantContext
 from repro.models.decode import (
-    decode_step, init_decode_state, prefill_into, state_insert_slot)
+    DecodeState, decode_step, init_decode_state, init_paged_decode_state,
+    prefill_into, state_insert_slot)
+from repro.kvcache.allocator import BlockAllocator
+from repro.kvcache.paged import (
+    PagedKVConfig, copy_page, gather_layer, kv_layer_count,
+    page_bytes_all_layers, scatter_span)
 from repro.serve.metrics import EngineMetrics
 from repro.serve.request import Request, RequestStatus
 from repro.serve.sampling import greedy_tokens, request_keys, sample_tokens
@@ -68,18 +85,52 @@ class EngineConfig:
     interleave_steps: int = 4     # decode steps run between prefill chunks
     clock: str = "steps"          # "steps" (deterministic) | "wall" (seconds)
     int8_compute: bool = False    # route int8 blocks through the MXU kernel
+    # ---- paged KV cache (repro.kvcache) ----
+    kv_cache: str = "dense"       # "dense" | "paged"
+    page_size: int = 16           # tokens per KV page
+    kv_pages: Optional[int] = None  # pool size; None = full capacity
+    prefix_sharing: bool = True   # hash-share identical prompt prefixes
 
 
 class Engine:
     """Slot-based continuous-batching engine over ``decode_step``."""
 
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
-                 scales: Optional[Dict[str, jnp.ndarray]] = None):
+                 scales: Optional[Dict[str, jnp.ndarray]] = None,
+                 kv_bits=None,
+                 kv_ranges: Optional[Mapping] = None):
+        """``kv_bits`` (paged mode): None/int uniform or {layer -> bits}
+        from ``repro.kvcache.fit.allocate_kv_bits``. ``kv_ranges``:
+        calibrated activation ranges (``SensitivityReport.act_ranges``)
+        for the per-page dequant scales."""
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
         self.scales = dict(scales) if scales else {}
         self._audio = cfg.family == "audio"
+
+        self._paged = ecfg.kv_cache == "paged"
+        self._pcfg: Optional[PagedKVConfig] = None
+        self._kv_ranges = dict(kv_ranges) if kv_ranges else None
+        if self._paged:
+            if cfg.family == "ssm":
+                raise ValueError("ssm family holds no KV cache to page")
+            layers = params.get("layers") or params.get("groups") or {}
+            if not (isinstance(layers, dict) and "0" in layers):
+                raise ValueError(
+                    "paged KV serving needs the unrolled parameter layout "
+                    "(init_params with scan_layers=False)")
+            self._pcfg = PagedKVConfig.build(
+                cfg, ecfg.max_len, ecfg.max_slots, page_size=ecfg.page_size,
+                num_pages=ecfg.kv_pages, kv_bits=kv_bits)
+            self._n_kv_layers = kv_layer_count(cfg)
+            self._share = ecfg.prefix_sharing and cfg.family != "hybrid"
+            if ecfg.prefix_sharing and cfg.family == "hybrid":
+                # a shared prefix would also need the SSM state at the
+                # split point, which is not cached — attention pages
+                # still paged, prefix reuse off
+                log.info("hybrid family: prefix sharing disabled "
+                         "(SSM state at the split is not cached)")
 
         S, G = ecfg.max_slots, ecfg.max_new_tokens
         cb = (cfg.num_codebooks,) if self._audio else ()
@@ -176,6 +227,91 @@ class Engine:
                                     donate_argnums=(2, 3, 4, 5))
         self._warmed_modes: set = set()
 
+        if self._paged:
+            nl = self._n_kv_layers
+
+            def insert_paged_fn(state, sub, slot, row, start, plen, limit,
+                                tok, tok0, out, slots, seed, temp, top_k,
+                                top_p, budget):
+                """Paged admission: scatter the scratch-prefilled KV span
+                [start, plen) into the slot's pages (tokens < start came
+                from a shared prefix and are already in the pool), map
+                the slot's page-table row, and write the slot-table row
+                exactly like the dense insert."""
+                ps = state.paged
+                layers = dict(ps.layers)
+                for i in range(nl):
+                    layers[str(i)] = scatter_span(
+                        layers[str(i)], row, sub.kv.k[i, 0], sub.kv.v[i, 0],
+                        start, plen)
+                pos = state.pos.at[slot].set(plen)
+                ssm = rest = None
+                if state.ssm is not None:
+                    ax = 2 if cfg.family == "hybrid" else 1
+
+                    def put(a):
+                        def one(dst, src):
+                            idx = (slice(None),) * a + (slot,)
+                            return dst.at[idx].set(
+                                jax.lax.index_in_dim(src, 0, a,
+                                                     keepdims=False))
+                        return one
+                    ssm = jax.tree.map(put(ax), state.ssm, sub.ssm)
+                    if state.rest is not None:
+                        rest = jax.tree.map(put(1), state.rest, sub.rest)
+                state = DecodeState(
+                    pos=pos, ssm=ssm, rest=rest,
+                    paged=ps._replace(
+                        layers=layers,
+                        table=ps.table.at[slot].set(row),
+                        write_limit=ps.write_limit.at[slot].set(limit)))
+                tok = tok.at[slot].set(tok0)
+                out = out.at[slot, 0].set(tok0[0])
+                slots = {
+                    "active": slots["active"].at[slot].set(True),
+                    "nwritten": slots["nwritten"].at[slot].set(1),
+                    "seeds": slots["seeds"].at[slot].set(seed),
+                    "temps": slots["temps"].at[slot].set(temp),
+                    "top_ks": slots["top_ks"].at[slot].set(top_k),
+                    "top_ps": slots["top_ps"].at[slot].set(top_p),
+                    "budget": slots["budget"].at[slot].set(budget),
+                }
+                return state, tok, out, slots
+
+            def gather_fn(state, row, shared_len):
+                """Shared prefix -> dense batch-1 scratch cache (suffix
+                prefill attends to it without recomputation)."""
+                ks, vs = [], []
+                for i in range(nl):
+                    kg, vg = gather_layer(state.paged.layers[str(i)], row,
+                                          shared_len, cfg.param_dtype)
+                    ks.append(kg)
+                    vs.append(vg)
+                return KVCache(jnp.stack(ks)[:, None], jnp.stack(vs)[:, None])
+
+            def copy_page_fn(state, src, dst):
+                ps = state.paged
+                layers = {k: copy_page(lp, src, dst)
+                          for k, lp in ps.layers.items()}
+                return state._replace(paged=ps._replace(layers=layers))
+
+            def set_table_fn(state, table):
+                return state._replace(
+                    paged=state.paged._replace(table=table))
+
+            def clear_slot_fn(state, slot):
+                ps = state.paged
+                return state._replace(paged=ps._replace(
+                    table=ps.table.at[slot].set(self._pcfg.num_pages),
+                    write_limit=ps.write_limit.at[slot].set(0)))
+
+            self._insert_paged = jax.jit(insert_paged_fn,
+                                         donate_argnums=(0, 7, 9, 10))
+            self._gather = jax.jit(gather_fn)
+            self._copy_page = jax.jit(copy_page_fn, donate_argnums=(0,))
+            self._set_table = jax.jit(set_table_fn, donate_argnums=(0,))
+            self._clear_slot = jax.jit(clear_slot_fn, donate_argnums=(0,))
+
     def _fresh_slot_table(self) -> Dict[str, jnp.ndarray]:
         S = self.ecfg.max_slots
         return {
@@ -198,6 +334,14 @@ class Engine:
             return "nofilter"
         return "full"
 
+    def _fresh_state(self) -> DecodeState:
+        if self._paged:
+            return init_paged_decode_state(self.cfg, self._pcfg,
+                                           self.ecfg.max_slots,
+                                           self._kv_ranges)
+        return init_decode_state(self.cfg, self.ecfg.max_slots,
+                                 self.ecfg.max_len, per_slot_pos=True)
+
     def warmup(self, modes: Sequence[str] = ("greedy",)) -> None:
         """Compile every shape the serving loop dispatches: all power-of-
         two burst sizes (per sampler mode), the full prefill chunk, and
@@ -208,8 +352,7 @@ class Engine:
         if not modes and self._warmed_modes:
             return
         cfg, ecfg = self.cfg, self.ecfg
-        state = init_decode_state(cfg, ecfg.max_slots, ecfg.max_len,
-                                  per_slot_pos=True)
+        state = self._fresh_state()
         tok = jnp.zeros(self._tok_shape, jnp.int32)
         out = jnp.zeros(self._out_shape, jnp.int32)
         slots = self._fresh_slot_table()
@@ -230,9 +373,25 @@ class Engine:
         tok0 = self._sample_first(self.scales, logits[:, -1], z1,
                                   jnp.zeros(1, jnp.float32), z1,
                                   jnp.ones(1, jnp.float32))
-        state, tok, out, slots = self._insert(
-            state, ps, jnp.int32(0), tok, tok0, out, slots, jnp.int32(0),
-            jnp.float32(0), jnp.int32(0), jnp.float32(1), jnp.int32(1))
+        if self._paged:
+            row = jnp.full(self._pcfg.pages_per_slot, self._pcfg.num_pages,
+                           jnp.int32)
+            if self._share:
+                kvd = self._gather(state, row, jnp.int32(0))
+                ps = ps._replace(kv=kvd)
+                state = self._copy_page(state, jnp.int32(0), jnp.int32(0))
+            state, tok, out, slots = self._insert_paged(
+                state, ps, jnp.int32(0), row, jnp.int32(0), jnp.int32(1),
+                jnp.int32(2), tok, tok0, out, slots, jnp.int32(0),
+                jnp.float32(0), jnp.int32(0), jnp.float32(1), jnp.int32(1))
+            state = self._set_table(
+                state, jnp.full((ecfg.max_slots, self._pcfg.pages_per_slot),
+                                self._pcfg.num_pages, jnp.int32))
+            state = self._clear_slot(state, jnp.int32(0))
+        else:
+            state, tok, out, slots = self._insert(
+                state, ps, jnp.int32(0), tok, tok0, out, slots, jnp.int32(0),
+                jnp.float32(0), jnp.int32(0), jnp.float32(1), jnp.int32(1))
         slots = self._deactivate(slots, jnp.int32(0))
         jax.block_until_ready(slots["active"])
 
@@ -265,8 +424,7 @@ class Engine:
         self.warmup({"greedy", self._run_mode})
         cfg, ecfg = self.cfg, self.ecfg
         S = ecfg.max_slots
-        self._state = init_decode_state(cfg, S, ecfg.max_len,
-                                        per_slot_pos=True)
+        self._state = self._fresh_state()
         self._tok = jnp.zeros(self._tok_shape, jnp.int32)
         self._out = jnp.zeros(self._out_shape, jnp.int32)
         # device-resident slot table (bursts take zero host->device
@@ -276,9 +434,20 @@ class Engine:
         self._active = np.zeros(S, bool)
         self._nwritten = np.zeros(S, np.int64)
         self._budget = np.zeros(S, np.int64)
+        if self._paged:
+            self._alloc = BlockAllocator(self._pcfg.num_pages,
+                                         self._pcfg.page_size,
+                                         prefix_sharing=self._share)
+            self._rows: List[List[int]] = [[] for _ in range(S)]
+            self._pos_h = np.zeros(S, np.int64)
+            self._limit_h = np.zeros(S, np.int64)
+            self._page_bytes = page_bytes_all_layers(cfg, self._pcfg)
         self._ticks = 0
         self._t0 = time.perf_counter()
         self.metrics = EngineMetrics(max_slots=S)
+        if self._paged:
+            self.metrics.kv_total_pages = self._pcfg.num_pages
+            self.metrics.kv_page_bytes = self._page_bytes
         finished: List[Request] = []
 
         pending = collections.deque(
@@ -288,10 +457,19 @@ class Engine:
             # ---- admission: fill free slots with arrived requests ----
             while (pending and not self._active.all()
                    and pending[0].arrival_time <= self._now()):
-                self._admit(pending.popleft())
+                if not self._admit(pending[0]):
+                    break                        # KV pool full: decode on
+                pending.popleft()
                 self._harvest(finished)          # max_new_tokens == 1
             if not self._active.any():
                 if pending:
+                    if (self._paged
+                            and pending[0].arrival_time <= self._now()):
+                        raise RuntimeError(
+                            f"KV page pool ({self._pcfg.num_pages} pages) "
+                            f"cannot hold request {pending[0].id} even "
+                            "with every slot idle — raise kv_pages or "
+                            "lower max_new_tokens")
                     self._advance_to(pending[0].arrival_time)
                 continue
 
@@ -320,11 +498,46 @@ class Engine:
         return finished, self.metrics
 
     # ------------------------------------------------------------------
-    def _admit(self, req: Request) -> None:
+    def _pad_row(self, ids: List[int]) -> jnp.ndarray:
+        row = np.full(self._pcfg.pages_per_slot, self._pcfg.num_pages,
+                      np.int32)
+        row[:len(ids)] = ids
+        return jnp.asarray(row)
+
+    def _plan_pages(self, slot: int, req: Request):
+        """Allocator side of paged admission: match the prompt's prefix
+        against resident pages, claim/allocate, and reserve the decode
+        growth. Returns None (admission deferred) if the pool cannot
+        also cover the request's worst-case decode — reserving up front
+        is what makes mid-decode page exhaustion impossible."""
+        alloc, page = self._alloc, self._pcfg.page_size
+        plen = req.prompt_len
+        prompt = np.asarray(req.prompt)
+        limit = min(plen + req.max_new_tokens, self.ecfg.max_len)
+        total_pages = -(-limit // page)
+        full_ids, shared_len, partial_src = ([], 0, None)
+        if self._share:
+            full_ids, shared_len, partial_src = alloc.match_prefix(
+                prompt, plen - 1)
+        n_prompt_pages = -(-plen // page)
+        new_now = n_prompt_pages - len(full_ids)
+        future = total_pages - n_prompt_pages
+        if alloc.available() < new_now + future:
+            return None
+        alloc.claim(full_ids)
+        fresh = alloc.allocate(new_now)
+        alloc.reserve(slot, future)
+        alloc.shared_tokens += shared_len
+        if partial_src is not None:
+            alloc.cow_copies += 1
+        row = list(full_ids) + list(fresh)
+        gather_ids = list(full_ids) + ([partial_src]
+                                       if partial_src is not None else [])
+        return shared_len, partial_src, row, gather_ids
+
+    def _admit(self, req: Request) -> bool:
         ecfg = self.ecfg
         slot = int(np.flatnonzero(~self._active)[0])
-        req.slot, req.status = slot, RequestStatus.PREFILLING
-        req.t_admitted = self._now()
         if req.prompt_len >= ecfg.max_len:
             raise ValueError(
                 f"request {req.id}: prompt ({req.prompt_len}) does not fit "
@@ -340,10 +553,25 @@ class Engine:
                         ecfg.max_new_tokens)
             req.max_new_tokens = budget
 
+        shared_len, partial_src, row, gather_ids = 0, None, None, None
+        if self._paged:
+            plan = self._plan_pages(slot, req)
+            if plan is None:
+                return False                   # pool full — try later
+            shared_len, partial_src, row, gather_ids = plan
+        req.slot, req.status = slot, RequestStatus.PREFILLING
+        req.t_admitted = self._now()
+
         pstate = init_decode_state(self.cfg, 1, ecfg.max_len)
+        if shared_len > 0:
+            # prefix reuse: seed the scratch cache from the shared pages
+            # and prefill only the suffix (the engine's prefill saving)
+            kvd = self._gather(self._state, self._pad_row(gather_ids),
+                               jnp.int32(shared_len))
+            pstate = pstate._replace(pos=jnp.int32(shared_len), kv=kvd)
         prompt = jnp.asarray(req.prompt)[None]               # (1, P[, CB])
         logits = None
-        for lo in range(0, req.prompt_len, ecfg.prefill_chunk):
+        for lo in range(shared_len, req.prompt_len, ecfg.prefill_chunk):
             chunk = prompt[:, lo:lo + ecfg.prefill_chunk]
             t0 = time.perf_counter()
             logits, pstate = self._prefill(self.params, self.scales,
@@ -370,11 +598,37 @@ class Engine:
             jnp.asarray([s.temperature], jnp.float32),
             jnp.asarray([s.top_k], jnp.int32),
             jnp.asarray([s.top_p], jnp.float32))
-        self._state, self._tok, self._out, self._dslots = self._insert(
-            self._state, pstate, jnp.int32(slot), self._tok, tok0, self._out,
-            self._dslots, jnp.int32(s.seed), jnp.float32(s.temperature),
-            jnp.int32(s.top_k), jnp.float32(s.top_p),
-            jnp.int32(req.max_new_tokens))
+        if self._paged:
+            if partial_src is not None:
+                # copy-on-write: own the partially-filled boundary page
+                # before the suffix insert writes into it
+                dst = row[len(gather_ids) - 1]
+                self._state = self._copy_page(self._state,
+                                              jnp.int32(partial_src),
+                                              jnp.int32(dst))
+            plen = req.prompt_len
+            limit = min(plen + req.max_new_tokens, ecfg.max_len)
+            self._state, self._tok, self._out, self._dslots = \
+                self._insert_paged(
+                    self._state, pstate, jnp.int32(slot), self._pad_row(row),
+                    jnp.int32(shared_len), jnp.int32(plen), jnp.int32(limit),
+                    self._tok, tok0, self._out, self._dslots,
+                    jnp.int32(s.seed), jnp.float32(s.temperature),
+                    jnp.int32(s.top_k), jnp.float32(s.top_p),
+                    jnp.int32(req.max_new_tokens))
+            self._alloc.register_prompt(np.asarray(req.prompt), row, plen)
+            self._rows[slot] = row
+            self._pos_h[slot] = plen
+            self._limit_h[slot] = limit
+            self.metrics.record_kv_usage(self._alloc.pages_in_use)
+            self.metrics.kv_shared_tokens = self._alloc.shared_tokens
+            self.metrics.kv_cow_copies = self._alloc.cow_copies
+        else:
+            self._state, self._tok, self._out, self._dslots = self._insert(
+                self._state, pstate, jnp.int32(slot), self._tok, tok0,
+                self._out, self._dslots, jnp.int32(s.seed),
+                jnp.float32(s.temperature), jnp.int32(s.top_k),
+                jnp.float32(s.top_p), jnp.int32(req.max_new_tokens))
 
         self._slots[slot] = req
         self._active[slot] = True
@@ -382,8 +636,35 @@ class Engine:
         self._budget[slot] = req.max_new_tokens
         req.t_first_token = self._now()
         req.status = RequestStatus.RUNNING
+        return True
 
     # ------------------------------------------------------------------
+    def _grow_tables(self, steps: int) -> None:
+        """Before a paged burst: extend each active slot's page row to
+        cover its next ``steps`` writes (reservations made at admission
+        guarantee the pages exist). All grown rows push to the device in
+        ONE full-table upload — (S, NP) int32 is tiny, and one dispatch
+        beats one per slot on the decode hot path. At most
+        ceil(steps/page) new pages per slot per burst."""
+        page = self._pcfg.page_size
+        grew = False
+        for b in np.flatnonzero(self._active):
+            need = -(-min(self._pos_h[b] + steps, self._limit_h[b]) // page)
+            have = len(self._rows[b])
+            if need <= have:
+                continue
+            ids = self._alloc.allocate(need - have, owner=int(b))
+            assert ids is not None, "reservation accounting broken"
+            self._rows[b] += ids
+            grew = True
+        if grew:
+            table = np.full((self.ecfg.max_slots, self._pcfg.pages_per_slot),
+                            self._pcfg.num_pages, np.int32)
+            for b in np.flatnonzero(self._active):
+                table[b, :len(self._rows[b])] = self._rows[b]
+            self._state = self._set_table(self._state, jnp.asarray(table))
+            self.metrics.record_kv_usage(self._alloc.pages_in_use)
+
     def _burst(self, steps: int) -> None:
         if steps <= 0:
             return
@@ -391,6 +672,8 @@ class Engine:
         # bounded set of burst shapes keeps the compile count at
         # O(log decode_burst) instead of one per distinct remaining-count
         steps = 1 << (steps.bit_length() - 1)
+        if self._paged:
+            self._grow_tables(steps)
         exact = self._mode_for([self._slots[b].sampling
                                 for b in np.flatnonzero(self._active)])
         mode = exact if exact in self._warmed_modes else self._run_mode
@@ -404,6 +687,8 @@ class Engine:
         before = self._nwritten[self._active]
         after = np.minimum(before + steps, self._budget[self._active])
         self._nwritten[self._active] = after
+        if self._paged:
+            self._pos_h[self._active] += steps
         self.metrics.record_burst(time.perf_counter() - t0, steps,
                                   int(self._active.sum()),
                                   n_tokens=int((after - before).sum()))
@@ -442,3 +727,14 @@ class Engine:
             self._slots[b] = None          # slot freed: backfilled by the
             self._active[b] = False        # admission loop next iteration
             self._dslots = self._deactivate(self._dslots, jnp.int32(b))
+            if self._paged:
+                # recycle the request's pages (shared pages survive via
+                # their refcount) and unmap the slot's device row so a
+                # stale slot can never touch a recycled page
+                self.metrics.record_kv_request(
+                    len(self._rows[b]) * self._page_bytes)
+                self._alloc.release(self._rows[b])
+                self._alloc.unreserve(int(b))
+                self._rows[b] = []
+                self._pos_h[b] = self._limit_h[b] = 0
+                self._state = self._clear_slot(self._state, jnp.int32(b))

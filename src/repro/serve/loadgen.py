@@ -33,11 +33,30 @@ def _draw(rng: np.random.Generator, r: LenRange) -> int:
     return int(rng.integers(lo, hi + 1))
 
 
-def synth_prompt(rng: np.random.Generator, length: int, cfg: ModelConfig
-                 ) -> np.ndarray:
-    """Random token prompt with the family's shape ((P,) or (P, CB))."""
+def synth_prompt(rng: np.random.Generator, length: int, cfg: ModelConfig,
+                 prefix: Optional[np.ndarray] = None) -> np.ndarray:
+    """Random token prompt with the family's shape ((P,) or (P, CB)).
+
+    ``prefix`` makes the first ``min(len(prefix), length - 1)`` tokens a
+    SHARED prefix (identical across requests built with the same prefix
+    array) — the workload shape that exercises the paged KV cache's
+    hash-based prefix sharing. At least one token stays unique-random so
+    every request still prefills something.
+    """
     shape = (length, cfg.num_codebooks) if cfg.family == "audio" else (length,)
-    return rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
+    prompt = rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
+    if prefix is not None:
+        n = min(prefix.shape[0], length - 1)
+        if n > 0:
+            prompt[:n] = prefix[:n]
+    return prompt
+
+
+def _shared_prefix(rng: np.random.Generator, prefix_len: int,
+                   cfg: ModelConfig) -> Optional[np.ndarray]:
+    if prefix_len <= 0:
+        return None
+    return synth_prompt(rng, prefix_len, cfg)
 
 
 def poisson_requests(cfg: ModelConfig, n: int, rate: float,
@@ -45,17 +64,21 @@ def poisson_requests(cfg: ModelConfig, n: int, rate: float,
                      gen_len: LenRange = (8, 32),
                      sampling: Optional[SamplingParams] = None,
                      eos_id: Optional[int] = None,
+                     prefix_len: int = 0,
                      seed: int = 0) -> list:
-    """``n`` requests with Poisson arrivals at ``rate`` per clock unit."""
+    """``n`` requests with Poisson arrivals at ``rate`` per clock unit.
+    ``prefix_len`` > 0 gives every prompt a common leading token span
+    (system-prompt-style traffic; see ``synth_prompt``)."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / max(rate, 1e-9), n)
     arrivals = np.cumsum(gaps)
     base = sampling or SamplingParams()
+    prefix = _shared_prefix(rng, prefix_len, cfg)
     out = []
     for i in range(n):
         out.append(Request(
             id=i,
-            prompt=synth_prompt(rng, _draw(rng, prompt_len), cfg),
+            prompt=synth_prompt(rng, _draw(rng, prompt_len), cfg, prefix),
             max_new_tokens=_draw(rng, gen_len),
             arrival_time=float(arrivals[i]),
             sampling=SamplingParams(temperature=base.temperature,
@@ -70,15 +93,17 @@ def trace_requests(cfg: ModelConfig,
                    trace: Iterable[Tuple[float, int, int]],
                    sampling: Optional[SamplingParams] = None,
                    eos_id: Optional[int] = None,
+                   prefix_len: int = 0,
                    seed: int = 0) -> list:
     """Requests from explicit (arrival_time, prompt_len, gen_len) rows."""
     rng = np.random.default_rng(seed)
     base = sampling or SamplingParams()
+    prefix = _shared_prefix(rng, prefix_len, cfg)
     out = []
     for i, (at, plen, glen) in enumerate(trace):
         out.append(Request(
             id=i,
-            prompt=synth_prompt(rng, int(plen), cfg),
+            prompt=synth_prompt(rng, int(plen), cfg, prefix),
             max_new_tokens=int(glen),
             arrival_time=float(at),
             sampling=SamplingParams(temperature=base.temperature,

@@ -2,9 +2,11 @@
 
 The engine reports events (prefill chunks, decode bursts, request
 completions); ``summary()`` reduces them to the numbers a serving
-dashboard wants — p50/p95 TTFT and token latency, decode tokens/s, and
+dashboard wants — p50/p95/p99 TTFT and token latency, decode tokens/s,
 mean slot occupancy (the continuous-batching figure of merit: a static
-batch drains to one straggler, continuous batching keeps slots full).
+batch drains to one straggler, continuous batching keeps slots full),
+and — when the paged KV cache is active — page-pool peaks, per-request
+KV HBM bytes, and prefix-sharing savings.
 """
 from __future__ import annotations
 
@@ -34,6 +36,13 @@ class EngineMetrics:
     occupied_slot_steps: int = 0
     n_finished: int = 0
     prefill_dispatches: int = 0
+    # paged KV cache (zeroed / None for the dense cache)
+    kv_total_pages: int = 0
+    kv_page_bytes: float = 0.0        # HBM bytes per page, all layers
+    kv_peak_pages: int = 0
+    kv_req_bytes: List[float] = dataclasses.field(default_factory=list)
+    kv_shared_tokens: int = 0         # prefill tokens skipped via sharing
+    kv_cow_copies: int = 0
 
     def record_prefill(self, wall_dt: float, n_tokens: int) -> None:
         self.prefill_s += wall_dt
@@ -62,18 +71,30 @@ class EngineMetrics:
         if req.t_finished is not None:
             self.e2e_latencies.append(float(req.t_finished - req.arrival_time))
 
+    def record_kv_usage(self, pages_in_use: int) -> None:
+        self.kv_peak_pages = max(self.kv_peak_pages, int(pages_in_use))
+
+    def record_kv_request(self, hbm_bytes: float) -> None:
+        """Page footprint (bytes across all layer pools) of one finished
+        request — shared pages count toward every sharer."""
+        self.kv_req_bytes.append(float(hbm_bytes))
+
     def summary(self) -> Dict:
         slot_steps = self.decode_steps * self.max_slots
         return {
             "n_finished": self.n_finished,
             "ttft_p50": _pct(self.ttfts, 50),
             "ttft_p95": _pct(self.ttfts, 95),
+            "ttft_p99": _pct(self.ttfts, 99),
             "e2e_p50": _pct(self.e2e_latencies, 50),
             "e2e_p95": _pct(self.e2e_latencies, 95),
+            "e2e_p99": _pct(self.e2e_latencies, 99),
             "token_latency_p50_ms": (None if not self.token_lat_s else
                                      1e3 * _pct(self.token_lat_s, 50)),
             "token_latency_p95_ms": (None if not self.token_lat_s else
                                      1e3 * _pct(self.token_lat_s, 95)),
+            "token_latency_p99_ms": (None if not self.token_lat_s else
+                                     1e3 * _pct(self.token_lat_s, 99)),
             "decode_tokens": self.decode_tokens,
             "decode_tokens_per_s": (self.decode_tokens / self.decode_s
                                     if self.decode_s > 0 else None),
@@ -83,4 +104,19 @@ class EngineMetrics:
             "prefill_dispatches": self.prefill_dispatches,
             "slot_occupancy": (self.occupied_slot_steps / slot_steps
                                if slot_steps else None),
+            # paged KV cache (None when the dense cache is in use)
+            "kv_peak_pages": (self.kv_peak_pages
+                              if self.kv_total_pages else None),
+            "kv_peak_bytes": (self.kv_peak_pages * self.kv_page_bytes
+                              if self.kv_total_pages else None),
+            "kv_pool_bytes": (self.kv_total_pages * self.kv_page_bytes
+                              if self.kv_total_pages else None),
+            "kv_peak_occupancy": (self.kv_peak_pages / self.kv_total_pages
+                                  if self.kv_total_pages else None),
+            "kv_bytes_per_request": (float(np.mean(self.kv_req_bytes))
+                                     if self.kv_req_bytes else None),
+            "kv_shared_tokens": (self.kv_shared_tokens
+                                 if self.kv_total_pages else None),
+            "kv_cow_copies": (self.kv_cow_copies
+                              if self.kv_total_pages else None),
         }

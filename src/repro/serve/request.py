@@ -52,6 +52,24 @@ class Request:
     t_first_token: Optional[float] = None
     t_finished: Optional[float] = None
 
+    def __post_init__(self):
+        # fail at construction with a nameable error instead of a shape
+        # mismatch (or a silent no-op request) deep inside jitted engine
+        # code; keep the converted array so list-built prompts work too
+        self.prompt = prompt = np.asarray(self.prompt)
+        if prompt.ndim < 1 or prompt.shape[0] < 1:
+            raise ValueError(
+                f"request {self.id}: prompt must be a non-empty token "
+                f"array, got shape {prompt.shape}")
+        if self.max_new_tokens <= 0:
+            raise ValueError(
+                f"request {self.id}: max_new_tokens must be > 0, got "
+                f"{self.max_new_tokens}")
+        if not 0.0 < self.sampling.top_p <= 1.0:
+            raise ValueError(
+                f"request {self.id}: top_p must be in (0, 1], got "
+                f"{self.sampling.top_p}")
+
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])

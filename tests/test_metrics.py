@@ -1,0 +1,77 @@
+"""EngineMetrics: percentile math against the numpy reference on known
+distributions, edge cases (no samples / one sample), burst token
+accounting, and the paged-KV fields."""
+import types
+
+import numpy as np
+
+from repro.serve.metrics import EngineMetrics
+
+
+def _req(arrival, ttft_abs, finish):
+    return types.SimpleNamespace(ttft=ttft_abs - arrival,
+                                 arrival_time=arrival,
+                                 t_finished=finish)
+
+
+def test_percentiles_match_numpy_reference(rng):
+    m = EngineMetrics(max_slots=4)
+    arrivals = rng.uniform(0, 10, 200)
+    ttfts = rng.lognormal(0.0, 1.0, 200)           # skewed, like real TTFT
+    lats = ttfts + rng.exponential(5.0, 200)
+    for a, t, l in zip(arrivals, ttfts, lats):
+        m.record_request(_req(a, a + t, a + l))
+    # per-token latency stream through record_burst (weighted extension)
+    for dt, steps, tokens in [(0.2, 4, 7), (0.1, 2, 2), (0.4, 8, 21)]:
+        m.record_burst(dt, steps, n_active=3, n_tokens=tokens)
+
+    s = m.summary()
+    assert s["n_finished"] == 200
+    for key, data in [("ttft", ttfts), ("e2e", lats)]:
+        for q in (50, 95, 99):
+            np.testing.assert_allclose(s[f"{key}_p{q}"],
+                                       np.percentile(data, q), rtol=1e-9)
+    tok_lat = [0.2 / 4] * 7 + [0.1 / 2] * 2 + [0.4 / 8] * 21
+    for q in (50, 95, 99):
+        np.testing.assert_allclose(s[f"token_latency_p{q}_ms"],
+                                   1e3 * np.percentile(tok_lat, q),
+                                   rtol=1e-9)
+    assert m.decode_tokens == 30 and m.decode_steps == 14
+
+
+def test_empty_metrics_are_none_not_nan():
+    s = EngineMetrics(max_slots=2).summary()
+    for k in ("ttft_p50", "ttft_p95", "ttft_p99", "e2e_p50", "e2e_p99",
+              "token_latency_p50_ms", "token_latency_p99_ms",
+              "decode_tokens_per_s", "prefill_tokens_per_s",
+              "slot_occupancy", "kv_peak_pages", "kv_bytes_per_request",
+              "kv_shared_tokens"):
+        assert s[k] is None, k
+    assert s["n_finished"] == 0 and s["decode_tokens"] == 0
+
+
+def test_single_sample_percentiles_collapse_to_value():
+    m = EngineMetrics(max_slots=1)
+    m.record_request(_req(1.0, 3.5, 9.0))
+    s = m.summary()
+    for q in (50, 95, 99):
+        assert s[f"ttft_p{q}"] == 2.5
+        assert s[f"e2e_p{q}"] == 8.0
+
+
+def test_kv_fields_roundtrip():
+    m = EngineMetrics(max_slots=2)
+    m.kv_total_pages, m.kv_page_bytes = 16, 1024.0
+    m.record_kv_usage(5)
+    m.record_kv_usage(9)
+    m.record_kv_usage(7)                    # peak keeps the max
+    m.record_kv_request(3 * 1024.0)
+    m.record_kv_request(5 * 1024.0)
+    m.kv_shared_tokens, m.kv_cow_copies = 42, 3
+    s = m.summary()
+    assert s["kv_peak_pages"] == 9
+    assert s["kv_peak_bytes"] == 9 * 1024.0
+    assert s["kv_pool_bytes"] == 16 * 1024.0
+    assert s["kv_peak_occupancy"] == 9 / 16
+    assert s["kv_bytes_per_request"] == 4 * 1024.0
+    assert s["kv_shared_tokens"] == 42 and s["kv_cow_copies"] == 3

@@ -206,6 +206,27 @@ def test_state_insert_slot_families():
                 np.asarray(jnp.take(sub.ssm.h, 0, axis=ax)))
 
 
+def test_request_validation_at_construction():
+    """Bad request fields fail with nameable errors at construction, not
+    as shape mismatches inside jitted engine code."""
+    from repro.serve import Request
+    ok = dict(id=0, prompt=np.arange(4, dtype=np.int32), max_new_tokens=2)
+    Request(**ok)                                        # sane baseline
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(**{**ok, "max_new_tokens": 0})
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(**{**ok, "max_new_tokens": -3})
+    with pytest.raises(ValueError, match="non-empty"):
+        Request(**{**ok, "prompt": np.zeros(0, np.int32)})
+    with pytest.raises(ValueError, match="non-empty"):
+        Request(**{**ok, "prompt": np.int32(7)})         # scalar, not array
+    with pytest.raises(ValueError, match="top_p"):
+        Request(**ok, sampling=SamplingParams(top_p=0.0))
+    with pytest.raises(ValueError, match="top_p"):
+        Request(**ok, sampling=SamplingParams(top_p=1.5))
+    Request(**ok, sampling=SamplingParams(top_p=1.0))    # boundary is legal
+
+
 def test_loadgen_deterministic_and_metrics_keys():
     cfg = smoke_config("internlm2_1_8b")
     a = poisson_requests(cfg, 6, 0.5, seed=3)
