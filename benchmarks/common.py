@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import json
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ two trace vectors on the trained testbed CNN."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, train_cnn_testbed

@@ -9,13 +9,11 @@ from __future__ import annotations
 
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, train_cnn_testbed
 from repro.core import build_report, metric_accuracy_correlation, sample_configs
-from repro.data.synthetic import batched
 from repro.models.cnn import (
     cnn_act_fn, cnn_forward, cnn_loss, cnn_tap_loss, cnn_tap_shapes)
 from repro.models.context import QATContext

@@ -85,6 +85,29 @@ def run() -> None:
     emit("kernel.int8_matmul.ref_512x2048x512", us,
          f"{flops / us / 1e3:.1f}GFLOPs")
 
+    # qmm: fused grouped-scale matmul over packed QTensor weights. The
+    # point is the weight BYTE stream — at W4A8 the payload is 0.5 B/elem
+    # vs 1 (int8) and 2 (fp16): on a bandwidth-bound decode matmul that
+    # is the roofline speedup. Wall time here is the CPU ref (the Pallas
+    # kernel targets TPU); the byte accounting is exact either way.
+    from repro import qtensor as qt
+    m, k, n = 512, 2048, 512
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    xs = jnp.full((m, 1), 0.02, jnp.float32)
+    int8_bytes = k * n
+    for bits in (8, 6, 4, 3):
+        wqt = qt.quantize(w, bits, group_size=128)
+        qmm = jax.jit(lambda a, d, s: ref.qmm(
+            a, qt.QTensor(d, s, wqt.bits, wqt.shape, wqt.axis), xs))
+        us = timeit(lambda: qmm(xq, wqt.data, wqt.scale))
+        payload = wqt.nbytes
+        emit(f"kernel.qmm.ref_w{bits}a8_512x2048x512", us,
+             f"{payload}B_weights_{payload / int8_bytes:.2f}x_int8_"
+             f"{payload / (2 * k * n):.2f}x_fp16")
+    w4 = qt.quantize(w, 4, group_size=128)
+    assert w4.nbytes * 2 == int8_bytes            # W4A8 halves the stream
+    assert qt.quantize(w, 6, group_size=128).nbytes * 4 == 3 * int8_bytes
+
     q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(np.float32))
     fa = jax.jit(lambda q: ref.flash_attention(q, q, q, causal=True))
     us = timeit(lambda: fa(q))

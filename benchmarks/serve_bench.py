@@ -20,6 +20,14 @@ measures how many concurrent requests a FIXED KV HBM budget admits —
 dense fp16 per-slot buffers vs 16-token int8 pages on mixed-length
 Poisson traffic with a shared prompt prefix (target >= 4x).
 
+QTensor weight-storage section (repro.qtensor): a FIT greedy allocation
+at a 4.5-bit average budget is materialized three ways — packed QTensor
+payloads, the legacy int8-backed format, and fp16 — and the realized
+bytes land in the JSON. The packed model is then actually SERVED
+(same workload, QTensor engine) and its logit KL vs fp is compared to
+the int8-backed format (identical grid -> identical KL) and to the
+fake-quant simulation. Asserts packed < 0.75x int8-backed bytes.
+
 The full JSON payload is also written to ``serve_bench.json`` (override
 with SERVE_BENCH_JSON) so CI can upload it as an artifact.
 
@@ -149,6 +157,79 @@ def kv_capacity_bench(cfg, dense_slots: int = 4, max_len: int = 256,
     }
 
 
+def weight_storage_bench(pcfg_model, pparams, requests) -> dict:
+    """FIT greedy sub-8-bit allocation: realized storage bytes per
+    format + a real serving run on the packed model + KL vs fp."""
+    import jax.numpy as jnp
+
+    from repro.core import build_report
+    from repro.data.synthetic import LMStreamConfig, lm_batches
+    from repro.models import loss_fn
+    from repro.models.context import Context, DequantContext, QATContext
+    from repro.models.transformer import forward
+    from repro.qtensor import storage_summary
+    from repro.quant.policy import QuantPolicy
+    from repro.serve import (
+        bit_config_from_report, quantize_params, quantize_params_int8)
+
+    cfg = pcfg_model
+    stream = lm_batches(LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                       global_batch=4, seed=0))
+    report = build_report(lambda p, b: loss_fn(p, b, cfg), None, None, None,
+                          pparams, [next(stream) for _ in range(2)],
+                          microbatch=4, tolerance=None, max_batches=2)
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3))
+    bit_cfg = bit_config_from_report(report, policy, avg_bits=4.5)
+
+    packed_tree, _ = quantize_params(pparams, bit_cfg, policy)
+    int8_tree, int8_scales = quantize_params_int8(pparams, bit_cfg, policy)
+    summary = storage_summary(packed_tree)
+
+    # the packed grid == the int8-backed grid: dequantized values (and
+    # therefore KL) are identical — only the bytes differ
+    batch = next(stream)
+    logits_fp, _ = forward(pparams, batch, cfg, ctx=Context())
+    logits_pk, _ = forward(packed_tree, batch, cfg,
+                           ctx=DequantContext({}, cfg.param_dtype))
+    logits_i8, _ = forward(int8_tree, batch, cfg,
+                           ctx=DequantContext(int8_scales, cfg.param_dtype))
+    lv = {k: float(2 ** b - 1) for k, b in bit_cfg.weight_bits.items()
+          if b < 16}
+    logits_fq, _ = forward(pparams, batch, cfg, ctx=QATContext(lv, {}))
+
+    def kl(lq):
+        a = jax.nn.log_softmax(
+            logits_fp[..., :cfg.vocab_size].astype(jnp.float32))
+        b = jax.nn.log_softmax(lq[..., :cfg.vocab_size].astype(jnp.float32))
+        return float(jnp.mean(jnp.sum(jnp.exp(a) * (a - b), axis=-1)))
+
+    kl_packed, kl_int8, kl_fq = kl(logits_pk), kl(logits_i8), kl(logits_fq)
+
+    # serve the packed model for real (QTensor engine, same workload)
+    pecfg = EngineConfig(max_slots=BATCH, max_len=MAX_LEN,
+                         max_new_tokens=GEN_RANGE[1], prefill_chunk=16,
+                         decode_burst=16)
+    qengine = Engine(packed_tree, pcfg_model, pecfg)
+    _, qmetrics = qengine.run(requests)
+    qs = qmetrics.summary()
+
+    return {
+        "bit_histogram": {str(k): v for k, v in
+                          sorted(summary["bit_histogram"].items())},
+        "fit_predicted_bytes": summary["predicted_bytes"],
+        "packed_bytes": summary["packed_bytes"],
+        "int8_backed_bytes": summary["int8_backed_bytes"],
+        "fp16_bytes": summary["fp16_bytes"],
+        "packed_over_int8": summary["packed_bytes"] / summary["int8_backed_bytes"],
+        "packed_over_fp16": summary["packed_bytes"] / summary["fp16_bytes"],
+        "kl_vs_fp_packed": kl_packed,
+        "kl_vs_fp_int8_backed": kl_int8,
+        "kl_vs_fp_fake_quant_sim": kl_fq,
+        "packed_decode_tokens_per_s": qs["decode_tokens_per_s"],
+        "packed_n_finished": qs["n_finished"],
+    }
+
+
 def run() -> None:
     cfg = smoke_config(ARCH)
     params = init_params(cfg, jax.random.key(0))
@@ -221,6 +302,18 @@ def run() -> None:
          f"{cap['hbm_budget_bytes'] / 1024:.0f} KiB "
          f"({cap['prefix_shared_tokens']} tokens shared)")
 
+    # ---- QTensor packed weight storage: FIT sub-8-bit allocation ----
+    ws = weight_storage_bench(pcfg_model, pparams, make_workload(pcfg_model))
+    emit("serve_weight_bytes_packed_over_int8", ws["packed_over_int8"],
+         f"{ws['packed_bytes'] / 1024:.0f} KiB packed vs "
+         f"{ws['int8_backed_bytes'] / 1024:.0f} KiB int8-backed vs "
+         f"{ws['fp16_bytes'] / 1024:.0f} KiB fp16; bits {ws['bit_histogram']}")
+    emit("serve_packed_engine_decode",
+         1e6 / max(ws["packed_decode_tokens_per_s"], 1e-9),
+         f"{ws['packed_decode_tokens_per_s']:.1f} tok/s, KL vs fp "
+         f"{ws['kl_vs_fp_packed']:.5f} (fake-quant sim "
+         f"{ws['kl_vs_fp_fake_quant_sim']:.5f})")
+
     payload = {
         "closed_loop": {
             "legacy_tokens_per_s": round(legacy["useful_tokens_per_s"], 2),
@@ -247,6 +340,7 @@ def run() -> None:
             "tokens_per_s": pm["decode_tokens_per_s"],
         },
         "kv_capacity": cap,
+        "weight_storage": ws,
     }
     emit_json("serve_bench", payload)
     out_path = os.environ.get("SERVE_BENCH_JSON", "serve_bench.json")
@@ -259,6 +353,15 @@ def run() -> None:
     assert cap["capacity_ratio"] >= 4.0, (
         f"paged int8 capacity {cap['capacity_ratio']:.2f}x dense fp16 is "
         "below the 4x target")
+    assert ws["packed_over_int8"] < 0.75, (
+        f"packed weight bytes {ws['packed_bytes']:.0f} are not < 0.75x the "
+        f"int8-backed {ws['int8_backed_bytes']:.0f} for the FIT sub-8-bit "
+        "allocation")
+    assert ws["packed_n_finished"] == N_REQ, "packed engine dropped requests"
+    # packed storage stores EXACTLY the grid the int8-backed format (and
+    # the fake-quant simulation at this granularity) dequantizes to
+    assert abs(ws["kl_vs_fp_packed"] - ws["kl_vs_fp_int8_backed"]) < 1e-6, ws
+    assert ws["kl_vs_fp_packed"] <= 2.0 * ws["kl_vs_fp_fake_quant_sim"] + 0.05, ws
 
 
 if __name__ == "__main__":

@@ -79,6 +79,18 @@ if best is not None:
 top = sorted(report.weight_traces.items(), key=lambda kv: -kv[1])[:5]
 print("most sensitive blocks:", [(k, round(v, 3)) for k, v in top])
 
+# materialize the winning config as REAL packed storage and show the
+# FIT-predicted budget is actually realized in HBM bytes (repro.qtensor)
+from repro.qtensor import storage_summary
+from repro.serve import quantize_params
+
+qparams, _ = quantize_params(params, fit_cfg, policy)
+ws = storage_summary(qparams)
+print(f"greedy@4.5b materialized: FIT-predicted "
+      f"{ws['predicted_bytes'] / 1024:.1f} KiB "
+      f"-> packed {ws['packed_bytes'] / 1024:.1f} KiB of QTensor payload "
+      f"({ws['fp16_bytes'] / ws['packed_bytes']:.1f}x under fp16)")
+
 
 def qat_finetune(bit_cfg, steps=60):
     qat = bitconfig_to_levels(cfg, bit_cfg)

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import build_report, greedy_allocate, sample_configs
-from repro.core.mpq import config_cost_bits, pareto_front
+from repro.core.mpq import pareto_front
 from repro.data.synthetic import ClassifyConfig, batched, classify_dataset
 from repro.models.cnn import (
     cnn_accuracy, cnn_act_fn, cnn_loss, cnn_tap_loss, cnn_tap_shapes, init_cnn)

@@ -1,18 +1,26 @@
 """End-to-end FIT-policy -> engine demo: compute a sensitivity report,
 allocate per-block bits with the greedy knapsack, materialize the config
-as REAL int8 storage, and serve Poisson traffic through the
+as REAL packed QTensor storage, and serve Poisson traffic through the
 continuous-batching engine.
+
+The MPQ-search -> serving loop now demonstrates ACTUAL memory savings:
+the FIT-predicted weight budget (bits/param from the BitConfig) is
+printed next to the realized packed bytes (``repro.qtensor`` payloads —
+nibbles at W4/W3, 3-bytes-per-4 at W6) and next to what the same config
+would cost int8-backed or fp16.
 
 Reports per-request greedy-token agreement vs the fp engine (flat-array
 agreement is meaningless once batches are ragged — requests differ in
 prompt/generation length), then a seeded-sampling run to show sampled
 decoding is deterministic per request seed, then the paged KV cache:
 FIT's activation sensitivities allocate per-layer KV bit widths under an
-HBM budget and the engine serves prefix-shared traffic from int8/int4
-pages (``repro.kvcache``).
+HBM budget and the engine serves prefix-shared traffic from QTensor
+pages.
 
-    PYTHONPATH=src python examples/serve_quantized.py
+    PYTHONPATH=src python examples/serve_quantized.py --bits mixed
+    PYTHONPATH=src python examples/serve_quantized.py --bits 4
 """
+import argparse
 import dataclasses
 
 import jax
@@ -23,14 +31,23 @@ from repro.core import build_report
 from repro.data.synthetic import LMStreamConfig, lm_batches
 from repro.kvcache import dense_kv_bytes
 from repro.models import init_params, loss_fn
-from repro.quant.policy import QuantPolicy
+from repro.qtensor import storage_summary
+from repro.quant.policy import BitConfig, QuantPolicy
 from repro.serve import (
     Engine, EngineConfig, SamplingParams, allocate_kv_bits,
     bit_config_from_report, kv_bit_config, kv_report_fns, poisson_requests,
-    quantize_params_int8)
+    quantize_params)
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--bits", default="mixed",
+                help="'mixed' = FIT greedy W4/W8 split at a 6.0-bit "
+                     "average budget; or a uniform width (8/6/4/3 — "
+                     "policy-pinned blocks stay at >= 8)")
+ap.add_argument("--requests", type=int, default=8)
+args = ap.parse_args()
 
 ARCH = "internlm2_1_8b"
-N_REQ, RATE = 8, 0.05
+N_REQ, RATE = args.requests, 0.05
 SLOTS, MAX_LEN, MAX_NEW = 4, 96, 24
 
 cfg = dataclasses.replace(smoke_config(ARCH), scan_layers=False)
@@ -47,41 +64,61 @@ report = build_report(lambda p, b: loss_fn(p, b, cfg), tap_loss,
                       params, [next(stream) for _ in range(2)],
                       microbatch=4, tolerance=None, max_batches=2)
 
-policy = QuantPolicy(allowed_bits=(8, 6, 4))
-bit_cfg = bit_config_from_report(report, policy, avg_bits=6.0)
+if args.bits == "mixed":
+    # a FIT-driven W4/W8 split: with only {4, 8} allowed, the greedy
+    # knapsack at 6.0 bits/param keeps sensitive blocks at W8 and packs
+    # the rest into nibbles
+    policy = QuantPolicy(allowed_bits=(8, 4))
+    bit_cfg = bit_config_from_report(report, policy, avg_bits=6.0)
+else:
+    # uniform W-N everywhere the policy allows (pinned blocks stay >= 8)
+    policy = QuantPolicy(allowed_bits=(8, 6, 4, 3))
+    b = int(args.bits)
+    bit_cfg = policy.sanitize(
+        BitConfig({k: b for k in report.weight_traces}, {}))
 hist = {}
 for b in bit_cfg.weight_bits.values():
     hist[b] = hist.get(b, 0) + 1
-print(f"greedy@6.0b allocation: {dict(sorted(hist.items()))} "
+print(f"allocation ({args.bits}): {dict(sorted(hist.items()))} "
       f"(FIT_W = {report.fit_weights(bit_cfg.weight_bits):.5f})")
 
-print("\n== materialize int8 + serve Poisson traffic ==")
-qparams, scales = quantize_params_int8(params, bit_cfg, policy)
+print("\n== materialize packed QTensor storage + serve Poisson traffic ==")
+qparams, _ = quantize_params(params, bit_cfg, policy)
+
+# FIT-predicted budget vs realized packed bytes, quantized blocks only
+ws = storage_summary(qparams)
+print(f"quantized weight storage: FIT-predicted "
+      f"{ws['predicted_bytes'] / 1024:.1f} KiB "
+      f"-> packed {ws['packed_bytes'] / 1024:.1f} KiB "
+      f"(int8-backed {ws['int8_backed_bytes'] / 1024:.1f} KiB, "
+      f"fp16 {ws['fp16_bytes'] / 1024:.1f} KiB; "
+      f"packed/int8 = {ws['packed_bytes'] / ws['int8_backed_bytes']:.2f}x)")
+
 ecfg = EngineConfig(max_slots=SLOTS, max_len=MAX_LEN, max_new_tokens=MAX_NEW,
                     prefill_chunk=16, decode_burst=8)
 
 
-def run(p, sc, sampling):
+def run(p, sampling):
     reqs = poisson_requests(cfg, N_REQ, RATE, prompt_len=(8, 32),
                             gen_len=(8, MAX_NEW), sampling=sampling, seed=1)
-    eng = Engine(p, cfg, ecfg, scales=sc)
+    eng = Engine(p, cfg, ecfg)                 # QTensor storage auto-detected
     return eng.run(reqs)
 
 
 greedy = SamplingParams(temperature=0.0)
-fp_fin, fp_m = run(params, None, greedy)
-q_fin, q_m = run(qparams, scales, greedy)
+fp_fin, fp_m = run(params, greedy)
+q_fin, q_m = run(qparams, greedy)
 
 # per-request agreement: batches are ragged, so compare each request's
 # token stream against its own fp twin (same id -> same prompt/budget)
-print("per-request greedy agreement (FIT-int8 vs fp):")
+print("per-request greedy agreement (FIT-packed vs fp):")
 for f, q in zip(fp_fin, q_fin):
     n = min(f.num_generated, q.num_generated)
     agree = float(np.mean(f.output_tokens[:n] == q.output_tokens[:n]))
     print(f"  req {f.id}: prompt={f.prompt_len:3d} gen={n:3d} "
           f"agree={agree:6.1%} ttft={q.ttft:.0f} ticks")
 
-for name, m in (("fp", fp_m), ("int8", q_m)):
+for name, m in (("fp", fp_m), ("packed", q_m)):
     s = m.summary()
     print(f"{name}: {s['decode_tokens_per_s']:.1f} tok/s decode, "
           f"occupancy {s['slot_occupancy']:.0%}, "
@@ -89,8 +126,8 @@ for name, m in (("fp", fp_m), ("int8", q_m)):
 
 print("\n== seeded sampling determinism ==")
 sp = SamplingParams(temperature=0.9, top_k=32, top_p=0.95, seed=123)
-s1, _ = run(qparams, scales, sp)
-s2, _ = run(qparams, scales, sp)
+s1, _ = run(qparams, sp)
+s2, _ = run(qparams, sp)
 same = all(np.array_equal(a.output_tokens, b.output_tokens)
            for a, b in zip(s1, s2))
 print("two runs, same request seeds -> identical samples:", same)
@@ -111,19 +148,19 @@ print("as a policy BitConfig (act sites):",
 pecfg = EngineConfig(max_slots=SLOTS, max_len=MAX_LEN, max_new_tokens=MAX_NEW,
                      prefill_chunk=16, decode_burst=8, kv_cache="paged",
                      page_size=16)
-pengine = Engine(qparams, cfg, pecfg, scales=scales, kv_bits=kv_bits,
+pengine = Engine(qparams, cfg, pecfg, kv_bits=kv_bits,
                  kv_ranges=report.act_ranges)
 preqs = poisson_requests(cfg, N_REQ, RATE, prompt_len=(8, 32),
                          gen_len=(8, MAX_NEW), prefix_len=24, seed=1)
 pfin, pm = pengine.run(preqs)
 ps = pm.summary()
-print(f"paged int8/int4 engine: {ps['n_finished']} finished, "
+print(f"paged QTensor-page engine: {ps['n_finished']} finished, "
       f"{ps['decode_tokens_per_s']:.1f} tok/s, "
       f"KV peak {ps['kv_peak_bytes']:.0f}B of {ps['kv_pool_bytes']:.0f}B "
       f"pool ({ps['kv_peak_occupancy']:.0%}), "
       f"{ps['kv_shared_tokens']} prompt tokens prefix-shared, "
       f"{ps['kv_cow_copies']} copy-on-writes")
-print("(on TPU the int8 path runs the W8A8 MXU Pallas kernel at 2x bf16 "
-      "throughput and paged attention walks page tables via the "
-      "scalar-prefetch Pallas kernel; on CPU this example validates "
-      "numerics + scheduling.)")
+print("(on TPU the packed path runs the fused grouped-scale qmm Pallas "
+      "kernel — sub-byte weights expand to int8 only in VMEM — and paged "
+      "attention walks page tables via the scalar-prefetch Pallas kernel; "
+      "on CPU this example validates numerics + scheduling.)")

@@ -7,14 +7,12 @@ CPU scale. (Pass --dim/--layers to scale up; the same driver lowers the
     PYTHONPATH=src python examples/train_e2e.py [--steps 200] [--qat 4]
 """
 import argparse
-import dataclasses
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import ModelConfig
-from repro.launch import train as train_mod
 from repro.launch.train import train
 import repro.configs.llama3_8b as llama_cfg_mod
 

@@ -9,6 +9,14 @@ Elastic restore: arrays are saved as full (host-gathered) numpy tensors;
 mesh wants — restoring a 16-device checkpoint onto 4 devices (or a
 different mesh shape entirely) is the same code path. That is the
 checkpoint/restart story for elastic scaling.
+
+Quantized (``repro.qtensor``) trees round-trip natively: QTensor nodes
+flatten into their packed payload + scale arrays (saved at the packed
+byte width — a W4 checkpoint really is ~4 bits/param on disk), the
+static (bits, shape, axis) metadata rides the manifest under
+``"qtensors"``, and ``restore`` rebuilds the QTensors from the
+template's structure — a calibrated quantized model is saved and served
+again without re-quantizing.
 """
 from __future__ import annotations
 
@@ -23,7 +31,8 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-from repro.utils.pytree import named_leaves
+from repro.qtensor import QTensor, is_qtensor
+from repro.utils.pytree import _path_str, named_leaves
 from repro.utils.logging import get_logger
 
 log = get_logger("repro.ckpt")
@@ -35,6 +44,21 @@ def _gather(tree: Any) -> Dict[str, np.ndarray]:
         arr = np.asarray(jax.device_get(leaf))
         out[name] = arr
     return out
+
+
+def qtensor_manifest(tree: Any) -> Dict[str, Dict]:
+    """Static (bits, shape, axis) of every QTensor node, by tree path —
+    recorded in the manifest so a checkpoint's storage format is
+    inspectable without loading a template."""
+    metas: Dict[str, Dict] = {}
+    nodes = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_qtensor)[0]
+    for path, node in nodes:
+        if isinstance(node, QTensor):
+            metas[_path_str(path)] = {
+                "bits": node.bits, "shape": list(node.shape),
+                "axis": node.axis,
+            }
+    return metas
 
 
 def _tree_like(flat: Dict[str, np.ndarray], template: Any) -> Any:
@@ -61,6 +85,9 @@ class Checkpointer:
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
              blocking: bool = True) -> None:
         flat = _gather(tree)          # gather on caller thread (device safety)
+        qt_meta = qtensor_manifest(tree)
+        if qt_meta:
+            extra = {**(extra or {}), "qtensors": qt_meta}
         # serialize writers: a blocking save racing a still-running async
         # save of the same step makes the rmtree+rename dance fail with
         # "Directory not empty" (both threads see the target as absent)

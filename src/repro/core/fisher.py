@@ -26,7 +26,6 @@ traces are as cheap as one training step.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -10,7 +10,7 @@ structure the paper's Table 1 measures against the single-pass EF.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,7 @@ serving KV cache — ``repro.kvcache``) under an HBM budget.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -137,7 +137,11 @@ def _greedy_spend(tbl: np.ndarray, sizes: np.ndarray, bits_arr: np.ndarray,
     gains = tbl[:, :-1] - tbl[:, 1:]                       # rung p -> p+1
     costs = sizes[:, None] * (bits_arr[1:] - bits_arr[:-1])[None, :]
     with np.errstate(divide="ignore", invalid="ignore"):
-        ratio = np.where(costs > 0, gains / costs, -np.inf)
+        # zero-cost rungs (two levels sharing one storage container, e.g.
+        # packed 3- and 4-bit nibbles under cost_bits) are a free lunch:
+        # rank them first and never charge them against the budget
+        ratio = np.where(costs > 0, gains / costs,
+                         np.where(gains > 0, np.inf, -np.inf))
     valid = np.arange(n_l - 1)[None, :] >= start[:, None]
     cur = start.copy()
     flat = np.argsort(-ratio, axis=None, kind="stable")
@@ -146,10 +150,12 @@ def _greedy_spend(tbl: np.ndarray, sizes: np.ndarray, bits_arr: np.ndarray,
         if not valid[b, p] or cur[b] != p:
             continue       # below this row's floor, or a cheaper rung
         c = costs[b, p]    # was skipped for budget — row is frozen
-        if c <= 0 or used + c > budget_bits:
+        if c > 0 and used + c > budget_bits:
             continue
+        if c <= 0 and gains[b, p] <= 0:
+            continue       # free but useless — leave the row alone
         cur[b] = p + 1
-        used += c
+        used += max(c, 0.0)
     return cur
 
 
@@ -210,6 +216,7 @@ def allocate_act_sites(
     group_sizes: Sequence[float],
     levels: Optional[Sequence[int]] = None,
     exact: bool = False,
+    cost_bits: Optional[Sequence[float]] = None,
 ) -> List[int]:
     """Bit allocation for STORED activation state under a size budget.
 
@@ -223,8 +230,19 @@ def allocate_act_sites(
     bit width (a layer's k and v caches — one storage dtype per layer);
     each group's FIT contribution is the sum of its sites' table rows.
     Returns bits per group (greedy by default, exact DP with ``exact``).
+
+    ``cost_bits`` (parallel to the sorted ``levels``) prices each level's
+    REALIZED storage in bits/element when that differs from the nominal
+    grid width — e.g. packed 3-bit rides a 4-bit nibble container, and
+    7/5-bit are grid-reduced int8 bytes (``repro.qtensor``). The FIT
+    benefit table still uses the nominal widths (the noise model is the
+    grid's); only the budget spend changes. Defaults to the nominal
+    widths.
     """
     levels = sorted({int(b) for b in (levels or policy.kv_allowed_bits)})
+    if cost_bits is not None and len(cost_bits) != len(levels):
+        raise ValueError(f"cost_bits {cost_bits} must map 1:1 onto the "
+                         f"sorted level set {levels}")
     packed = report.packed(levels)
     row_of = {n: i for i, n in enumerate(packed.act_names)}
     aidx = [packed.level_index(b) for b in levels]
@@ -238,7 +256,11 @@ def allocate_act_sites(
                     "covering the KV sites (see repro.kvcache.fit)")
             tbl[gi] += packed.act_table[row_of[site], aidx]
     sizes = np.asarray(group_sizes, np.float64)
-    bits_arr = np.asarray(levels, np.float64)
+    bits_arr = np.asarray(cost_bits if cost_bits is not None else levels,
+                          np.float64)
+    if np.any(np.diff(bits_arr) < 0):
+        raise ValueError(f"cost_bits {bits_arr} must be non-decreasing in "
+                         "the level order (higher grid, >= storage)")
     if exact:
         n_opt = len(levels)
         cur = _dp_spend(tbl, np.broadcast_to(bits_arr, tbl.shape),

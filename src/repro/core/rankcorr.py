@@ -9,7 +9,7 @@ paper's tables.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

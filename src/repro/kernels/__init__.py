@@ -7,6 +7,8 @@ Kernels:
   fake_quant       fused quantize-dequantize (QAT inner loop)
   ef_sqnorm        per-sample squared-grad-norm reduction (EF trace)
   int8_matmul      W8A8 MXU matmul with fused dequant (serving)
+  qmm              W{8,6,4,3}A8 grouped-scale matmul over packed QTensor
+                   weights (in-kernel sub-byte unpack; serving)
   flash_attention  online-softmax attention (no SxT materialization)
   paged_attention  page-table decode attention with in-kernel KV dequant
                    (scalar-prefetched page walk; serving KV cache)

@@ -29,10 +29,14 @@ def _fq_kernel(x_ref, scale_ref, zp_ref, o_ref, *, levels: float):
     o_ref[...] = ((q - zp) * scale).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "levels", "block", "interpret"))
 def fake_quant_pallas(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray,
-                      bits: int, block=DEFAULT_BLOCK, interpret: bool = False):
-    """Per-tensor fake-quant. x: any shape; scale/zero_point: scalars."""
+                      bits: int, levels: float = None, block=DEFAULT_BLOCK,
+                      interpret: bool = False):
+    """Per-tensor fake-quant. x: any shape; scale/zero_point: scalars.
+    ``levels``: largest grid index (default affine 2^bits − 1; pass
+    2^bits − 2 for the odd symmetric grid)."""
     orig_shape = x.shape
     n = x.size
     cols = block[1]
@@ -47,7 +51,9 @@ def fake_quant_pallas(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarra
     grid = (pl.cdiv(rows, block_rows),)
 
     out = pl.pallas_call(
-        functools.partial(_fq_kernel, levels=2.0 ** bits - 1.0),
+        functools.partial(
+            _fq_kernel,
+            levels=float(levels) if levels is not None else 2.0 ** bits - 1.0),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
@@ -70,11 +76,14 @@ def _fq_pc_kernel(x_ref, scale_ref, zp_ref, o_ref, *, levels: float):
     o_ref[...] = ((q - zp) * scale).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "levels", "block", "interpret"))
 def fake_quant_per_channel_pallas(x: jnp.ndarray, scale: jnp.ndarray,
                                   zero_point: jnp.ndarray, bits: int,
+                                  levels: float = None,
                                   block=(256, 512), interpret: bool = False):
-    """Per-channel (last axis) fake-quant. x: (..., C); scale/zp: (C,)."""
+    """Per-channel (last axis) fake-quant. x: (..., C); scale/zp: (C,).
+    ``levels`` as in ``fake_quant_pallas``."""
     orig_shape = x.shape
     c = x.shape[-1]
     rows = x.size // c
@@ -84,7 +93,9 @@ def fake_quant_per_channel_pallas(x: jnp.ndarray, scale: jnp.ndarray,
     grid = (pl.cdiv(rows, block_rows), pl.cdiv(c, block_cols))
 
     out = pl.pallas_call(
-        functools.partial(_fq_pc_kernel, levels=2.0 ** bits - 1.0),
+        functools.partial(
+            _fq_pc_kernel,
+            levels=float(levels) if levels is not None else 2.0 ** bits - 1.0),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),

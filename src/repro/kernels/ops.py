@@ -9,7 +9,6 @@ same model code lowers everywhere. ``force`` overrides for tests:
 from __future__ import annotations
 
 import os
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +17,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.fake_quant import fake_quant_pallas, fake_quant_per_channel_pallas
 from repro.kernels.ef_sqnorm import ef_sqnorm_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.qmm import qmm_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 
@@ -29,19 +29,22 @@ def _mode() -> str:
     return "tpu" if jax.default_backend() == "tpu" else "ref"
 
 
-def fake_quant(x, scale, zero_point, bits: int):
+def fake_quant(x, scale, zero_point, bits: int, levels=None):
+    """``levels``: largest grid index — default affine 2^bits − 1; pass
+    ``QuantSpec.levels`` (2^bits − 2) for symmetric specs so values past
+    the calibrated range clip to the odd symmetric grid."""
     mode = _mode()
     per_channel = getattr(scale, "ndim", 0) and scale.size > 1
     if mode == "ref":
-        return _ref.fake_quant(x, scale, zero_point, bits)
+        return _ref.fake_quant(x, scale, zero_point, bits, levels=levels)
     interp = mode == "interpret"
     if per_channel:
         c = x.shape[-1]
         return fake_quant_per_channel_pallas(
             x, jnp.reshape(scale, (c,)), jnp.reshape(zero_point, (c,)), bits,
-            interpret=interp)
+            levels=levels, interpret=interp)
     return fake_quant_pallas(x, jnp.reshape(scale, ()), jnp.reshape(zero_point, ()),
-                             bits, interpret=interp)
+                             bits, levels=levels, interpret=interp)
 
 
 def ef_sqnorm(g):
@@ -63,6 +66,27 @@ def int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype=jnp.float32):
         return _ref.int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype)
     return int8_matmul_pallas(x_q, w_q, x_scale, w_scale, out_dtype=out_dtype,
                               interpret=(mode == "interpret"))
+
+
+def qmm(x_q, w, x_scale, out_dtype=jnp.float32):
+    """Fused grouped-scale quantized matmul over a packed QTensor weight.
+
+    x_q: (M, K) int8; ``w``: ``repro.qtensor.QTensor`` of logical (K, N)
+    packed along axis 0 (scales (G, N)); x_scale: scalar or (M,)/(M, 1)
+    per-row fp32. Sub-byte payloads are expanded in-kernel — HBM and
+    VMEM both see only the packed bytes.
+    """
+    mode = _mode()
+    x_scale = jnp.asarray(x_scale, jnp.float32)
+    if x_scale.size > 1:
+        x_scale = x_scale.reshape(-1, 1)          # (M, 1) for row broadcast
+    if mode == "ref":
+        return _ref.qmm(x_q, w, x_scale, out_dtype)
+    k, n = w.shape
+    return qmm_pallas(x_q, w.data, x_scale,
+                      w.scale.reshape(w.scale.shape[w.axis], n),
+                      bits=w.bits, k=k, out_dtype=out_dtype,
+                      interpret=(mode == "interpret"))
 
 
 def flash_attention(q, k, v, causal: bool = True):

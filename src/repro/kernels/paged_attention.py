@@ -8,9 +8,10 @@ each grid step's BlockSpec index_map DMAs exactly the page it needs —
 and never materializes the gathered (B, T, KV, Dh) view the jnp
 reference builds.
 
-Quantized pages dequantize in-kernel: int8 (or packed-int4 nibbles)
-loads stay 1 (or 0.5) byte/element in HBM and expand to fp32 only in
-VMEM, with the per-page per-kv-head scale fetched alongside the page.
+Quantized pages dequantize in-kernel: int8 or packed uint8 loads on the
+``repro.qtensor`` byte layout (1 / 0.75 / 0.5 byte per element at
+8 / 6 / 4-or-3 bits) expand to fp32 only in VMEM, with the per-page
+per-kv-head scale fetched alongside the page.
 
 Grid: (B, KV, NP) with the page axis innermost; fp32 online-softmax
 running stats (m, l) and the output accumulator live in VMEM scratch
@@ -26,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ref import unpack_int4
+from repro.qtensor import unpack as qt_unpack
 
 NEG_INF = -1e30
 
@@ -46,8 +47,8 @@ def _paged_attn_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
     k = k_ref[0, :, 0, :]                          # (page, Dh')
     v = v_ref[0, :, 0, :]
     if bits < 16:
-        if bits <= 4:
-            k, v = unpack_int4(k), unpack_int4(v)
+        # in-VMEM expand of the packed qtensor byte layout (no-op at 8)
+        k, v = qt_unpack(k, bits), qt_unpack(v, bits)
         k = k.astype(jnp.float32) * ks_ref[0, 0]
         v = v.astype(jnp.float32) * vs_ref[0, 0]
     else:
@@ -84,7 +85,7 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
                            k_scale=None, v_scale=None,
                            bits: int = 16, interpret: bool = False):
     """q: (B, KV, G, Dh); k_pages/v_pages: (P, page, KV, Dh') where
-    Dh' = Dh/2 for packed int4; table: (B, NP) page ids (>= P allowed —
+    Dh' = qtensor.packed_size(Dh, bits); table: (B, NP) page ids (>= P allowed —
     clipped, those pages are masked); lengths: (B,) valid token counts.
     k_scale/v_scale: (P, KV) fp32 (required when bits < 16).
     Returns (B, KV, G, Dh)."""

@@ -11,9 +11,16 @@ import jax.numpy as jnp
 
 
 def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarray,
-               bits: int) -> jnp.ndarray:
-    """Quantize–dequantize on a uniform grid of 2^bits levels."""
-    levels = 2.0 ** bits - 1.0
+               bits: int, levels: float | None = None) -> jnp.ndarray:
+    """Quantize–dequantize on a uniform grid.
+
+    ``levels`` is the largest grid index — default the affine 2^bits − 1;
+    pass ``QuantSpec.levels`` (2^bits − 2) for symmetric specs so
+    out-of-calibration values clip to the odd symmetric grid instead of
+    escaping one step above it.
+    """
+    if levels is None:
+        levels = 2.0 ** bits - 1.0
     inv = 1.0 / scale
     q = jnp.clip(jnp.round(x * inv + zero_point), 0.0, levels)
     return ((q - zero_point) * scale).astype(x.dtype)
@@ -45,21 +52,47 @@ def int8_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, x_scale: jnp.ndarray,
 def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
     """int8 values in [-8, 7], even last dim -> uint8 nibbles, 2 per byte.
 
-    Packing runs along the LAST axis (head_dim for KV pages): one token's
-    (KV, Dh) row owns whole bytes, so single-token cache writes never
-    read-modify-write a byte shared with another token.
+    Thin alias of ``repro.qtensor.pack(q, 4)`` — the framework-wide pack
+    convention. Packing runs along the LAST axis (head_dim for KV pages):
+    one token's (KV, Dh) row owns whole bytes, so single-token cache
+    writes never read-modify-write a byte shared with another token.
     """
-    u = q.astype(jnp.int32) & 0xF
-    lo, hi = u[..., 0::2], u[..., 1::2]
-    return (lo | (hi << 4)).astype(jnp.uint8)
+    from repro import qtensor as _qt
+    return _qt.pack(q, 4, axis=-1)
 
 
 def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
     """uint8 nibble pairs -> int8 (..., 2*D) (inverse of ``pack_int4``)."""
-    u = p.astype(jnp.int32)
-    nibbles = jnp.stack([u & 0xF, (u >> 4) & 0xF], axis=-1)
-    nibbles = jnp.where(nibbles >= 8, nibbles - 16, nibbles)
-    return nibbles.reshape(p.shape[:-1] + (2 * p.shape[-1],)).astype(jnp.int8)
+    from repro import qtensor as _qt
+    return _qt.unpack(p, 4, axis=-1)
+
+
+def qmm(x_q: jnp.ndarray, w, x_scale: jnp.ndarray,
+        out_dtype=jnp.float32) -> jnp.ndarray:
+    """Grouped-scale quantized matmul oracle: W{8,6,4,3}A8.
+
+    x_q: (M, K) int8 activations; x_scale: (M, 1) (or scalar) per-row
+    fp32 activation scales; ``w``: a ``repro.qtensor.QTensor`` of logical
+    shape (K, N) packed along axis 0 with scales (G, N) — G groups of
+    K/G rows each sharing one scale per output channel.
+
+    Mirrors the Pallas kernel's accumulation structure exactly: one
+    int32 dot per (group, tile), scaled into an fp32 accumulator per
+    group — so kernel-vs-ref tests see only fp32 summation-order noise.
+    """
+    k, n = w.shape
+    wi = w.unpack()                                   # (K, N) int8
+    g = w.scale.shape[w.axis]
+    ws = w.scale.reshape(g, n)
+    gs = k // g
+    acc = jax.lax.dot_general(
+        x_q.reshape(x_q.shape[0], g, gs),
+        wi.reshape(g, gs, n),
+        (((2,), (1,)), ((1,), (0,))),                 # contract gs, batch g
+        preferred_element_type=jnp.int32,
+    )                                                 # (G, M, N)
+    y = jnp.sum(acc.astype(jnp.float32) * ws[:, None, :], axis=0)
+    return (y * jnp.asarray(x_scale, jnp.float32)).astype(out_dtype)
 
 
 NEG_INF = -1e30
@@ -71,8 +104,9 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     """Decode-time GQA over a paged KV pool — the jnp oracle.
 
     q: (B, 1, H, Dh) current-token queries (post-RoPE);
-    k_pages/v_pages: (P, page, KV, Dh) — int8 / uint8-packed-int4 when
-    ``bits`` < 16 (Dh/2 bytes for int4), else a float dtype;
+    k_pages/v_pages: (P, page, KV, Dh') — int8 or packed uint8 on the
+    ``repro.qtensor`` byte layout when ``bits`` < 16 (Dh' =
+    packed_size(Dh, bits)), else a float dtype;
     table: (B, NP) page ids per slot (entries >= P are padding);
     pos: (B,) per-slot current position (positions <= pos attend);
     k_scale/v_scale: (P, KV) per-page per-kv-head dequant scales.
@@ -91,8 +125,8 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     kg = k_pages[ids]                      # (B, NP, page, KV, Dh')
     vg = v_pages[ids]
     if bits < 16:
-        if bits <= 4:
-            kg, vg = unpack_int4(kg), unpack_int4(vg)
+        from repro import qtensor as _qt
+        kg, vg = _qt.unpack(kg, bits), _qt.unpack(vg, bits)
         ks = k_scale[ids][:, :, None, :, None]      # (B, NP, 1, KV, 1)
         vs = v_scale[ids][:, :, None, :, None]
         kg = kg.astype(jnp.float32) * ks

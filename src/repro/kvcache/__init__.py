@@ -19,9 +19,10 @@ pages plus per-slot page tables:
     a shared page must diverge, and reservation accounting so admission
     never deadlocks mid-decode.
   * ``paged`` — device-side storage: per-layer page arrays at per-layer
-    bit widths (fp / int8 / packed int4, per-page per-kv-head dequant
-    scales), page-table state, write/gather/copy primitives, and HBM
-    accounting.
+    bit widths on the framework-wide ``repro.qtensor`` packed layouts
+    (fp / int8 / 6-bit / nibble 4- and 3-bit, per-page per-kv-head
+    dequant scales), page-table state, write/gather/copy primitives,
+    and HBM accounting.
   * ``fit`` — FIT-driven KV bit allocation: the per-layer k/v cache
     entries are activation sites of the sensitivity report (the KV cache
     is a persistent activation — paper Sec. 3.2), so

@@ -79,13 +79,23 @@ def allocate_kv_bits(
     page pool's num_pages x page_size); each layer stores
     ``tokens * KV * Dh`` elements for k and the same for v, and a
     layer's k/v share one bit width (one storage dtype per pool).
+
+    The budget is charged at each level's REALIZED page storage
+    (``qtensor.bytes_per_element``), not its nominal grid width: packed
+    3-bit rides a 4-bit nibble container and 7/5-bit are grid-reduced
+    int8 bytes, so e.g. ``kv_allowed_bits=(3, 4, 8, 16)`` can never
+    overrun ``budget_bytes`` in actual pool HBM.
     """
+    from repro.qtensor import bytes_per_element
+
     groups = [list(pair) for pair in kv_sites(cfg)]
     elems = 2 * tokens * cfg.num_kv_heads * cfg.head_dim
+    levels = sorted({int(b) for b in policy.kv_allowed_bits})
     bits = allocate_act_sites(
         report, policy, budget_bits=budget_bytes * 8.0,
         site_groups=groups, group_sizes=[elems] * len(groups),
-        levels=policy.kv_allowed_bits, exact=exact)
+        levels=levels, exact=exact,
+        cost_bits=[8.0 * bytes_per_element(b) for b in levels])
     return {i: b for i, b in enumerate(bits)}
 
 

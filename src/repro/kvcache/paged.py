@@ -1,33 +1,39 @@
 """Device-side paged KV storage: per-layer page pools + page-table state.
 
 Layout (see the package docstring for the page-table diagram): each
-attention layer owns a ``(P, page, KV, Dh)`` pool for k and v. Layers
+attention layer owns a ``(P, page, KV, Dh')`` pool for k and v. Layers
 are kept as a dict (not stacked on a leading axis) so every layer can
 store at its OWN bit width — the FIT-allocated mixed-precision KV cache
-stores an 8-bit layer as int8 bytes and a 4-bit layer as packed uint8
-nibbles (Dh/2 bytes), which a single stacked array could not express.
-This mirrors the unrolled (``scan_layers=False``) parameter layout that
-quantized serving already requires.
+stores an 8-bit layer as int8 bytes and sub-byte layers as packed uint8
+(``repro.qtensor`` layouts: Dh/2 bytes at 4/3 bits, 3·Dh/4 at 6), which
+a single stacked array could not express. This mirrors the unrolled
+(``scan_layers=False``) parameter layout that quantized serving already
+requires.
 
-Quantization is symmetric with per-page per-kv-head scales, stored as
-``(P, KV)`` fp32 alongside each pool. Scales are materialized from the
-sensitivity report's calibrated activation ranges
-(``repro.core.report.act_ranges`` at the ``attn/k`` / ``attn/v`` tap
-sites) — the AIMET-style calibrated-range pattern — with a static
-fallback matching the legacy dense int8 KV path. Sub-8-bit widths other
-than 4 use the reduced symmetric grid inside int8, exactly like
-``quantize_params_int8`` does for weights.
+Pages speak the framework-wide QTensor convention: packing/unpacking and
+the symmetric grid come from ``repro.qtensor`` — the SAME byte layout
+and ±(2^(b-1)−1) grid the weight path packs — with per-page per-kv-head
+scales stored as ``(P, KV)`` fp32 alongside each pool (a grouped QTensor
+scale of shape (P, 1, KV, 1); ``LayerPages.k_qt`` exposes the view).
+Scales are materialized from the sensitivity report's calibrated
+activation ranges (``repro.core.report.act_ranges`` at the ``attn/k`` /
+``attn/v`` tap sites) — the AIMET-style calibrated-range pattern — with
+a static fallback matching the legacy dense int8 KV path. Widths without
+a packed layout (7, 5) use the reduced symmetric grid inside int8,
+exactly like the weight materializers.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, Mapping, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
-from repro.kernels.ref import pack_int4, unpack_int4
+from repro.qtensor import (
+    PACKED_BITS, QTensor, bytes_per_element, logical_size, pack,
+    packed_size, qmax_for_bits as _qt_qmax, quantize_values, unpack)
 
 # Fallback |activation| max when no calibrated range is supplied: matches
 # the legacy dense int8 KV path's static scale (0.05 * 127 ≈ 6.35).
@@ -44,7 +50,7 @@ def kv_layer_count(cfg: ModelConfig) -> int:
 
 
 def qmax_for_bits(bits: int) -> float:
-    return float(2 ** (min(bits, 8) - 1) - 1)
+    return _qt_qmax(bits)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -52,9 +58,11 @@ def qmax_for_bits(bits: int) -> float:
 class LayerPages:
     """One attention layer's page pool. ``bits`` is static pytree aux
     data (it selects storage dtype and quantization grid, which must be
-    trace-time constants under jit)."""
+    trace-time constants under jit). Payloads and scales follow the
+    QTensor convention (pack axis = Dh, per-page per-kv-head scale
+    groups); ``k_qt``/``v_qt`` expose the pool as actual QTensors."""
 
-    k: jnp.ndarray          # (P, page, KV, Dh) fp/int8 | (P, page, KV, Dh/2) uint8
+    k: jnp.ndarray          # (P, page, KV, Dh) fp/int8 | (P, page, KV, Dh') uint8
     v: jnp.ndarray
     k_scale: jnp.ndarray    # (P, KV) fp32 per-page per-kv-head dequant scale
     v_scale: jnp.ndarray
@@ -74,6 +82,26 @@ class LayerPages:
     @property
     def page_size(self) -> int:
         return self.k.shape[1]
+
+    def _logical_shape(self) -> Tuple[int, ...]:
+        p, page, kv, hd = self.k.shape
+        if self.bits < 16:
+            hd = logical_size(hd, self.bits)
+        return (p, page, kv, hd)
+
+    def _as_qtensor(self, data: jnp.ndarray, scale: jnp.ndarray) -> QTensor:
+        p, _, kv, _ = data.shape[:4]
+        return QTensor(data, scale.reshape(p, 1, kv, 1), self.bits,
+                       self._logical_shape(), 3)
+
+    @property
+    def k_qt(self) -> QTensor:
+        """The k pool as a QTensor (quantized pools only)."""
+        return self._as_qtensor(self.k, self.k_scale)
+
+    @property
+    def v_qt(self) -> QTensor:
+        return self._as_qtensor(self.v, self.v_scale)
 
 
 class PagedState(NamedTuple):
@@ -114,8 +142,12 @@ class PagedKVConfig:
         else:
             bits = tuple(int(kv_bits.get(i, kv_bits.get(str(i), 16)))
                          for i in range(n))
-        if any(b == 4 for b in bits) and cfg.head_dim % 2:
-            raise ValueError("packed int4 KV needs an even head_dim")
+        for b in bits:
+            if b in PACKED_BITS and logical_size(packed_size(cfg.head_dim, b),
+                                                 b) != cfg.head_dim:
+                raise ValueError(
+                    f"packed {b}-bit KV needs head_dim ({cfg.head_dim}) "
+                    f"divisible by its pack unit")
         nps = max_len // page_size
         return cls(page_size=page_size,
                    num_pages=num_pages if num_pages else slots * nps,
@@ -148,10 +180,10 @@ def init_paged_kv(cfg: ModelConfig, pcfg: PagedKVConfig, slots: int,
     for i, bits in enumerate(pcfg.kv_bits):
         if bits >= 16:
             dtype, last = cfg.param_dtype, hd
-        elif bits > 4:
-            dtype, last = jnp.int8, hd
+        elif bits in PACKED_BITS:
+            dtype, last = jnp.uint8, packed_size(hd, bits)
         else:
-            dtype, last = jnp.uint8, hd // 2
+            dtype, last = jnp.int8, hd          # grid-reduced int8 (7, 5, 8)
         shape = (pcfg.num_pages, pcfg.page_size, kv, last)
         ksite, vsite = kv_sites_for_layer(cfg, i)
         layers[str(i)] = LayerPages(
@@ -171,18 +203,15 @@ def init_paged_kv(cfg: ModelConfig, pcfg: PagedKVConfig, slots: int,
 
 
 def quantize_kv(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """Float (..., KV, Dh) -> page storage dtype at ``bits``.
-    ``scale``: (..., KV) per-kv-head."""
-    qmax = qmax_for_bits(bits)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -qmax, qmax).astype(jnp.int8)
-    return pack_int4(q) if bits <= 4 else q
+    """Float (..., KV, Dh) -> page storage dtype at ``bits`` on the
+    QTensor grid/byte layout. ``scale``: (..., KV) per-kv-head."""
+    q = quantize_values(x, scale[..., None], bits)
+    return pack(q, bits, axis=-1) if bits in PACKED_BITS else q
 
 
 def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Inverse of ``quantize_kv`` (fp32 output)."""
-    if bits <= 4:
-        q = unpack_int4(q)
+    q = unpack(q, bits, axis=-1)
     return q.astype(jnp.float32) * scale[..., None]
 
 
@@ -241,9 +270,7 @@ def copy_page(lp: LayerPages, src, dst) -> LayerPages:
 # ---------------------------------------------------------------------------
 
 def _bytes_per_elem(cfg: ModelConfig, bits: int) -> float:
-    if bits >= 16:
-        return float(jnp.dtype(cfg.param_dtype).itemsize)
-    return 1.0 if bits > 4 else 0.5
+    return bytes_per_element(bits, jnp.dtype(cfg.param_dtype).itemsize)
 
 
 def layer_page_bytes(cfg: ModelConfig, page_size: int, bits: int) -> float:

@@ -13,7 +13,7 @@ this repo (all axes are Auto).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

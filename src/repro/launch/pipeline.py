@@ -15,8 +15,7 @@ Bubble fraction = (S−1)/T, the standard GPipe cost. Differentiable:
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,7 @@ MODEL_FLOPS/HLO_FLOPs efficiency ratio.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs import ModelConfig, ShapeSpec
 from repro.models.transformer import vocab_padded

@@ -10,8 +10,11 @@ Two traffic shapes:
 
 Quantization: ``--weight-bits B`` fake-quantizes in fp storage (PTQ
 numerics check, any layout); adding ``--int8`` materializes REAL int8
-storage + a DequantContext (unrolled layout), and ``--int8-compute``
-routes those matmuls through the int8 MXU kernel path.
+storage + a DequantContext (unrolled layout); adding ``--packed``
+instead materializes truly packed QTensor storage (``repro.qtensor`` —
+sub-byte widths actually shrink HBM: 0.75 B/elem at W6, 0.5 at W4/W3)
+and ``--int8-compute`` routes those matmuls through the fused quantized
+MXU kernel path (``kernels.qmm`` for QTensor, ``int8_matmul`` legacy).
 
 KV cache: ``--paged`` switches the dense per-slot cache for the paged
 pool (``repro.kvcache``) with ``--page-size`` token pages, ``--kv-bits``
@@ -40,8 +43,8 @@ from repro.models import init_params
 from repro.quant.policy import QuantPolicy
 from repro.quant.quantizer import QuantSpec, fake_quant_ref
 from repro.serve import (
-    Engine, EngineConfig, SamplingParams, poisson_requests,
-    quantize_params_int8, trace_requests)
+    Engine, EngineConfig, SamplingParams, poisson_requests, quantize_params,
+    quantize_params_int8, trace_requests, weight_storage_bytes)
 from repro.utils.logging import get_logger
 from repro.utils.pytree import map_with_names
 
@@ -70,6 +73,7 @@ def quantize_weights(params, weight_bits: Optional[int],
 
 def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
           weight_bits: Optional[int], seed: int = 0, int8: bool = False,
+          packed: bool = False,
           int8_compute: bool = False, n_requests: Optional[int] = None,
           rate: float = 1.0, sampling: Optional[SamplingParams] = None,
           prefill_chunk: int = 32, decode_burst: int = 16,
@@ -78,18 +82,22 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
           prefix_sharing: bool = True, shared_prefix: int = 0) -> Dict:
     """Build the model + engine, run the load, return results + metrics."""
     cfg = smoke_config(arch) if smoke else get_config(arch)
-    if int8 or paged:
-        # per-layer dequant scales / page pools are path-keyed: needs the
-        # unrolled layer layout
+    if int8 or packed or paged:
+        # per-layer dequant scales / page pools / payload shapes are
+        # path-keyed: needs the unrolled layer layout
         cfg = dataclasses.replace(cfg, scan_layers=False)
     params = init_params(cfg, jax.random.key(seed))
 
     scales = None
     policy = QuantPolicy()
-    if int8 and weight_bits is None:
-        weight_bits = 8          # --int8 alone means W8 int8 storage
+    if (int8 or packed) and weight_bits is None:
+        weight_bits = 8          # --int8/--packed alone means W8 storage
     if weight_bits is not None and weight_bits < 16:
-        if int8:
+        if packed:
+            params, _ = quantize_params(params, weight_bits, policy)
+            log.info("packed QTensor weights: %.0f bytes realized",
+                     weight_storage_bytes(params))
+        elif int8:
             params, scales = quantize_params_int8(params, weight_bits, policy)
         else:
             params = quantize_weights(params, weight_bits, policy)
@@ -147,6 +155,9 @@ def main() -> None:
     ap.add_argument("--weight-bits", type=int, default=None)
     ap.add_argument("--int8", action="store_true",
                     help="real int8 storage + DequantContext")
+    ap.add_argument("--packed", action="store_true",
+                    help="truly packed QTensor storage (sub-byte widths "
+                         "shrink weight HBM; repro.qtensor)")
     ap.add_argument("--int8-compute", action="store_true",
                     help="route int8 blocks through the MXU kernel path")
     ap.add_argument("--requests", type=int, default=None,
@@ -178,7 +189,8 @@ def main() -> None:
 
     out = serve(args.arch, args.smoke, args.batch, args.prompt_len,
                 args.gen_len, args.weight_bits, seed=args.seed,
-                int8=args.int8, int8_compute=args.int8_compute,
+                int8=args.int8, packed=args.packed,
+                int8_compute=args.int8_compute,
                 n_requests=args.requests, rate=args.rate,
                 sampling=SamplingParams(temperature=args.temperature,
                                         top_k=args.top_k, top_p=args.top_p,

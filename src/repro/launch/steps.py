@@ -8,7 +8,6 @@ code serves real execution (tests, examples) and the dry-run
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

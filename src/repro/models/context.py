@@ -11,26 +11,26 @@ Every weight matmul calls ``ctx.matmul(name, x, w)`` (which defaults to
                                body serves all layers)
   * FIT activation traces    — add a zero-valued tap parameter
   * calibration              — record min/max statistics
-  * int8 serving             — ``DequantContext``: weights live as int8;
-                               ``matmul`` either dequantizes at the point
-                               of use (fp path) or quantizes the
-                               activation row-wise and dispatches to the
-                               int8 MXU kernel (``kernels.ops``)
+  * quantized serving        — ``DequantContext``: weights live as packed
+                               ``repro.qtensor.QTensor`` storage (or
+                               legacy int8 + scales dict); ``matmul``
+                               either dequantizes at the point of use
+                               (fp path) or quantizes the activation
+                               row-wise and dispatches to the fused
+                               quantized MXU kernels (``kernels.ops``)
 
 Names are scoped with ``ctx.scope("layers/attn")`` so block paths align
 with the parameter-tree paths used by QuantPolicy / SensitivityReport.
 """
 from __future__ import annotations
 
-import dataclasses
 from contextlib import contextmanager
-from typing import Any, Callable, Dict, List, Mapping, Optional
+from typing import Any, Dict, List, Mapping
 
 import jax
 import jax.numpy as jnp
 
-from repro.quant.quantizer import QuantSpec, quant_params
-from repro.quant.fake_quant import fake_quant_ste
+from repro.qtensor import QTensor
 
 
 def _dynamic_fake_quant_ste(x: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
@@ -142,22 +142,31 @@ class CollectContext(Context):
 
 
 class DequantContext(Context):
-    """Serve-time quantized execution: params hold int8 matmul weights.
+    """Serve-time quantized execution over packed quantized weights.
 
-    ``qw`` upcasts with the per-block (per-channel) scale at the point of
-    use, so the convert+scale fuses into the consuming matmul and HBM
-    reads stay 1 byte/element. With ``int8_compute=True``, ``matmul``
-    additionally quantizes the activation with a dynamic per-row scale
-    and dispatches to ``kernels.ops.int8_matmul`` (the Pallas MXU kernel
-    on TPU, the jnp reference elsewhere) — true W8A8 execution. Per-ROW
-    activation scales (not per-tensor) keep every batch row's numerics
-    independent of its batch-mates, which is what makes continuous-
-    batching output bit-identical to isolated decode.
+    Quantized matmul blocks arrive in one of two storage forms:
 
-    Scales are keyed by the scoped block path ("layers/0/attn/wq"), so
-    quantized serving requires the unrolled (``scan_layers=False``)
+      * ``repro.qtensor.QTensor`` — truly packed W{8,6,4,3} payload with
+        grouped scales carried inside the leaf (``serve.quantized
+        .quantize_params``). ``matmul`` routes these to the fused
+        grouped-scale kernel ``kernels.ops.qmm`` (``int8_compute=True``)
+        or dequantizes at the point of use (fp path); HBM reads stay at
+        the packed byte width either way.
+      * legacy int8 leaves + a path-keyed ``scales`` dict
+        (``quantize_params_int8``), kept for the storage-format A/B in
+        the benchmarks; these take the original ``int8_matmul`` route.
+
+    With ``int8_compute=True`` the activation is quantized with a
+    dynamic per-ROW scale before dispatch — per-row (not per-tensor)
+    scales keep every batch row's numerics independent of its
+    batch-mates, which is what makes continuous-batching output
+    bit-identical to isolated decode.
+
+    Path-keyed scales require the unrolled (``scan_layers=False``)
     parameter layout — under scan one compiled body serves all layers
-    and per-layer scales cannot be looked up by path.
+    and per-layer scales cannot be looked up by path. QTensor leaves
+    carry their scales with them but need the unrolled layout for the
+    same reason: per-layer payload shapes differ by bit width.
     """
 
     def __init__(self, scales: Mapping[str, jnp.ndarray], dtype,
@@ -167,26 +176,38 @@ class DequantContext(Context):
         self.dtype = dtype
         self.int8_compute = int8_compute
 
-    def qw(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
-        s = self.scales.get(self.path(name))
-        if s is None or w.dtype != jnp.int8:
-            return w
-        return (w.astype(jnp.float32) * s).astype(self.dtype)
-
-    def matmul(self, name: str, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-        s = self.scales.get(self.path(name))
-        if s is None or w.dtype != jnp.int8:
-            return x @ w
-        if not self.int8_compute or w.ndim != 2:
-            return x @ (w.astype(jnp.float32) * s).astype(self.dtype)
-        from repro.kernels import ops as kops  # avoid import cycle at module load
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    def _rowquant(self, x2: jnp.ndarray):
         # dynamic symmetric per-row activation scale: row b's quantization
         # depends only on row b, preserving batch-composition invariance
         amax = jnp.max(jnp.abs(x2), axis=-1, keepdims=True)
         xs = jnp.maximum(amax, 1e-8) / 127.0                      # (M, 1)
         xq = jnp.clip(jnp.round(x2 / xs), -127, 127).astype(jnp.int8)
+        return xq, xs
+
+    def qw(self, name: str, w) -> jnp.ndarray:
+        if isinstance(w, QTensor):
+            return w.dequantize(self.dtype)
+        s = self.scales.get(self.path(name))
+        if s is None or w.dtype != jnp.int8:
+            return w
+        return (w.astype(jnp.float32) * s).astype(self.dtype)
+
+    def matmul(self, name: str, x: jnp.ndarray, w) -> jnp.ndarray:
+        from repro.kernels import ops as kops  # avoid import cycle at module load
+        if isinstance(w, QTensor):
+            if not self.int8_compute or len(w.shape) != 2:
+                return x @ w.dequantize(self.dtype)
+            lead = x.shape[:-1]
+            xq, xs = self._rowquant(x.reshape(-1, x.shape[-1]).astype(jnp.float32))
+            y = kops.qmm(xq, w, xs, out_dtype=jnp.float32)
+            return y.astype(self.dtype).reshape(lead + (w.shape[-1],))
+        s = self.scales.get(self.path(name))
+        if s is None or w.dtype != jnp.int8:
+            return x @ w
+        if not self.int8_compute or w.ndim != 2:
+            return x @ (w.astype(jnp.float32) * s).astype(self.dtype)
+        lead = x.shape[:-1]
+        xq, xs = self._rowquant(x.reshape(-1, x.shape[-1]).astype(jnp.float32))
         y = kops.int8_matmul(xq, w, xs, s.reshape(1, -1),
                              out_dtype=jnp.float32)
         return y.astype(self.dtype).reshape(lead + (w.shape[-1],))

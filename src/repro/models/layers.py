@@ -10,8 +10,7 @@ so FIT traces / fake-quant / calibration all reuse one interception point.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

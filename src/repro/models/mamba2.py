@@ -19,7 +19,6 @@ from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ModelConfig
 from repro.models.layers import grad_barrier, init_dense, rmsnorm

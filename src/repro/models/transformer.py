@@ -20,19 +20,17 @@ consumes precomputed CLIP patch embeddings via ``image_embed``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ModelConfig
 from repro.models.attention import (
     KVCache, attention_apply, attention_decode, attention_decode_paged,
     init_attention)
 from repro.models.context import Context, QATContext
-from repro.models.layers import init_dense, init_norm, mlp_apply, init_mlp, rmsnorm
+from repro.models.layers import init_norm, mlp_apply, init_mlp, rmsnorm
 from repro.models.mamba2 import (
     MambaState, init_mamba2, mamba2_apply, mamba2_decode)
 from repro.models.moe import init_moe, moe_apply

@@ -1,0 +1,22 @@
+"""repro.qtensor — the unified packed quantized-tensor storage layer.
+
+One representation for every quantized array in the framework: serving
+weight blocks (``repro.serve.quantized``), paged KV-cache pages
+(``repro.kvcache``), and checkpointed quantized models
+(``repro.checkpoint``) all store a ``QTensor`` — packed uint8/int8
+payload + grouped fp32 scales + static (bits, logical shape, pack axis).
+See ``qtensor.py`` for the byte layouts and scale semantics, and
+``kernels.qmm`` for the fused matmul that consumes it in-kernel.
+"""
+from repro.qtensor.qtensor import (
+    PACKED_BITS, QTensor, bytes_per_element, expand_scale, is_qtensor,
+    logical_size, pack, packed_size, qmax_for_bits, quantize,
+    quantize_values, storage_summary, tree_has_qtensor,
+    tree_payload_bytes, unpack, unpack_rows)
+
+__all__ = [
+    "PACKED_BITS", "QTensor", "bytes_per_element", "expand_scale",
+    "is_qtensor", "logical_size", "pack", "packed_size", "qmax_for_bits",
+    "quantize", "quantize_values", "storage_summary", "tree_has_qtensor",
+    "tree_payload_bytes", "unpack", "unpack_rows",
+]

@@ -5,6 +5,8 @@ from repro.quant.quantizer import (
     quantize,
     dequantize,
     fake_quant_ref,
+    from_qtensor,
+    to_qtensor,
 )
 from repro.quant.fake_quant import fake_quant, fake_quant_ste
 from repro.quant.noise import noise_power, quant_step, expected_noise_tree

@@ -18,16 +18,16 @@ from repro.quant.quantizer import QuantSpec, quant_params
 from repro.kernels import ops as kops
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3,))
-def fake_quant_ste(x, scale, zero_point, bits: int):
-    return kops.fake_quant(x, scale, zero_point, bits)
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fake_quant_ste(x, scale, zero_point, bits: int, levels=None):
+    return kops.fake_quant(x, scale, zero_point, bits, levels=levels)
 
 
-def _fq_fwd(x, scale, zero_point, bits):
-    return kops.fake_quant(x, scale, zero_point, bits), None
+def _fq_fwd(x, scale, zero_point, bits, levels):
+    return kops.fake_quant(x, scale, zero_point, bits, levels=levels), None
 
 
-def _fq_bwd(bits, _, g):
+def _fq_bwd(bits, levels, _, g):
     # Straight-through: identity to x, no gradient to scale/zp (min-max
     # ranges are recomputed / EMA-updated outside the autodiff graph).
     return g, None, None
@@ -52,4 +52,7 @@ def fake_quant(x: jnp.ndarray, spec: QuantSpec,
         shape[spec.channel_axis % x.ndim] = -1
         scale = scale.reshape(shape)
         zero_point = zero_point.reshape(shape)
-    return fake_quant_ste(x, scale, zero_point, spec.bits)
+    # pass the spec's grid bound so symmetric (odd-grid) specs clip at
+    # 2^b - 2 even for values past the calibrated range
+    return fake_quant_ste(x, scale, zero_point, spec.bits,
+                          float(spec.levels))

@@ -13,9 +13,7 @@ from __future__ import annotations
 
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.utils.pytree import named_leaves
 

@@ -7,7 +7,7 @@ norms / embeddings to high precision, default bits, allowed bit set).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -47,8 +47,11 @@ class QuantPolicy:
     pinned_bits: int = 8
     quantize_activations: bool = True
     # Bit widths the paged KV cache can STORE (repro.kvcache): 16 = fp,
-    # 8 = int8 bytes, 4 = packed nibbles. Unlike ``allowed_bits`` these
-    # must be byte-realizable storage formats, not just fake-quant grids.
+    # 8 = int8 bytes, and the packed qtensor layouts 6 (3 bytes / 4
+    # values), 4 and 3 (2 per byte). Unlike ``allowed_bits`` these must
+    # be byte-realizable storage formats, not just fake-quant grids; the
+    # conservative default sticks to {4, 8, 16} — pass e.g.
+    # (3, 4, 6, 8, 16) to let the allocator use every packed width.
     kv_allowed_bits: Sequence[int] = (4, 8, 16)
 
     def is_pinned(self, name: str) -> bool:

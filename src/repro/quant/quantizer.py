@@ -3,13 +3,29 @@
 This is the quantization model of the paper (Appendix E): uniform min–max
 quantization with step ``Δ = (θmax − θmin)/(2^b − 1)``; quantization noise
 is modelled as uniform, zero-mean, variance ``Δ²/12``.
+
+Grid conventions (the reconciliation the parity tests pin down):
+
+  * affine (default) — 2^b levels indexed [0, 2^b−1], zero-point wherever
+    0.0 lands. The paper's min–max grid; ``kernels.ops.fake_quant`` and
+    the Pallas kernels implement exactly this.
+  * symmetric — an ODD number of representable values 2^b − 1 indexed
+    [0, 2^b−2] with the zero point at the exact INTEGER 2^(b−1)−1. The
+    earlier convention kept 2^b levels here, which put the zero point at
+    a half-integer (e.g. 3.5 at 3 bits): ``round`` then lands extreme
+    values exactly on .5 rounding boundaries, and whether the reference
+    (``x / scale``) and the kernels (``x * (1/scale)``) round them the
+    same way became a floating-point coin flip — the 3-bit disagreement
+    between ``fake_quant_ref`` and ``kernels.ops.fake_quant``. The odd
+    grid is also exactly the ±(2^(b−1)−1) storage grid every packed
+    ``repro.qtensor`` consumer uses, so symmetric fake-quant now
+    simulates packed serving bit-exactly.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 
@@ -29,7 +45,9 @@ class QuantSpec:
 
     @property
     def levels(self) -> int:
-        return 2 ** self.bits - 1
+        """Largest grid index: 2^b − 1 (affine) or 2^b − 2 (symmetric —
+        the odd grid with an integer zero point; module docstring)."""
+        return 2 ** self.bits - (2 if self.symmetric else 1)
 
 
 def quant_range(x: jnp.ndarray, spec: QuantSpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -51,8 +69,10 @@ def quant_params(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Scale and zero-point from data statistics.
 
-    scale = Δ = (max-min)/(2^b - 1); zero_point is the integer the value
-    0.0 maps to (0 for symmetric specs by construction).
+    scale = Δ = (max-min)/levels; zero_point is the integer grid index
+    the value 0.0 maps to — wherever the affine min-max grid puts it,
+    and exactly 2^(b-1) − 1 (the center of the odd grid) for symmetric
+    specs.
     """
     lo, hi = quant_range(x, spec)
     scale = (hi - lo) / spec.levels
@@ -99,3 +119,40 @@ def fake_quant_ref(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
         return x
     scale, zp = quant_params(x, spec)
     return dequantize(quantize(x, scale, zp, spec), scale, zp, spec).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# QTensor round-trips: QuantSpec -> packed storage -> values
+# ---------------------------------------------------------------------------
+
+def to_qtensor(x: jnp.ndarray, spec: QuantSpec,
+               group_size: Optional[int] = None):
+    """Quantize ``x`` under a symmetric ``spec`` into REAL packed storage
+    (a ``repro.qtensor.QTensor``) instead of fake-quant simulation.
+
+    Per-tensor specs store one scale; per-channel specs require the
+    channel on the last axis (the QTensor convention) and support an
+    optional ``group_size`` along the reduction axis. The grid is the
+    same odd ±(2^(b−1)−1) set symmetric fake-quant simulates, so
+    ``from_qtensor(to_qtensor(x, spec)) == fake_quant_ref(x, spec)`` for
+    per-tensor specs — calibrate once, then save/serve the exact values
+    the simulation promised.
+    """
+    from repro import qtensor as qt
+    if not spec.symmetric:
+        raise ValueError("packed QTensor storage is symmetric; use an "
+                         "affine spec only for fake-quant simulation")
+    if spec.channel_axis is None:
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+        scale = (jnp.maximum(amax, 1e-12)
+                 / qt.qmax_for_bits(spec.bits)).reshape((1,) * x.ndim)
+        return qt.quantize(x, spec.bits, scale=scale)
+    if spec.channel_axis % x.ndim != x.ndim - 1:
+        raise ValueError("QTensor stores per-channel scales on the LAST "
+                         f"axis; got channel_axis={spec.channel_axis}")
+    return qt.quantize(x, spec.bits, group_size=group_size)
+
+
+def from_qtensor(qt_tensor, dtype=None) -> jnp.ndarray:
+    """Unpack + dequantize a QTensor back to values (round-trip read)."""
+    return qt_tensor.dequantize(dtype if dtype is not None else jnp.float32)

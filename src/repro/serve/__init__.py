@@ -1,19 +1,22 @@
 """repro.serve — continuous-batching quantized inference engine.
 
 FIT's deployment story: take the ``BitConfig`` a sensitivity report
-recommends, materialize it as real int8 storage, and serve it under
-realistic request loads with continuous batching. The KV cache can run
-paged (``EngineConfig(kv_cache="paged")`` — ``repro.kvcache``): page
-pools with prefix sharing and FIT-allocated per-layer KV bit widths
-(``allocate_kv_bits``). See ``engine.py`` for the architecture and
-ROADMAP.md for the north star this serves.
+recommends, materialize it as real packed QTensor storage
+(``quantize_params`` — sub-8-bit blocks actually shrink HBM;
+``quantize_params_int8`` keeps the int8-backed baseline), and serve it
+under realistic request loads with continuous batching. The KV cache
+can run paged (``EngineConfig(kv_cache="paged")`` — ``repro.kvcache``):
+QTensor page pools with prefix sharing and FIT-allocated per-layer KV
+bit widths (``allocate_kv_bits``). See ``engine.py`` for the
+architecture and ROADMAP.md for the north star this serves.
 """
 from repro.kvcache.fit import allocate_kv_bits, kv_bit_config, kv_report_fns
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.loadgen import poisson_requests, synth_prompt, trace_requests
 from repro.serve.metrics import EngineMetrics
 from repro.serve.quantized import (
-    bit_config_from_report, make_dequant_context, quantize_params_int8)
+    bit_config_from_report, make_dequant_context, quantize_params,
+    quantize_params_int8, weight_storage_bytes)
 from repro.serve.request import Request, RequestStatus
 from repro.serve.sampling import SamplingParams, request_keys, sample_tokens
 
@@ -21,6 +24,7 @@ __all__ = [
     "Engine", "EngineConfig", "EngineMetrics", "Request", "RequestStatus",
     "SamplingParams", "allocate_kv_bits", "bit_config_from_report",
     "kv_bit_config", "kv_report_fns", "make_dequant_context",
-    "poisson_requests", "quantize_params_int8", "request_keys",
-    "sample_tokens", "synth_prompt", "trace_requests",
+    "poisson_requests", "quantize_params", "quantize_params_int8",
+    "request_keys", "sample_tokens", "synth_prompt", "trace_requests",
+    "weight_storage_bytes",
 ]

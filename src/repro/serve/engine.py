@@ -28,9 +28,12 @@ scales on the int8 path, per-request sampling keys), so a request's
 tokens are bit-identical to running it alone — the property the parity
 tests in ``tests/test_serve.py`` pin down.
 
-Quantized serving: pass ``scales`` from ``repro.serve.quantized`` and the
-engine runs the whole decode graph through a ``DequantContext`` — int8
-weight storage, optionally int8 MXU matmuls (``int8_compute=True``).
+Quantized serving: build params with ``repro.serve.quantized`` — either
+packed QTensor storage (``quantize_params``, detected automatically) or
+legacy int8 + ``scales`` — and the engine runs the whole decode graph
+through a ``DequantContext``: packed weight storage, optionally fused
+quantized MXU matmuls (``int8_compute=True``, W{8,6,4,3}A8 via
+``kernels.qmm`` for QTensor blocks).
 
 Paged KV cache (``kv_cache="paged"``, see ``repro.kvcache``): attention
 state moves from the dense per-slot buffer into fixed-size pages with
@@ -62,6 +65,7 @@ from repro.models.decode import (
     DecodeState, decode_step, init_decode_state, init_paged_decode_state,
     prefill_into, state_insert_slot)
 from repro.kvcache.allocator import BlockAllocator
+from repro.qtensor import tree_has_qtensor
 from repro.kvcache.paged import (
     PagedKVConfig, copy_page, gather_layer, kv_layer_count,
     page_bytes_all_layers, scatter_span)
@@ -108,6 +112,10 @@ class Engine:
         self.ecfg = ecfg
         self.scales = dict(scales) if scales else {}
         self._audio = cfg.family == "audio"
+        # QTensor-packed weight blocks carry their scales inside the leaf
+        # (repro.qtensor) — they need the DequantContext even when no
+        # path-keyed scales dict is supplied
+        self._qt_params = tree_has_qtensor(params)
 
         self._paged = ecfg.kv_cache == "paged"
         self._pcfg: Optional[PagedKVConfig] = None
@@ -138,7 +146,7 @@ class Engine:
         self._out_shape = (S, G) + cb
 
         def make_ctx(scales):
-            if not scales:
+            if not scales and not self._qt_params:
                 return Context()
             return DequantContext(scales, cfg.param_dtype,
                                   int8_compute=ecfg.int8_compute)

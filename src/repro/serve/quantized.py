@@ -1,21 +1,30 @@
-"""Materialize a FIT-derived ``BitConfig`` into real int8 weight storage.
+"""Materialize a FIT-derived ``BitConfig`` as real quantized storage.
 
 The missing link between MPQ search and serving: ``examples/mpq_search``
 produces a ``BitConfig`` (block path -> bits) from a
-``SensitivityReport``; this module turns it into
+``SensitivityReport``; this module turns it into a parameter tree whose
+quantized matmul blocks are stored quantized, in one of two formats:
 
-  * a parameter tree whose quantized matmul blocks are stored as int8
-    (sub-8-bit blocks use a reduced symmetric grid inside int8 — the
-    storage-format view of the paper's uniform quantizer), and
-  * a ``DequantContext`` holding the per-channel scales, keyed by the
-    scoped block paths the decode graph emits.
+  * ``quantize_params`` — the QTensor path (the real one): each block
+    becomes a packed ``repro.qtensor.QTensor`` — int8 bytes at W8,
+    4-values-in-3-bytes at W6, 2-per-byte nibbles at W4/W3 — with
+    per-output-channel (optionally per-group) scales carried inside the
+    leaf. A FIT 4-bit allocation actually halves that block's HBM and
+    bandwidth; ``DequantContext.matmul`` dispatches these to the fused
+    grouped-scale ``kernels.qmm``.
+  * ``quantize_params_int8`` — the legacy int8-backed format (sub-8-bit
+    blocks use a reduced symmetric grid inside int8 bytes, saving no
+    storage). Kept as the storage-format A/B baseline for benchmarks
+    and the W8 bit-identity contract: at W8 with default granularity
+    the two formats dequantize bit-identically.
 
-Requires the unrolled (``scan_layers=False``) parameter layout: scales
-are looked up per layer path, which a scanned stack cannot provide.
+Both require the unrolled (``scan_layers=False``) parameter layout:
+storage is looked up per layer path, which a scanned stack cannot
+provide.
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Optional, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
@@ -23,6 +32,7 @@ from repro.configs import ModelConfig
 from repro.core.fit import SensitivityReport
 from repro.core.mpq import greedy_allocate
 from repro.models.context import DequantContext
+from repro.qtensor import quantize as qt_quantize, tree_payload_bytes
 from repro.quant.policy import BitConfig, QuantPolicy
 from repro.utils.logging import get_logger
 from repro.utils.pytree import map_with_names, named_leaves
@@ -54,9 +64,67 @@ def _require_unrolled(params) -> None:
     if isinstance(layers, dict) and any(k.isdigit() for k in layers):
         return
     raise ValueError(
-        "int8 serving needs the unrolled parameter layout "
-        "(init_params with scan_layers=False): per-layer scales are keyed "
+        "quantized serving needs the unrolled parameter layout "
+        "(init_params with scan_layers=False): per-layer storage is keyed "
         "by block path, which a lax.scan-stacked tree cannot provide")
+
+
+def _bit_config(params, bits: Union[int, BitConfig],
+                policy: QuantPolicy) -> BitConfig:
+    if isinstance(bits, int):
+        wb = {name: bits for name, leaf in named_leaves(params)}
+        return policy.sanitize(BitConfig(wb, {}))
+    return policy.sanitize(bits)
+
+
+def _block_bits(bit_cfg: BitConfig, name: str, leaf, policy: QuantPolicy
+                ) -> Optional[int]:
+    """Bits this leaf should be stored at, or None to keep it fp."""
+    tail = name.split("/")[-1]
+    b = bit_cfg.weight_bits.get(qw_path(name),
+                                bit_cfg.weight_bits.get(name, 16))
+    if (tail not in MATMUL_LEAVES or b >= 16
+            or not policy.quantizable(name, leaf.ndim)):
+        return None
+    return b
+
+
+def quantize_params(
+    params,
+    bits: Union[int, BitConfig],
+    policy: Optional[QuantPolicy] = None,
+    group_size: Optional[int] = None,
+) -> Tuple[Dict, Dict[str, jnp.ndarray]]:
+    """PTQ the matmul blocks of ``params`` into packed QTensor storage.
+
+    ``bits`` is a uniform width or a full ``BitConfig`` (block path ->
+    bits; missing blocks stay fp). Symmetric quantization with
+    per-output-channel scales; ``group_size`` adds finer groups along
+    the reduction axis (scales become ``(K/group, N)``). Returns
+    ``(qparams, scales)`` with ``scales`` keyed by scoped qw path — the
+    scales also live inside each QTensor; the dict is reporting/CLI
+    convenience, the engine does not need it.
+    """
+    _require_unrolled(params)
+    policy = policy or QuantPolicy()
+    bit_cfg = _bit_config(params, bits, policy)
+    scales: Dict[str, jnp.ndarray] = {}
+    hist: Dict[int, int] = {}
+
+    def one(name, leaf):
+        b = _block_bits(bit_cfg, name, leaf, policy)
+        if b is None:
+            return leaf
+        qt = qt_quantize(leaf, b, group_size=group_size)
+        scales[qw_path(name)] = qt.scale
+        hist[b] = hist.get(b, 0) + 1
+        return qt
+
+    qparams = map_with_names(one, params)
+    log.info("QTensor PTQ: %d blocks packed %s; %.0f payload bytes",
+             sum(hist.values()), dict(sorted(hist.items())),
+             tree_payload_bytes(qparams))
+    return qparams, scales
 
 
 def quantize_params_int8(
@@ -64,31 +132,23 @@ def quantize_params_int8(
     bits: Union[int, BitConfig],
     policy: Optional[QuantPolicy] = None,
 ) -> Tuple[Dict, Dict[str, jnp.ndarray]]:
-    """PTQ the matmul blocks of ``params`` into int8 storage.
+    """Legacy int8-backed PTQ (every quantized block stored as int8).
 
-    ``bits`` is a uniform width or a full ``BitConfig`` (block path ->
-    bits; missing blocks stay fp). Symmetric per-channel (last axis)
-    quantization; a b-bit block uses the ±(2^(b-1)−1) sub-grid of int8.
-    Returns ``(qparams, scales)`` with ``scales`` keyed by scoped qw path.
+    A b-bit block uses the ±(2^(b-1)−1) sub-grid of int8 — the same grid
+    ``quantize_params`` packs, so the two formats dequantize to
+    identical values; only the bytes differ. Returns ``(qparams,
+    scales)`` with ``scales`` keyed by scoped qw path.
     """
     _require_unrolled(params)
     policy = policy or QuantPolicy()
-    if isinstance(bits, int):
-        wb = {name: bits for name, leaf in named_leaves(params)}
-        bit_cfg = policy.sanitize(BitConfig(wb, {}))
-    else:
-        bit_cfg = policy.sanitize(bits)
-
+    bit_cfg = _bit_config(params, bits, policy)
     scales: Dict[str, jnp.ndarray] = {}
     n_quant = 0
 
     def one(name, leaf):
         nonlocal n_quant
-        tail = name.split("/")[-1]
-        b = bit_cfg.weight_bits.get(qw_path(name),
-                                    bit_cfg.weight_bits.get(name, 16))
-        if (tail not in MATMUL_LEAVES or b >= 16
-                or not policy.quantizable(name, leaf.ndim)):
+        b = _block_bits(bit_cfg, name, leaf, policy)
+        if b is None:
             return leaf
         qmax = float(2 ** (min(b, 8) - 1) - 1)
         w32 = leaf.astype(jnp.float32)
@@ -106,9 +166,14 @@ def quantize_params_int8(
     return qparams, scales
 
 
-def make_dequant_context(cfg: ModelConfig, scales: Mapping[str, jnp.ndarray],
+def weight_storage_bytes(params) -> float:
+    """Realized weight-storage bytes of a (possibly QTensor) tree."""
+    return float(tree_payload_bytes(params))
+
+
+def make_dequant_context(cfg: ModelConfig, scales=None,
                          int8_compute: bool = False) -> DequantContext:
-    return DequantContext(dict(scales), cfg.param_dtype,
+    return DequantContext(dict(scales) if scales else {}, cfg.param_dtype,
                           int8_compute=int8_compute)
 
 

@@ -20,7 +20,6 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-import numpy as np
 
 def cost_analysis_dict(compiled) -> Dict[str, float]:
     """``compiled.cost_analysis()`` normalized across JAX versions: older

@@ -2,7 +2,6 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import (
     ef_trace_weights, ef_trace_weights_streaming, ef_trace_activations,

@@ -1,7 +1,6 @@
 """Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracle,
 swept over shapes and dtypes, plus hypothesis property tests."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from _hypothesis_compat import given, settings, st

@@ -113,7 +113,7 @@ def test_allocator_prefix_sharing_and_cow():
 # Pallas kernel vs jnp oracle
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("bits", [16, 8, 4])
+@pytest.mark.parametrize("bits", [16, 8, 6, 4, 3])
 def test_paged_attention_kernel_matches_ref(bits, rng):
     P, page, KV, Dh, B, NP, G = 10, 8, 2, 16, 3, 4, 2
     kf = rng.normal(size=(P, page, KV, Dh)).astype(np.float32)
@@ -126,9 +126,9 @@ def test_paged_attention_kernel_matches_ref(bits, rng):
         k = quantize_kv(jnp.asarray(kf), jnp.asarray(ks)[:, None, :], bits)
         v = quantize_kv(jnp.asarray(vf), jnp.asarray(vs)[:, None, :], bits)
         kss, vss = jnp.asarray(ks), jnp.asarray(vs)
-        assert k.dtype == (jnp.uint8 if bits == 4 else jnp.int8)
-        if bits == 4:
-            assert k.shape[-1] == Dh // 2      # packed nibbles
+        from repro.qtensor import PACKED_BITS, packed_size
+        assert k.dtype == (jnp.uint8 if bits in PACKED_BITS else jnp.int8)
+        assert k.shape[-1] == packed_size(Dh, bits)   # 12/8/8 at 6/4/3
     q = jnp.asarray(rng.normal(size=(B, 1, KV * G, Dh)).astype(np.float32))
     table = jnp.asarray(rng.integers(0, P, (B, NP)).astype(np.int32))
     pos = jnp.asarray([3, 17, 31], jnp.int32)
@@ -281,6 +281,28 @@ def test_allocate_kv_bits_budget_and_roundtrip(kv_report):
     bc = kv_bit_config(bits, cfg, policy)
     assert kv_bits_from_config(bc, cfg) == bits
     assert set(bc.act_bits) == {s for pair in kv_sites(cfg) for s in pair}
+
+
+def test_allocate_kv_bits_charges_realized_storage(kv_report):
+    """Levels whose container is wider than their nominal grid (packed
+    3-bit rides 4-bit nibbles) are charged at container size: the
+    allocation can never overrun the byte budget in REAL pool HBM."""
+    from repro.qtensor import bytes_per_element
+    cfg, _, _, report = kv_report
+    policy = QuantPolicy(kv_allowed_bits=(3, 4, 8, 16))
+    tokens = 2 * 64
+    elems = 2 * tokens * cfg.num_kv_heads * cfg.head_dim
+    # a budget that exactly fits all layers at 4 bits (= the 3-bit
+    # container width): 3-bit must NOT be treated as cheaper than 4-bit
+    budget_bytes = cfg.num_layers * elems * bytes_per_element(4)
+    for exact in (False, True):
+        bits = allocate_kv_bits(report, cfg, policy, budget_bytes, tokens,
+                                exact=exact)
+        realized = sum(elems * bytes_per_element(b) for b in bits.values())
+        assert realized <= budget_bytes + 1e-6, (bits, realized)
+        # 3-bit costs the same bytes as 4-bit but quantizes harder —
+        # the allocator should never leave a layer at 3 when 4 is free
+        assert 3 not in bits.values(), bits
 
 
 def test_fit_allocated_kv_beats_uniform_and_reverse(kv_report):

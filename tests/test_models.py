@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_IDS, get_config, smoke_config, SHAPES
+from repro.configs import ARCH_IDS, get_config, smoke_config
 from repro.models import (
     QATLevels, decode_step, forward, init_decode_state, init_params, loss_fn)
 from repro.models.decode import prefill

@@ -78,6 +78,39 @@ def test_quant_step_formula():
     assert np.isclose(noise_power(-1.0, 1.0, 8), (2.0 / 255) ** 2 / 12)
 
 
+@pytest.mark.parametrize("bits", QuantPolicy().allowed_bits)
+def test_symmetric_fake_quant_parity_ref_vs_kernel(rng, bits):
+    """The odd-grid reconciliation: for symmetric specs across every
+    allowed bit width, ``fake_quant_ref`` and ``kernels.ops.fake_quant``
+    produce IDENTICAL outputs (the zero point is the integer
+    2^(b-1)-1, so no value lands on a .5 rounding boundary), and the
+    packed-QTensor round-trip returns the same values — symmetric
+    fake-quant simulates packed serving exactly."""
+    from repro.kernels import ops
+    from repro.quant import from_qtensor, to_qtensor
+
+    x = jnp.asarray(rng.normal(0, 1, 256).astype(np.float32))
+    spec = QuantSpec(bits=bits, symmetric=True)
+    scale, zp = quant_params(x, spec)
+    assert float(zp) == 2 ** (bits - 1) - 1          # integer zero point
+    a = np.asarray(fake_quant_ref(x, spec))
+    k = np.asarray(ops.fake_quant(x, scale, zp, bits, levels=spec.levels))
+    np.testing.assert_array_equal(a, k)
+    # grid values never exceed the odd symmetric range
+    qmax = (2 ** (bits - 1) - 1) * float(scale)
+    assert np.abs(a).max() <= qmax + 1e-6
+    rt = np.asarray(from_qtensor(to_qtensor(x.reshape(16, 16), spec)))
+    np.testing.assert_allclose(rt.reshape(-1), a, rtol=0, atol=1e-7)
+    # out-of-calibration values clip to the SAME odd grid on both paths:
+    # apply the calibrated (scale, zp) to data 3x wider than the range
+    y = 3.0 * x
+    ky = np.asarray(ops.fake_quant(y, scale, zp, bits, levels=spec.levels))
+    assert np.abs(ky).max() <= qmax + 1e-6
+    from repro.quant import fake_quant as fq_ste
+    sy = np.asarray(fq_ste(y, spec, scale=scale, zero_point=zp))
+    np.testing.assert_array_equal(ky, sy)
+
+
 def test_observers(rng):
     mm, ema = MinMaxObserver(), EmaObserver(decay=0.5)
     s1 = s2 = init_range_state()

@@ -17,7 +17,6 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.models import init_params
-from repro.models.context import Context
 from repro.models.decode import (
     decode_step, init_decode_state, prefill_into, state_insert_slot)
 from repro.quant.policy import QuantPolicy

@@ -5,22 +5,20 @@ compute FIT from it → allocate mixed-precision bits → QAT → verify the
 quantized accuracy holds. Plus checkpoint/restart and watchdog behaviour
 of the training driver.
 """
-import os
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
-from repro.core import build_report, greedy_allocate, spearman
+from repro.core import build_report, greedy_allocate
 from repro.data.synthetic import ClassifyConfig, batched, classify_dataset
 from repro.launch.fault import Watchdog, supervise
 from repro.launch.train import train
 from repro.models.cnn import (
     cnn_accuracy, cnn_act_fn, cnn_loss, cnn_tap_loss, cnn_tap_shapes, init_cnn)
 from repro.models.context import QATContext
-from repro.quant.policy import BitConfig, QuantPolicy
+from repro.quant.policy import QuantPolicy
 
 
 def test_end_to_end_fit_mpq_workflow():
