@@ -28,6 +28,12 @@ bytes land in the JSON. The packed model is then actually SERVED
 the int8-backed format (identical grid -> identical KL) and to the
 fake-quant simulation. Asserts packed < 0.75x int8-backed bytes.
 
+Tensor-parallel section (repro.serve sharded mode): the same packed
+model + int8 page pool served at tp∈{1,2,4} on an 8-virtual-device
+subprocess mesh at EQUAL GLOBAL HBM — per-shard weight/KV bytes (the
+payload a single device actually holds) and decode tok/s per degree
+land under the "sharded" JSON key.
+
 The full JSON payload is also written to ``serve_bench.json`` (override
 with SERVE_BENCH_JSON) so CI can upload it as an artifact.
 
@@ -230,6 +236,64 @@ def weight_storage_bench(pcfg_model, pparams, requests) -> dict:
     }
 
 
+def sharded_bench(timeout: int = 1200) -> dict:
+    """Tensor-parallel serving at tp∈{1,2,4} on EQUAL GLOBAL HBM (same
+    packed W4 weights, same int8 page pool): per-shard weight/KV bytes
+    and decode tok/s per degree. Runs in an 8-virtual-device subprocess
+    (XLA_FLAGS must be set before jax initializes, and the parent
+    process is already single-device)."""
+    import subprocess
+    import sys
+    code = """
+import dataclasses, json
+import jax
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.launch.mesh import make_tp_mesh
+from repro.kvcache.paged import per_shard_pool_bytes
+from repro.serve import (Engine, EngineConfig, quantize_params,
+                         sharded_storage_bytes, trace_requests,
+                         weight_storage_bytes)
+
+cfg = dataclasses.replace(smoke_config("%s"), num_heads=8, num_kv_heads=8,
+                          scan_layers=False)
+params = init_params(cfg, jax.random.key(0))
+qp, _ = quantize_params(params, 4, group_size=8)
+trace = [(2 * i, 24, 12) for i in range(8)]
+out = {"arch": cfg.name, "tp": {}}
+for tp in (1, 2, 4):
+    ecfg = EngineConfig(max_slots=4, max_len=64, max_new_tokens=16,
+                        prefill_chunk=8, decode_burst=8, int8_compute=True,
+                        kv_cache="paged", page_size=16,
+                        mesh=make_tp_mesh(tp))
+    eng = Engine(qp, cfg, ecfg, kv_bits=8)
+    eng.run(trace_requests(cfg, trace, seed=7))          # warm
+    _, m = eng.run(trace_requests(cfg, trace, seed=7))
+    s = m.summary()
+    out["tp"][tp] = {
+        "weight_bytes_per_shard": sharded_storage_bytes(
+            eng.params, eng._shard_plan, tp),
+        "kv_pool_bytes_per_shard": per_shard_pool_bytes(
+            cfg, eng._pcfg, eng._kv_shards),
+        "kv_shards": eng._kv_shards,
+        "sharded_blocks": len(eng._shard_plan),
+        "decode_tokens_per_s": s["decode_tokens_per_s"],
+    }
+out["weight_bytes_global"] = weight_storage_bytes(qp)
+print("SHARDED-JSON:" + json.dumps(out))
+""" % ARCH
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("REPRO_KERNELS", "ref")
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"sharded bench failed:\n{r.stdout}\n{r.stderr}"
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("SHARDED-JSON:")][0]
+    return json.loads(line[len("SHARDED-JSON:"):])
+
+
 def run() -> None:
     cfg = smoke_config(ARCH)
     params = init_params(cfg, jax.random.key(0))
@@ -314,7 +378,26 @@ def run() -> None:
          f"{ws['kl_vs_fp_packed']:.5f} (fake-quant sim "
          f"{ws['kl_vs_fp_fake_quant_sim']:.5f})")
 
+    # ---- tensor-parallel serving at equal global HBM ----
+    sh = sharded_bench()
+    w1, w2, w4 = (sh["tp"][t]["weight_bytes_per_shard"]
+                  for t in ("1", "2", "4"))
+    # quantized blocks shard: per-shard weight bytes strictly shrink
+    # (replicated fp leaves — embed table, norms — set the floor)
+    assert w4 < w2 < w1, (w1, w2, w4)
+    # kv-head-sharded pools split exactly
+    assert sh["tp"]["4"]["kv_pool_bytes_per_shard"] == \
+        sh["tp"]["1"]["kv_pool_bytes_per_shard"] / 4
+    for tp, row in sorted(sh["tp"].items(), key=lambda kv: int(kv[0])):
+        emit(f"serve_sharded_tp{tp}_decode",
+             1e6 / max(row["decode_tokens_per_s"], 1e-9),
+             f"{row['decode_tokens_per_s']:.1f} tok/s; per-shard "
+             f"{row['weight_bytes_per_shard'] / 1024:.0f} KiB weights + "
+             f"{row['kv_pool_bytes_per_shard'] / 1024:.0f} KiB KV "
+             f"({row['sharded_blocks']} blocks, kv/{row['kv_shards']})")
+
     payload = {
+        "sharded": sh,
         "closed_loop": {
             "legacy_tokens_per_s": round(legacy["useful_tokens_per_s"], 2),
             "engine_tokens_per_s": round(etps, 2),

@@ -217,6 +217,7 @@ def allocate_act_sites(
     levels: Optional[Sequence[int]] = None,
     exact: bool = False,
     cost_bits: Optional[Sequence[float]] = None,
+    shard_fraction: float = 1.0,
 ) -> List[int]:
     """Bit allocation for STORED activation state under a size budget.
 
@@ -238,7 +239,18 @@ def allocate_act_sites(
     benefit table still uses the nominal widths (the noise model is the
     grid's); only the budget spend changes. Defaults to the nominal
     widths.
+
+    ``shard_fraction`` makes the budget PER-SHARD-aware for
+    tensor-parallel serving: a pool sharded across tp devices stores
+    only ``1/tp`` of each site's elements per shard, so the spend is
+    charged at ``group_sizes * shard_fraction`` against a budget that
+    now means ONE shard's HBM. With the default 1.0 (replicated pool)
+    nothing changes.
     """
+    if not (0.0 < shard_fraction <= 1.0):
+        raise ValueError(
+            f"shard_fraction must be in (0, 1] (got {shard_fraction}); "
+            "pass 1/tp for a pool sharded across tp devices")
     levels = sorted({int(b) for b in (levels or policy.kv_allowed_bits)})
     if cost_bits is not None and len(cost_bits) != len(levels):
         raise ValueError(f"cost_bits {cost_bits} must map 1:1 onto the "
@@ -255,7 +267,7 @@ def allocate_act_sites(
                     "report — build_report needs tap_loss_fn/act_fn "
                     "covering the KV sites (see repro.kvcache.fit)")
             tbl[gi] += packed.act_table[row_of[site], aidx]
-    sizes = np.asarray(group_sizes, np.float64)
+    sizes = np.asarray(group_sizes, np.float64) * float(shard_fraction)
     bits_arr = np.asarray(cost_bits if cost_bits is not None else levels,
                           np.float64)
     if np.any(np.diff(bits_arr) < 0):

@@ -17,7 +17,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.fake_quant import fake_quant_pallas, fake_quant_per_channel_pallas
 from repro.kernels.ef_sqnorm import ef_sqnorm_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
-from repro.kernels.qmm import qmm_pallas
+from repro.kernels.qmm import qmm_groups_pallas, qmm_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 
@@ -87,6 +87,27 @@ def qmm(x_q, w, x_scale, out_dtype=jnp.float32):
                       w.scale.reshape(w.scale.shape[w.axis], n),
                       bits=w.bits, k=k, out_dtype=out_dtype,
                       interpret=(mode == "interpret"))
+
+
+def qmm_group_products(x_q, w):
+    """Per-group scaled partial products (G, M, N) fp32, no group sum —
+    the shard-local half of a K-sharded (row-parallel) ``qmm``.
+
+    Off-TPU this always takes the jnp oracle, even in interpret mode:
+    the tensor-parallel engine's tp-vs-tp=1 BIT-IDENTICAL parity
+    contract is stated on the oracle's exact int32-dot-per-group terms,
+    and an interpreted kernel inside the engine's per-step scan would be
+    ruinously slow. Interpret-mode kernel coverage lives in
+    ``tests/test_qtensor.py::test_qmm_groups_pallas_matches_group_products``,
+    which calls ``qmm_groups_pallas`` directly (bit-exact vs the oracle).
+    """
+    mode = _mode()
+    if mode != "tpu":
+        return _ref.qmm_group_products(x_q, w)
+    k, n = w.shape
+    return qmm_groups_pallas(x_q, w.data,
+                             w.scale.reshape(w.scale.shape[w.axis], n),
+                             bits=w.bits, k=k)
 
 
 def flash_attention(q, k, v, causal: bool = True):

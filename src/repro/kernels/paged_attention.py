@@ -17,6 +17,14 @@ Grid: (B, KV, NP) with the page axis innermost; fp32 online-softmax
 running stats (m, l) and the output accumulator live in VMEM scratch
 across page steps. Pages whose positions are entirely past a slot's
 length still run (grid shapes are static) but are fully masked.
+
+Tensor-parallel serving (``EngineConfig(mesh=...)``) shards the page
+pools by kv-head: every kv head is an independent grid row here (no
+cross-head math anywhere in the kernel), so a shard simply invokes this
+kernel on its local (P, page, KV/tp, Dh') pool block and local (P,
+KV/tp) scales — the decode is purely local per shard and the engine
+concatenates head outputs with an all-gather (exact, so the sharded
+read path stays bit-identical to the replicated one).
 """
 from __future__ import annotations
 

@@ -62,6 +62,68 @@ def _qmm_kernel(x_ref, w_ref, ws_ref, xs_ref, o_ref, acc_ref,
         o_ref[...] = (acc_ref[...] * xs_ref[...]).astype(o_ref.dtype)
 
 
+def _qmm_groups_kernel(x_ref, w_ref, ws_ref, o_ref, *, bits: int):
+    w = w_ref[...]
+    if bits in PACKED_BITS:
+        w = unpack_rows(w, bits)               # (bk, bn) int8, in-VMEM
+    prod = jax.lax.dot_general(
+        x_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[0] = prod.astype(jnp.float32) * ws_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k", "bm", "bn",
+                                             "interpret"))
+def qmm_groups_pallas(x_q: jnp.ndarray, w_data: jnp.ndarray,
+                      w_scale: jnp.ndarray, bits: int, k: int,
+                      bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                      interpret: bool = False):
+    """Per-group scaled partial products: (M, K) int8 x packed (K*, N)
+    -> (G, M, N) fp32 with NO group reduction (``ref.qmm_group_products``
+    semantics; the tensor-parallel shard-local form of ``qmm_pallas``,
+    where each shard runs over ITS group-scale rows and the engine
+    combines shards with an exact zero-padded psum + canonical sum).
+    """
+    m, k_in = x_q.shape
+    assert k_in == k, (x_q.shape, k)
+    kp, n = w_data.shape
+    assert kp == packed_size(k, bits), (w_data.shape, k, bits)
+    n_groups = w_scale.shape[0]
+    assert k % n_groups == 0, (k, n_groups)
+    bk = k // n_groups
+    assert bk <= MAX_GROUP, (
+        f"group_size {bk} too large for one VMEM tile; requantize with "
+        f"group_size <= {MAX_GROUP}")
+    assert logical_size(packed_size(bk, bits), bits) == bk, (
+        f"group_size {bk} splits a {bits}-bit pack unit — quantize with a "
+        "group size that is a multiple of the pack unit")
+    bkp = packed_size(k, bits) // n_groups
+    bm, bn = min(bm, m), min(bn, n)
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm:
+        x_q = jnp.pad(x_q, ((0, pm), (0, 0)))
+    if pn:
+        w_data = jnp.pad(w_data, ((0, 0), (0, pn)))
+        w_scale = jnp.pad(w_scale, ((0, 0), (0, pn)))
+    m2, n2 = m + pm, n + pn
+    grid = (pl.cdiv(m2, bm), pl.cdiv(n2, bn), n_groups)
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_groups_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, g: (i, g)),
+            pl.BlockSpec((bkp, bn), lambda i, j, g: (g, j)),
+            pl.BlockSpec((1, bn), lambda i, j, g: (g, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda i, j, g: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, m2, n2), jnp.float32),
+        interpret=interpret,
+    )(x_q, w_data, w_scale.astype(jnp.float32))
+    return out[:, :m, :n]
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "k", "bm", "bn",
                                              "out_dtype", "interpret"))
 def qmm_pallas(x_q: jnp.ndarray, w_data: jnp.ndarray, x_scale: jnp.ndarray,

@@ -67,18 +67,19 @@ def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
     return _qt.unpack(p, 4, axis=-1)
 
 
-def qmm(x_q: jnp.ndarray, w, x_scale: jnp.ndarray,
-        out_dtype=jnp.float32) -> jnp.ndarray:
-    """Grouped-scale quantized matmul oracle: W{8,6,4,3}A8.
+def qmm_group_products(x_q: jnp.ndarray, w) -> jnp.ndarray:
+    """Per-group scaled partial products of the grouped quantized matmul:
+    (M, K) int8 x QTensor(K, N) -> (G, M, N) fp32, NO group reduction.
 
-    x_q: (M, K) int8 activations; x_scale: (M, 1) (or scalar) per-row
-    fp32 activation scales; ``w``: a ``repro.qtensor.QTensor`` of logical
-    shape (K, N) packed along axis 0 with scales (G, N) — G groups of
-    K/G rows each sharing one scale per output channel.
-
-    Mirrors the Pallas kernel's accumulation structure exactly: one
-    int32 dot per (group, tile), scaled into an fp32 accumulator per
-    group — so kernel-vs-ref tests see only fp32 summation-order noise.
+    Group g's slice is ``f32(int32_dot(x_g, w_g)) * w_scale[g]`` — an
+    EXACT int32 dot cast once and scaled elementwise, so its value does
+    not depend on which device computes it or on how the other groups
+    are laid out. This is the invariant the tensor-parallel serving path
+    builds on: a K-shard that owns whole scale groups computes exactly
+    the same (G_local, M, N) terms the single-device oracle would, and
+    the cross-shard combine (a zero-padded psum over disjoint group
+    slots) is bit-exact for any shard count. ``qmm`` is literally
+    ``sum(qmm_group_products(...), axis=0) * x_scale``.
     """
     k, n = w.shape
     wi = w.unpack()                                   # (K, N) int8
@@ -91,7 +92,27 @@ def qmm(x_q: jnp.ndarray, w, x_scale: jnp.ndarray,
         (((2,), (1,)), ((1,), (0,))),                 # contract gs, batch g
         preferred_element_type=jnp.int32,
     )                                                 # (G, M, N)
-    y = jnp.sum(acc.astype(jnp.float32) * ws[:, None, :], axis=0)
+    return acc.astype(jnp.float32) * ws[:, None, :]
+
+
+def qmm(x_q: jnp.ndarray, w, x_scale: jnp.ndarray,
+        out_dtype=jnp.float32) -> jnp.ndarray:
+    """Grouped-scale quantized matmul oracle: W{8,6,4,3}A8.
+
+    x_q: (M, K) int8 activations; x_scale: (M, 1) (or scalar) per-row
+    fp32 activation scales; ``w``: a ``repro.qtensor.QTensor`` of logical
+    shape (K, N) packed along axis 0 with scales (G, N) — G groups of
+    K/G rows each sharing one scale per output channel.
+
+    Mirrors the Pallas kernel's accumulation structure exactly: one
+    int32 dot per (group, tile), scaled into an fp32 accumulator per
+    group — so kernel-vs-ref tests see only fp32 summation-order noise.
+    The group reduction is ``jnp.sum`` over the stacked
+    ``qmm_group_products`` terms — the same canonical per-element fold
+    the sharded engine applies after its group psum, which is what makes
+    tp>1 serving bit-identical to this oracle.
+    """
+    y = jnp.sum(qmm_group_products(x_q, w), axis=0)
     return (y * jnp.asarray(x_scale, jnp.float32)).astype(out_dtype)
 
 

@@ -41,11 +41,11 @@ from repro.kvcache.fit import (
     kv_sites)
 from repro.kvcache.paged import (
     LayerPages, PagedKVConfig, PagedState, dense_kv_bytes, init_paged_kv,
-    kv_layer_count, layer_page_bytes, pool_bytes)
+    kv_layer_count, layer_page_bytes, per_shard_pool_bytes, pool_bytes)
 
 __all__ = [
     "BlockAllocator", "LayerPages", "PagedKVConfig", "PagedState",
     "allocate_kv_bits", "dense_kv_bytes", "init_paged_kv", "kv_bit_config",
     "kv_bits_from_config", "kv_layer_count", "kv_report_fns", "kv_sites",
-    "layer_page_bytes", "pool_bytes",
+    "layer_page_bytes", "per_shard_pool_bytes", "pool_bytes",
 ]

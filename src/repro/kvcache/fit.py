@@ -72,6 +72,7 @@ def allocate_kv_bits(
     budget_bytes: float,
     tokens: int,
     exact: bool = False,
+    tp_shards: int = 1,
 ) -> Dict[int, int]:
     """Per-layer KV bit widths under ``budget_bytes`` of KV HBM.
 
@@ -85,9 +86,25 @@ def allocate_kv_bits(
     3-bit rides a 4-bit nibble container and 7/5-bit are grid-reduced
     int8 bytes, so e.g. ``kv_allowed_bits=(3, 4, 8, 16)`` can never
     overrun ``budget_bytes`` in actual pool HBM.
+
+    ``tp_shards`` > 1 (tensor-parallel serving with kv-head-sharded
+    pools, ``EngineConfig(mesh=...)``) makes ``budget_bytes`` mean ONE
+    shard's HBM: each shard stores ``1/tp`` of every pool, so the spend
+    is charged at the per-shard element count — a tp=4 allocation can
+    afford richer widths at the same per-device budget, and can never
+    overrun a single shard's real HBM. Requires ``num_kv_heads %
+    tp_shards == 0`` (a non-dividing mesh leaves the pool replicated —
+    allocate with the default 1 there).
     """
     from repro.qtensor import bytes_per_element
 
+    if tp_shards < 1:
+        raise ValueError(f"tp_shards must be >= 1 (got {tp_shards})")
+    if cfg.num_kv_heads % tp_shards:
+        raise ValueError(
+            f"tp_shards={tp_shards} does not divide num_kv_heads "
+            f"({cfg.num_kv_heads}): the pool would stay replicated — "
+            "budget per-shard accounting needs kv-head sharding")
     groups = [list(pair) for pair in kv_sites(cfg)]
     elems = 2 * tokens * cfg.num_kv_heads * cfg.head_dim
     levels = sorted({int(b) for b in policy.kv_allowed_bits})
@@ -95,7 +112,8 @@ def allocate_kv_bits(
         report, policy, budget_bits=budget_bytes * 8.0,
         site_groups=groups, group_sizes=[elems] * len(groups),
         levels=levels, exact=exact,
-        cost_bits=[8.0 * bytes_per_element(b) for b in levels])
+        cost_bits=[8.0 * bytes_per_element(b) for b in levels],
+        shard_fraction=1.0 / tp_shards)
     return {i: b for i, b in enumerate(bits)}
 
 

@@ -289,6 +289,18 @@ def pool_bytes(cfg: ModelConfig, pcfg: PagedKVConfig) -> float:
     return pcfg.num_pages * page_bytes_all_layers(cfg, pcfg)
 
 
+def per_shard_pool_bytes(cfg: ModelConfig, pcfg: PagedKVConfig,
+                         tp_shards: int = 1) -> float:
+    """HBM one device holds for the paged pools under tensor-parallel
+    serving: pools shard by kv-head when ``num_kv_heads % tp_shards ==
+    0`` (each shard stores 1/tp of every page), else they replicate and
+    every device pays the full pool."""
+    total = pool_bytes(cfg, pcfg)
+    if tp_shards > 1 and cfg.num_kv_heads % tp_shards == 0:
+        return total / tp_shards
+    return total
+
+
 def dense_kv_bytes(cfg: ModelConfig, slots: int, max_len: int,
                    bits: int = 16) -> float:
     """HBM of the dense per-slot cache this subsystem replaces."""

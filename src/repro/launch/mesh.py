@@ -41,3 +41,18 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def small_test_mesh(data: int = 2, model: int = 4) -> jax.sharding.Mesh:
     """CPU-host test mesh (requires xla_force_host_platform_device_count)."""
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_tp_mesh(tp: int) -> jax.sharding.Mesh:
+    """1-D tensor-parallel mesh for sharded serving
+    (``EngineConfig(mesh=make_tp_mesh(N))``): the first ``tp`` devices on
+    one "tp" axis. Raises with an actionable message when the process
+    does not hold enough devices (on a CPU host, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    n = jax.device_count()
+    if tp > n:
+        raise ValueError(
+            f"tp={tp} needs {tp} devices but this process has {n}; on a "
+            "CPU host set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={tp} before jax initializes")
+    return make_mesh((tp,), ("tp",))

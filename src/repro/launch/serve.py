@@ -22,11 +22,21 @@ storage (8 = int8, 4 = packed int4), an optional ``--kv-pages`` pool
 budget, and hash-based prefix sharing (``--shared-prefix N`` makes the
 generated prompts actually share one).
 
+Tensor parallelism: ``--tp N`` shards packed/int8 weight blocks
+column/row-wise and (when kv heads divide) the paged KV pools by
+kv-head across a 1-D device mesh — outputs stay bit-identical to
+``--tp 1`` (see README "Tensor-parallel serving"). Implies
+``--int8-compute`` for quantized weights.
+
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
       --smoke --batch 8 --prompt-len 64 --gen-len 32 --weight-bits 8
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
       --smoke --batch 4 --requests 8 --rate 0.05 --paged --kv-bits 8 \\
       --shared-prefix 32
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
+      --smoke --batch 2 --requests 6 --rate 0.05 --packed \\
+      --weight-bits 4 --group-size 8 --paged --kv-bits 8 --tp 2
 """
 from __future__ import annotations
 
@@ -79,7 +89,8 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
           prefill_chunk: int = 32, decode_burst: int = 16,
           clock: str = "steps", paged: bool = False, page_size: int = 16,
           kv_bits: Optional[int] = None, kv_pages: Optional[int] = None,
-          prefix_sharing: bool = True, shared_prefix: int = 0) -> Dict:
+          prefix_sharing: bool = True, shared_prefix: int = 0,
+          tp: int = 1, group_size: Optional[int] = None) -> Dict:
     """Build the model + engine, run the load, return results + metrics."""
     cfg = smoke_config(arch) if smoke else get_config(arch)
     if int8 or packed or paged:
@@ -88,13 +99,25 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
         cfg = dataclasses.replace(cfg, scan_layers=False)
     params = init_params(cfg, jax.random.key(seed))
 
+    mesh = None
+    if tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        mesh = make_tp_mesh(tp)
+        if (int8 or packed) and not int8_compute:
+            # sharded quantized matmuls only exist on the integer kernel
+            # route (the exact cross-shard reduction) — switch it on
+            log.info("--tp %d with quantized weights: enabling "
+                     "--int8-compute (required for sharded execution)", tp)
+            int8_compute = True
+
     scales = None
     policy = QuantPolicy()
     if (int8 or packed) and weight_bits is None:
         weight_bits = 8          # --int8/--packed alone means W8 storage
     if weight_bits is not None and weight_bits < 16:
         if packed:
-            params, _ = quantize_params(params, weight_bits, policy)
+            params, _ = quantize_params(params, weight_bits, policy,
+                                        group_size=group_size)
             log.info("packed QTensor weights: %.0f bytes realized",
                      weight_storage_bytes(params))
         elif int8:
@@ -122,7 +145,7 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
         prefill_chunk=min(prefill_chunk, max(prompt_len, 1)),
         decode_burst=decode_burst, clock=clock, int8_compute=int8_compute,
         kv_cache="paged" if paged else "dense", page_size=page_size,
-        kv_pages=kv_pages, prefix_sharing=prefix_sharing)
+        kv_pages=kv_pages, prefix_sharing=prefix_sharing, mesh=mesh)
     engine = Engine(params, cfg, ecfg, scales=scales, kv_bits=kv_bits)
     finished, metrics = engine.run(reqs)
     summ = metrics.summary()
@@ -179,6 +202,16 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="give all generated prompts a common prefix of "
                          "this many tokens (exercises prefix sharing)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard quantized weight "
+                         "blocks (and, when kv heads divide, the paged KV "
+                         "pools) across a 1-D device mesh; outputs stay "
+                         "bit-identical to --tp 1. On CPU hosts set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count")
+    ap.add_argument("--group-size", type=int, default=None,
+                    help="scale-group size along the reduction axis for "
+                         "--packed (row-parallel sharding needs each "
+                         "shard to own whole groups)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -198,7 +231,8 @@ def main() -> None:
                 clock=args.clock, paged=args.paged, page_size=args.page_size,
                 kv_bits=args.kv_bits, kv_pages=args.kv_pages,
                 prefix_sharing=not args.no_prefix_sharing,
-                shared_prefix=args.shared_prefix)
+                shared_prefix=args.shared_prefix, tp=args.tp,
+                group_size=args.group_size)
     print(json.dumps(out["metrics"], indent=2))
     if args.json:
         with open(args.json, "w") as f:

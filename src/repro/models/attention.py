@@ -229,17 +229,81 @@ def attention_decode_paged(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
     pid = jnp.where(pos < write_limit, table[rows, col], num_pages)
     off = pos % page
     sp = jnp.clip(pid, 0, num_pages - 1)
-    if lp.bits < 16:
-        kq = quantize_kv(knew[:, 0], lp.k_scale[sp], lp.bits)
-        vq = quantize_kv(vnew[:, 0], lp.v_scale[sp], lp.bits)
-    else:
-        kq = knew[:, 0].astype(lp.k.dtype)
-        vq = vnew[:, 0].astype(lp.v.dtype)
-    kc = lp.k.at[pid, off].set(kq, mode="drop")
-    vc = lp.v.at[pid, off].set(vq, mode="drop")
 
-    o = kops.paged_attention(q, kc, vc, table, pos, lp.k_scale, lp.v_scale,
-                             lp.bits)
+    shards = getattr(ctx, "kv_shards", 1)
+    if shards > 1 and kv % shards == 0:
+        kc, vc, o = _paged_update_attend_sharded(
+            ctx, lp, q, knew, vnew, table, pos, pid, off, sp, cfg)
+    else:
+        if lp.bits < 16:
+            kq = quantize_kv(knew[:, 0], lp.k_scale[sp], lp.bits)
+            vq = quantize_kv(vnew[:, 0], lp.v_scale[sp], lp.bits)
+        else:
+            kq = knew[:, 0].astype(lp.k.dtype)
+            vq = vnew[:, 0].astype(lp.v.dtype)
+        kc = lp.k.at[pid, off].set(kq, mode="drop")
+        vc = lp.v.at[pid, off].set(vq, mode="drop")
+        o = kops.paged_attention(q, kc, vc, table, pos, lp.k_scale,
+                                 lp.v_scale, lp.bits)
     o = o.reshape(b, 1, h * hd).astype(x.dtype)
     o = ctx.tap("attn_out", o)
     return ctx.matmul("wo", o, p["wo"]), dataclasses.replace(lp, k=kc, v=vc)
+
+
+def _paged_update_attend_sharded(ctx, lp, q, knew, vnew, table, pos, pid,
+                                 off, sp, cfg: ModelConfig):
+    """KV-head-sharded page write + paged-attention read (tensor-parallel
+    serving, ``ShardedDequantContext.kv_shards`` > 1).
+
+    The page pools live sharded along the kv-head axis; each shard
+    quantizes and scatters its own heads' K/V (per-head elementwise —
+    identical values to the replicated path), decodes paged attention
+    purely locally (every kv head is independent: scores, softmax and
+    the value contraction never mix heads), and the grouped-head outputs
+    are concatenated with an all-gather. Concatenation of per-head
+    results computed on identical data is exact, so the sharded read
+    path is BIT-IDENTICAL to the replicated ``kops.paged_attention`` —
+    the tp-vs-tp=1 engine parity contract.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.kvcache.paged import quantize_kv
+
+    b = q.shape[0]
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    g = cfg.num_heads // kv
+    ax = ctx.axis_name
+    bits = lp.bits
+
+    def body(k_pool, v_pool, ks, vs, qg, kn, vn, tbl, ps, pidb, offb, spb):
+        # local kv-head block: (P, page, KV/tp, Dh'), scales (P, KV/tp)
+        if bits < 16:
+            kq = quantize_kv(kn[:, 0], ks[spb], bits)
+            vq = quantize_kv(vn[:, 0], vs[spb], bits)
+        else:
+            kq = kn[:, 0].astype(k_pool.dtype)
+            vq = vn[:, 0].astype(v_pool.dtype)
+        kc = k_pool.at[pidb, offb].set(kq, mode="drop")
+        vc = v_pool.at[pidb, offb].set(vq, mode="drop")
+        kvl = kc.shape[2]
+        ql = qg.reshape(b, 1, kvl * g, hd)         # local grouped heads
+        ol = kops.paged_attention(ql, kc, vc, tbl, ps, ks, vs, bits)
+        o = jax.lax.all_gather(ol, ax, axis=1, tiled=True)   # (B,KV,G,Dh)
+        return kc, vc, o
+
+    from repro.kernels import ops as kops       # deferred: import cycle
+    qg = q.reshape(b, 1, kv, g * hd)
+    rep2 = P(None, None)
+    rep1 = P(None)
+    fn = shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(None, None, ax, None), P(None, None, ax, None),
+                  P(None, ax), P(None, ax),
+                  P(None, None, ax, None), P(None, None, ax, None),
+                  P(None, None, ax, None),
+                  rep2, rep1, rep1, rep1, rep1),
+        out_specs=(P(None, None, ax, None), P(None, None, ax, None),
+                   P(None, None, None, None)),
+        check_rep=False)
+    return fn(lp.k, lp.v, lp.k_scale, lp.v_scale, qg, knew, vnew,
+              table, pos, pid, off, sp)

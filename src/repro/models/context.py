@@ -29,6 +29,8 @@ from typing import Any, Dict, List, Mapping
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.qtensor import QTensor
 
@@ -211,3 +213,162 @@ class DequantContext(Context):
         y = kops.int8_matmul(xq, w, xs, s.reshape(1, -1),
                              out_dtype=jnp.float32)
         return y.astype(self.dtype).reshape(lead + (w.shape[-1],))
+
+
+class ShardedDequantContext(DequantContext):
+    """Tensor-parallel ``DequantContext``: quantized matmuls execute
+    under ``shard_map`` over a 1-D device mesh, BIT-IDENTICAL to the
+    single-device path for every tp degree.
+
+    ``shard_plan`` (from ``repro.serve.quantized.shard_params``) maps a
+    scoped block path to its layout: ``"col"`` (output dim sharded) or
+    ``"row"`` (reduction dim sharded); unplanned blocks are replicated
+    and fall through to the parent. Activations stay replicated between
+    blocks — the per-row activation quantization therefore sees the
+    identical full-row values at every tp degree.
+
+    Why this is exact (the tp-vs-tp=1 parity contract):
+
+      * column-parallel — each shard computes its output columns with
+        the FULL reduction axis local; integer dots are exact and every
+        later op is elementwise per column, so the all-gather is a pure
+        concatenation of the tp=1 values.
+      * row-parallel — each shard owns whole scale groups (enforced at
+        materialization). Its per-group terms ``f32(int32 dot) * scale``
+        are exact and shard-invariant; they are scattered into a zeroed
+        (G, M, N) buffer at the shard's group-scale offset and combined
+        with ONE psum (summing one nonzero term + zeros per element —
+        exact regardless of reduction order), after which every device
+        applies the oracle's canonical ``sum(axis=0) * x_scale``. The
+        legacy int8 path psums the raw int32 accumulator (integer adds
+        are associative) before the elementwise dequant.
+
+    The fp-dequant route cannot be sharded this way (a float psum is
+    not associative), so sharded serving requires ``int8_compute=True``
+    — enforced by the Engine.
+
+    Two scoping notes. (1) The BIT-IDENTICAL contract is stated on the
+    oracle dispatch route (``REPRO_KERNELS=ref``, where tp=1 uses
+    ``ref.qmm`` — the same canonical ``sum(axis=0)`` fold): on real TPU
+    the tp=1 ``qmm_pallas`` kernel folds groups sequentially in-VMEM
+    while the sharded path reduces the gathered stack with ``jnp.sum``,
+    so tp-vs-tp=1 there matches within kernel-vs-ref fp32 summation-
+    order noise, like every other Pallas kernel in this repo. (2) The
+    row-parallel psum moves a (G, M, N) buffer — G× the output. G is a
+    quantization-granularity knob: shard alignment needs tp | G, so
+    quantize row-parallel blocks with ``group_size = K / tp`` (G = tp,
+    the minimum) when communication matters; fine-grained groups buy
+    accuracy at proportional psum volume.
+
+    ``kv_shards`` > 1 additionally tells ``attention_decode_paged`` to
+    run its page pools kv-head-sharded (see ``repro.models.attention``).
+    """
+
+    def __init__(self, scales: Mapping[str, jnp.ndarray], dtype,
+                 mesh, shard_plan: Mapping[str, str],
+                 int8_compute: bool = True, kv_shards: int = 1,
+                 axis_name: str = "tp", scope_prefix: str = ""):
+        super().__init__(scales, dtype, int8_compute=int8_compute,
+                         scope_prefix=scope_prefix)
+        self.mesh = mesh
+        self.shard_plan = dict(shard_plan)
+        self.axis_name = axis_name
+        self.kv_shards = kv_shards
+        self.n_shards = mesh.shape[axis_name]
+
+    # -- shard-local kernels (bodies run under shard_map) ---------------
+    def _qmm_col(self, xq, wd, ws, xs, *, bits, k, n):
+        from repro.kernels import ops as kops
+        nl = n // self.n_shards
+        w_local = QTensor(wd, ws, bits, (k, nl), 0)
+        y = kops.qmm(xq, w_local, xs, out_dtype=jnp.float32)
+        return jax.lax.all_gather(y, self.axis_name, axis=1, tiled=True)
+
+    def _qmm_row(self, xq, wd, ws, xs, *, bits, k, n, groups):
+        from repro.kernels import ops as kops
+        s = self.n_shards
+        kl, gl = k // s, groups // s
+        i = jax.lax.axis_index(self.axis_name)
+        xl = jax.lax.dynamic_slice_in_dim(xq, i * kl, kl, axis=1)
+        w_local = QTensor(wd, ws, bits, (kl, n), 0)
+        terms = kops.qmm_group_products(xl, w_local)        # (gl, M, N)
+        full = jnp.zeros((groups,) + terms.shape[1:], jnp.float32)
+        full = jax.lax.dynamic_update_slice(full, terms, (i * gl, 0, 0))
+        # ONE psum per down-projection: disjoint group slots + zeros, so
+        # the float reduction is exact for any shard count
+        full = jax.lax.psum(full, self.axis_name)
+        y = jnp.sum(full, axis=0)
+        return y * jnp.asarray(xs, jnp.float32)
+
+    def _int8_col(self, xq, w, s, xs):
+        from repro.kernels import ops as kops
+        y = kops.int8_matmul(xq, w, xs, s.reshape(1, -1),
+                             out_dtype=jnp.float32)
+        return jax.lax.all_gather(y, self.axis_name, axis=1, tiled=True)
+
+    def _int8_row(self, xq, w, s, xs, *, k):
+        kl = k // self.n_shards
+        i = jax.lax.axis_index(self.axis_name)
+        xl = jax.lax.dynamic_slice_in_dim(xq, i * kl, kl, axis=1)
+        acc = jax.lax.dot_general(
+            xl, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = jax.lax.psum(acc, self.axis_name)      # int32: exact
+        # identical elementwise dequant to kernels.ref.int8_matmul
+        return (acc.astype(jnp.float32) * xs.reshape(-1, 1)
+                * s.reshape(1, -1))
+
+    # -- dispatch --------------------------------------------------------
+    def matmul(self, name: str, x: jnp.ndarray, w) -> jnp.ndarray:
+        mode = self.shard_plan.get(self.path(name))
+        if mode is None:
+            return super().matmul(name, x, w)
+        mesh, ax = self.mesh, self.axis_name
+        lead = x.shape[:-1]
+        xq, xs = self._rowquant(
+            x.reshape(-1, x.shape[-1]).astype(jnp.float32))
+        xs = jnp.asarray(xs, jnp.float32).reshape(-1, 1)
+        if isinstance(w, QTensor):
+            k, n = w.shape
+            groups = w.scale.shape[w.axis]
+            ws2 = w.scale.reshape(groups, n)
+            if mode == "col":
+                fn = shard_map(
+                    lambda a, d, sc, axs: self._qmm_col(
+                        a, d, sc, axs, bits=w.bits, k=k, n=n),
+                    mesh=mesh,
+                    in_specs=(P(None, None), P(None, ax), P(None, ax),
+                              P(None, None)),
+                    out_specs=P(None, None), check_rep=False)
+            else:
+                fn = shard_map(
+                    lambda a, d, sc, axs: self._qmm_row(
+                        a, d, sc, axs, bits=w.bits, k=k, n=n,
+                        groups=groups),
+                    mesh=mesh,
+                    in_specs=(P(None, None), P(ax, None), P(ax, None),
+                              P(None, None)),
+                    out_specs=P(None, None), check_rep=False)
+            y = fn(xq, w.data, ws2, xs)
+            return y.astype(self.dtype).reshape(lead + (n,))
+        # legacy int8 leaf + path-keyed scale
+        s = self.scales.get(self.path(name))
+        n = w.shape[-1]
+        if mode == "col":
+            fn = shard_map(
+                lambda a, wl, sl, axs: self._int8_col(a, wl, sl, axs),
+                mesh=mesh,
+                in_specs=(P(None, None), P(None, ax), P(None, ax),
+                          P(None, None)),
+                out_specs=P(None, None), check_rep=False)
+            y = fn(xq, w, s.reshape(1, -1), xs)
+        else:
+            fn = shard_map(
+                lambda a, wl, sl, axs: self._int8_row(
+                    a, wl, sl, axs, k=w.shape[0]),
+                mesh=mesh,
+                in_specs=(P(None, None), P(ax, None), P(None, None),
+                          P(None, None)),
+                out_specs=P(None, None), check_rep=False)
+            y = fn(xq, w, s.reshape(1, -1), xs)
+        return y.astype(self.dtype).reshape(lead + (n,))

@@ -10,13 +10,14 @@ See ``qtensor.py`` for the byte layouts and scale semantics, and
 """
 from repro.qtensor.qtensor import (
     PACKED_BITS, QTensor, bytes_per_element, expand_scale, is_qtensor,
-    logical_size, pack, packed_size, qmax_for_bits, quantize,
-    quantize_values, storage_summary, tree_has_qtensor,
+    logical_size, pack, pack_unit, packed_size, qmax_for_bits, quantize,
+    quantize_values, shard, shard_error, storage_summary, tree_has_qtensor,
     tree_payload_bytes, unpack, unpack_rows)
 
 __all__ = [
     "PACKED_BITS", "QTensor", "bytes_per_element", "expand_scale",
-    "is_qtensor", "logical_size", "pack", "packed_size", "qmax_for_bits",
-    "quantize", "quantize_values", "storage_summary", "tree_has_qtensor",
-    "tree_payload_bytes", "unpack", "unpack_rows",
+    "is_qtensor", "logical_size", "pack", "pack_unit", "packed_size",
+    "qmax_for_bits", "quantize", "quantize_values", "shard", "shard_error",
+    "storage_summary", "tree_has_qtensor", "tree_payload_bytes", "unpack",
+    "unpack_rows",
 ]

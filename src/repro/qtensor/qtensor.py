@@ -325,6 +325,90 @@ def quantize(x: jnp.ndarray, bits: int, group_size: Optional[int] = None,
                    tuple(x.shape), ax)
 
 
+def pack_unit(bits: int) -> int:
+    """Logical elements per indivisible pack unit (1 for unpacked widths)."""
+    return _UNITS[bits][0] if bits in _UNITS else 1
+
+
+def shard_error(qt: QTensor, n: int, axis: int) -> Optional[str]:
+    """Why ``qt`` cannot be split into ``n`` equal shards along logical
+    ``axis`` — or None if it can.
+
+    The rules the tensor-parallel serving path relies on:
+
+      * the logical dim must divide evenly into ``n`` shards;
+      * on the PACK axis a shard boundary must not split a pack unit
+        (the 6-bit 3-byte/4-value group is the sharp case) and must
+        align with scale-group boundaries — each shard owns whole
+        groups, so per-shard dequantization needs no neighbour's scale
+        (the ``qmm`` sharded path's per-shard group-scale offsets);
+      * on any other axis, a grouped scale dim must itself split evenly
+        (dims of size 1 broadcast and need no split).
+    """
+    ax = axis % qt.ndim
+    d = qt.shape[ax]
+    if n < 1:
+        return f"shard count must be >= 1 (got {n})"
+    if d % n:
+        return f"logical dim {ax} ({d}) does not divide into {n} shards"
+    span = d // n
+    if ax == qt.axis:
+        unit = pack_unit(qt.bits)
+        if span % unit:
+            return (f"shard span {span} splits a {qt.bits}-bit pack unit "
+                    f"({unit} values) on the pack axis")
+        g = qt.scale.shape[ax]
+        if g not in (1, d) and g % n:
+            return (f"{g} scale groups do not align with {n} shard "
+                    "boundaries on the pack axis")
+        if g == 1 and n > 1:
+            return ("a single scale group spans the whole pack axis and "
+                    "cannot be split — requantize with group boundaries "
+                    "aligned to shard boundaries (group_size a divisor "
+                    f"of {span})")
+    else:
+        sd = qt.scale.shape[ax]
+        if sd not in (1, d) and sd % n:
+            return (f"scale dim {ax} ({sd} groups) does not divide into "
+                    f"{n} shards")
+    return None
+
+
+def shard(qt: QTensor, n: int, axis: int) -> Tuple[QTensor, ...]:
+    """Split a QTensor into ``n`` equal shards along logical ``axis``.
+
+    Payload bytes are sliced in PACKED coordinates (whole pack units per
+    shard — validated) and the grouped scales are co-sharded along the
+    same axis, so every shard is a self-contained QTensor:
+    ``jnp.concatenate([s.dequantize() for s in shards], axis)`` is
+    bit-identical to ``qt.dequantize()``. Raises ValueError with the
+    reason from ``shard_error`` when the split is impossible.
+    """
+    err = shard_error(qt, n, axis)
+    if err:
+        raise ValueError(f"cannot shard QTensor{qt.shape} "
+                         f"{qt.bits}-bit x{n} on axis {axis}: {err}")
+    ax = axis % qt.ndim
+    span = qt.shape[ax] // n
+    dspan = qt.data.shape[ax] // n          # packed span (whole units)
+    sd = qt.scale.shape[ax]
+    sspan = sd // n if sd > 1 else 0
+
+    def slc(arr, lo, width):
+        idx = [slice(None)] * arr.ndim
+        idx[ax] = slice(lo, lo + width)
+        return arr[tuple(idx)]
+
+    out = []
+    shape = list(qt.shape)
+    shape[ax] = span
+    for i in range(n):
+        data = slc(qt.data, i * dspan, dspan)
+        scale = slc(qt.scale, i * sspan, sspan) if sspan else qt.scale
+        out.append(QTensor(data, scale, qt.bits, tuple(shape), qt.axis))
+    return tuple(out)
+
+
 def is_qtensor(x: Any) -> bool:
     return isinstance(x, QTensor)
 

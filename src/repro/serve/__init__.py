@@ -16,7 +16,8 @@ from repro.serve.loadgen import poisson_requests, synth_prompt, trace_requests
 from repro.serve.metrics import EngineMetrics
 from repro.serve.quantized import (
     bit_config_from_report, make_dequant_context, quantize_params,
-    quantize_params_int8, weight_storage_bytes)
+    quantize_params_int8, shard_params, sharded_storage_bytes,
+    weight_storage_bytes)
 from repro.serve.request import Request, RequestStatus
 from repro.serve.sampling import SamplingParams, request_keys, sample_tokens
 
@@ -25,6 +26,7 @@ __all__ = [
     "SamplingParams", "allocate_kv_bits", "bit_config_from_report",
     "kv_bit_config", "kv_report_fns", "make_dequant_context",
     "poisson_requests", "quantize_params", "quantize_params_int8",
-    "request_keys", "sample_tokens", "synth_prompt", "trace_requests",
+    "request_keys", "sample_tokens", "shard_params",
+    "sharded_storage_bytes", "synth_prompt", "trace_requests",
     "weight_storage_bytes",
 ]

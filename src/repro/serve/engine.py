@@ -35,6 +35,18 @@ through a ``DequantContext``: packed weight storage, optionally fused
 quantized MXU matmuls (``int8_compute=True``, W{8,6,4,3}A8 via
 ``kernels.qmm`` for QTensor blocks).
 
+Tensor-parallel serving (``mesh=``, see ``launch.mesh.make_tp_mesh``):
+the quantized weight blocks shard column/row-wise across a 1-D "tp"
+mesh (``serve.quantized.shard_params``) and execute under ``shard_map``
+through ``ShardedDequantContext``; paged KV pools shard by kv-head when
+the head count divides the mesh. Every cross-shard reduction is exact
+(int32 psums / zero-padded group psums / pure concatenation), so engine
+outputs are BIT-IDENTICAL across tp degrees on the oracle kernel route
+(``REPRO_KERNELS=ref``; see ``ShardedDequantContext`` for the TPU
+nuance) — the contract ``tests/test_sharded_serve.py`` fuzzes. Slot
+tables, token buffers and batch-1 prefill scratch states replicate
+across the mesh.
+
 Paged KV cache (``kv_cache="paged"``, see ``repro.kvcache``): attention
 state moves from the dense per-slot buffer into fixed-size pages with
 per-slot page tables — KV memory becomes O(actual tokens) instead of
@@ -94,6 +106,16 @@ class EngineConfig:
     page_size: int = 16           # tokens per KV page
     kv_pages: Optional[int] = None  # pool size; None = full capacity
     prefix_sharing: bool = True   # hash-share identical prompt prefixes
+    # ---- tensor-parallel serving (1-D device mesh, axis "tp") ----
+    # Shards 2-D quantized weight blocks column/row-wise and (paged mode,
+    # when kv heads divide) the KV page pools by kv-head. Outputs stay
+    # BIT-IDENTICAL to the tp=1 engine: every cross-shard reduction is
+    # integer-exact or a pure concatenation (see ShardedDequantContext).
+    # Requires int8_compute for quantized trees (the fp-dequant route
+    # has no exact cross-shard reduction). Slot tables / token buffers /
+    # dense scratch state are replicated across the mesh.
+    mesh: Optional[object] = None   # jax.sharding.Mesh, 1-D, axis "tp"
+    tp_axis: str = "tp"
 
 
 class Engine:
@@ -116,6 +138,31 @@ class Engine:
         # (repro.qtensor) — they need the DequantContext even when no
         # path-keyed scales dict is supplied
         self._qt_params = tree_has_qtensor(params)
+
+        # ---- tensor-parallel mesh mode ----
+        self._mesh = ecfg.mesh
+        self._tp_axis = ecfg.tp_axis
+        self._shard_plan: Dict[str, str] = {}
+        self._tp = 1
+        if self._mesh is not None:
+            if self._tp_axis not in self._mesh.shape:
+                raise ValueError(
+                    f"EngineConfig.mesh must carry the {self._tp_axis!r} "
+                    f"axis (got axes {tuple(self._mesh.shape)}) — build it "
+                    "with repro.launch.mesh.make_tp_mesh")
+            self._tp = int(self._mesh.shape[self._tp_axis])
+            if ((self._qt_params or self.scales)
+                    and not ecfg.int8_compute):
+                raise ValueError(
+                    "tensor-parallel serving of quantized weights needs "
+                    "int8_compute=True: only the integer kernel route has "
+                    "an exact (bit-identical) cross-shard reduction — the "
+                    "fp-dequant path would psum floats")
+            from repro.serve.quantized import shard_params
+            self.params, self.scales, self._shard_plan = shard_params(
+                params, self._mesh, self.scales, axis_name=self._tp_axis)
+            self._repl = jax.sharding.NamedSharding(
+                self._mesh, jax.sharding.PartitionSpec())
 
         self._paged = ecfg.kv_cache == "paged"
         self._pcfg: Optional[PagedKVConfig] = None
@@ -145,7 +192,24 @@ class Engine:
         self._tok_shape = (S, 1) + cb
         self._out_shape = (S, G) + cb
 
+        # KV page pools shard by kv-head when the head count divides the
+        # mesh; otherwise they stay replicated (still bit-identical)
+        self._kv_shards = 1
+        if (self._mesh is not None and self._paged
+                and self._tp > 1 and cfg.num_kv_heads % self._tp == 0):
+            self._kv_shards = self._tp
+        if self._mesh is not None and self._paged:
+            log.info("paged KV pools: %s across tp=%d",
+                     f"sharded /{self._kv_shards} by kv-head"
+                     if self._kv_shards > 1 else "replicated", self._tp)
+
         def make_ctx(scales):
+            if self._mesh is not None:
+                from repro.models.context import ShardedDequantContext
+                return ShardedDequantContext(
+                    scales, cfg.param_dtype, self._mesh, self._shard_plan,
+                    int8_compute=ecfg.int8_compute,
+                    kv_shards=self._kv_shards, axis_name=self._tp_axis)
             if not scales and not self._qt_params:
                 return Context()
             return DequantContext(scales, cfg.param_dtype,
@@ -295,7 +359,13 @@ class Engine:
                                           shared_len, cfg.param_dtype)
                     ks.append(kg)
                     vs.append(vg)
-                return KVCache(jnp.stack(ks)[:, None], jnp.stack(vs)[:, None])
+                kvd = KVCache(jnp.stack(ks)[:, None], jnp.stack(vs)[:, None])
+                if self._mesh is not None:
+                    # the batch-1 scratch state is replicated: without the
+                    # constraint the pool's kv-head sharding would leak
+                    # into the prefill graph's fp attention
+                    kvd = jax.lax.with_sharding_constraint(kvd, self._repl)
+                return kvd
 
             def copy_page_fn(state, src, dst):
                 ps = state.paged
@@ -320,9 +390,44 @@ class Engine:
             self._set_table = jax.jit(set_table_fn, donate_argnums=(0,))
             self._clear_slot = jax.jit(clear_slot_fn, donate_argnums=(0,))
 
+    def _put_repl(self, tree):
+        """Mesh mode: commit a fresh host-built tree replicated across the
+        tp mesh (slot tables, token/output buffers, batch-1 scratch
+        states) so jit never has to guess a placement."""
+        if self._mesh is None:
+            return tree
+        return jax.device_put(tree, self._repl)
+
+    def _place_state(self, state: DecodeState) -> DecodeState:
+        """Mesh mode: paged pools shard by kv-head (payload axis 2, scale
+        axis 1), everything else replicates."""
+        if self._mesh is None:
+            return state
+        if state.paged is None or self._kv_shards == 1:
+            return self._put_repl(state)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.kvcache.paged import LayerPages
+        ax = self._tp_axis
+        ns_pool = NamedSharding(self._mesh, P(None, None, ax, None))
+        ns_scale = NamedSharding(self._mesh, P(None, ax))
+        layers = {
+            k: LayerPages(jax.device_put(lp.k, ns_pool),
+                          jax.device_put(lp.v, ns_pool),
+                          jax.device_put(lp.k_scale, ns_scale),
+                          jax.device_put(lp.v_scale, ns_scale),
+                          bits=lp.bits)
+            for k, lp in state.paged.layers.items()}
+        paged = state.paged._replace(
+            layers=layers,
+            table=jax.device_put(state.paged.table, self._repl),
+            write_limit=jax.device_put(state.paged.write_limit, self._repl))
+        rest = self._put_repl(DecodeState(state.pos, state.kv, state.ssm,
+                                          state.rest, None))
+        return rest._replace(paged=paged)
+
     def _fresh_slot_table(self) -> Dict[str, jnp.ndarray]:
         S = self.ecfg.max_slots
-        return {
+        return self._put_repl({
             "active": jnp.zeros(S, bool),
             "nwritten": jnp.zeros(S, jnp.int32),
             "seeds": jnp.zeros(S, jnp.int32),
@@ -330,7 +435,7 @@ class Engine:
             "top_ks": jnp.zeros(S, jnp.int32),
             "top_ps": jnp.ones(S, jnp.float32),
             "budget": jnp.zeros(S, jnp.int32),
-        }
+        })
 
     @staticmethod
     def _mode_for(sampling_params) -> str:
@@ -344,11 +449,12 @@ class Engine:
 
     def _fresh_state(self) -> DecodeState:
         if self._paged:
-            return init_paged_decode_state(self.cfg, self._pcfg,
-                                           self.ecfg.max_slots,
-                                           self._kv_ranges)
-        return init_decode_state(self.cfg, self.ecfg.max_slots,
-                                 self.ecfg.max_len, per_slot_pos=True)
+            return self._place_state(init_paged_decode_state(
+                self.cfg, self._pcfg, self.ecfg.max_slots,
+                self._kv_ranges))
+        return self._place_state(init_decode_state(
+            self.cfg, self.ecfg.max_slots, self.ecfg.max_len,
+            per_slot_pos=True))
 
     def warmup(self, modes: Sequence[str] = ("greedy",)) -> None:
         """Compile every shape the serving loop dispatches: all power-of-
@@ -361,8 +467,8 @@ class Engine:
             return
         cfg, ecfg = self.cfg, self.ecfg
         state = self._fresh_state()
-        tok = jnp.zeros(self._tok_shape, jnp.int32)
-        out = jnp.zeros(self._out_shape, jnp.int32)
+        tok = self._put_repl(jnp.zeros(self._tok_shape, jnp.int32))
+        out = self._put_repl(jnp.zeros(self._out_shape, jnp.int32))
         slots = self._fresh_slot_table()
         for mode in modes:
             k = 1
@@ -373,7 +479,7 @@ class Engine:
                 k *= 2
             self._warmed_modes.add(mode)
         cb = self._tok_shape[2:]
-        ps = init_decode_state(cfg, 1, ecfg.max_len)
+        ps = self._put_repl(init_decode_state(cfg, 1, ecfg.max_len))
         logits, ps = self._prefill(
             self.params, self.scales, ps,
             jnp.zeros((1, ecfg.prefill_chunk) + cb, jnp.int32))
@@ -433,8 +539,8 @@ class Engine:
         cfg, ecfg = self.cfg, self.ecfg
         S = ecfg.max_slots
         self._state = self._fresh_state()
-        self._tok = jnp.zeros(self._tok_shape, jnp.int32)
-        self._out = jnp.zeros(self._out_shape, jnp.int32)
+        self._tok = self._put_repl(jnp.zeros(self._tok_shape, jnp.int32))
+        self._out = self._put_repl(jnp.zeros(self._out_shape, jnp.int32))
         # device-resident slot table (bursts take zero host->device
         # transfers) + host mirrors for scheduling decisions
         self._dslots = self._fresh_slot_table()
@@ -570,7 +676,7 @@ class Engine:
         req.slot, req.status = slot, RequestStatus.PREFILLING
         req.t_admitted = self._now()
 
-        pstate = init_decode_state(self.cfg, 1, ecfg.max_len)
+        pstate = self._put_repl(init_decode_state(self.cfg, 1, ecfg.max_len))
         if shared_len > 0:
             # prefix reuse: seed the scratch cache from the shared pages
             # and prefill only the suffix (the engine's prefill saving)

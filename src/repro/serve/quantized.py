@@ -24,15 +24,19 @@ provide.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, Mapping, Optional, Tuple, Union
 
+import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ModelConfig
 from repro.core.fit import SensitivityReport
 from repro.core.mpq import greedy_allocate
 from repro.models.context import DequantContext
-from repro.qtensor import quantize as qt_quantize, tree_payload_bytes
+from repro.qtensor import (
+    QTensor, is_qtensor, quantize as qt_quantize, shard_error,
+    tree_payload_bytes)
 from repro.quant.policy import BitConfig, QuantPolicy
 from repro.utils.logging import get_logger
 from repro.utils.pytree import map_with_names, named_leaves
@@ -169,6 +173,122 @@ def quantize_params_int8(
 def weight_storage_bytes(params) -> float:
     """Realized weight-storage bytes of a (possibly QTensor) tree."""
     return float(tree_payload_bytes(params))
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel sharded materialization (EngineConfig(mesh=...))
+# ---------------------------------------------------------------------------
+
+# Megatron-style layout per block tail: column-parallel blocks shard the
+# output dim (no reduction crosses shards), row-parallel blocks shard the
+# reduction dim (one exact psum inside the quantized kernel). The same
+# split launch/sharding.py uses for training.
+COL_PARALLEL = frozenset({"wq", "wk", "wv", "w_up", "w_gate",
+                          "wz", "wx", "wB", "wC", "wdt", "head"})
+ROW_PARALLEL = frozenset({"wo", "w_down", "out_proj"})
+
+
+def _plan_leaf(name: str, leaf, n_shards: int) -> Tuple[Optional[str],
+                                                        Optional[str]]:
+    """(layout, reason-not-sharded) for one parameter leaf.
+
+    Only 2-D quantized storage shards (QTensor or legacy int8): the
+    sharded execution path is the integer-exact kernel route, and 3-D
+    expert stacks take the fp-dequant einsum which cannot psum exactly.
+    Divisibility/alignment failures degrade to replicated (the
+    launch/sharding.py convention), with the reason logged.
+    """
+    tail = name.split("/")[-1]
+    if tail in COL_PARALLEL:
+        mode, axis = "col", -1
+    elif tail in ROW_PARALLEL:
+        mode, axis = "row", 0
+    else:
+        return None, None
+    if is_qtensor(leaf):
+        if len(leaf.shape) != 2:
+            return None, "non-matrix QTensor (fp-dequant einsum path)"
+        err = shard_error(leaf, n_shards, axis % 2)
+        return (mode, None) if err is None else (None, err)
+    if getattr(leaf, "dtype", None) == jnp.int8 and leaf.ndim == 2:
+        dim = leaf.shape[axis]
+        if dim % n_shards:
+            return None, (f"dim {axis} ({dim}) not divisible by "
+                          f"{n_shards} shards")
+        return mode, None
+    return None, None
+
+
+def shard_params(params, mesh, scales: Optional[Mapping] = None,
+                 axis_name: str = "tp"
+                 ) -> Tuple[Dict, Dict[str, jnp.ndarray], Dict[str, str]]:
+    """Place a quantized parameter tree on a 1-D tp mesh.
+
+    Column-parallel blocks co-shard payload and scales along the output
+    dim; row-parallel blocks along the reduction (pack) dim, where
+    ``qtensor.shard_error`` enforces that shard boundaries land on whole
+    pack units AND whole scale groups (each shard dequantizes with its
+    own group-scale rows). Everything else — fp leaves, 3-D expert
+    stacks, blocks that fail alignment — is replicated, so the sharded
+    engine stays bit-identical to tp=1 no matter how much of the tree
+    actually sharded.
+
+    Returns ``(placed_params, placed_scales, plan)`` with ``plan``
+    mapping scoped qw paths to "col"/"row" — the routing table
+    ``ShardedDequantContext`` dispatches on.
+    """
+    n = mesh.shape[axis_name]
+    repl = NamedSharding(mesh, P())
+    plan: Dict[str, str] = {}
+    scales = dict(scales) if scales else {}
+
+    def place(name, leaf):
+        mode, why = _plan_leaf(name, leaf, n)
+        if mode is None:
+            if why is not None:
+                log.info("replicating %s: %s", name, why)
+            if is_qtensor(leaf):
+                return QTensor(jax.device_put(leaf.data, repl),
+                               jax.device_put(leaf.scale, repl),
+                               leaf.bits, leaf.shape, leaf.axis)
+            return jax.device_put(leaf, repl)
+        plan[qw_path(name)] = mode
+        spec = (P(None, axis_name) if mode == "col"
+                else P(axis_name, None))
+        ns = NamedSharding(mesh, spec)
+        if is_qtensor(leaf):
+            return QTensor(jax.device_put(leaf.data, ns),
+                           jax.device_put(leaf.scale, ns),
+                           leaf.bits, leaf.shape, leaf.axis)
+        return jax.device_put(leaf, ns)
+
+    placed = map_with_names(place, params,
+                            is_leaf=lambda l: is_qtensor(l))
+    placed_scales: Dict[str, jnp.ndarray] = {}
+    for key, s in scales.items():
+        # legacy int8 scales are (1, .., 1, N): shard the channel dim for
+        # column-parallel blocks, replicate for row (N stays whole there)
+        if plan.get(key) == "col" and s.shape[-1] % n == 0:
+            spec = P(*([None] * (s.ndim - 1) + [axis_name]))
+            placed_scales[key] = jax.device_put(s, NamedSharding(mesh, spec))
+        else:
+            placed_scales[key] = jax.device_put(s, repl)
+    log.info("tp=%d sharded materialization: %d col, %d row blocks",
+             n, sum(1 for v in plan.values() if v == "col"),
+             sum(1 for v in plan.values() if v == "row"))
+    return placed, placed_scales, plan
+
+
+def sharded_storage_bytes(params, plan: Mapping[str, str],
+                          n_shards: int) -> float:
+    """PER-SHARD weight-storage bytes of a planned tree: sharded blocks
+    cost 1/n of their payload+scales on each shard, replicated leaves
+    cost full — the number a single device's HBM actually holds."""
+    total = 0.0
+    for name, leaf in named_leaves(params, is_leaf=lambda l: is_qtensor(l)):
+        frac = 1.0 / n_shards if qw_path(name) in plan else 1.0
+        total += frac * float(tree_payload_bytes(leaf))
+    return total
 
 
 def make_dequant_context(cfg: ModelConfig, scales=None,

@@ -26,16 +26,22 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def named_leaves(tree: Any) -> List[Tuple[str, Any]]:
-    """Flatten a pytree into (path-string, leaf) pairs, deterministic order."""
-    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+def named_leaves(tree: Any, is_leaf: Callable[[Any], bool] = None
+                 ) -> List[Tuple[str, Any]]:
+    """Flatten a pytree into (path-string, leaf) pairs, deterministic order.
+
+    ``is_leaf`` stops descent early — e.g. ``qtensor.is_qtensor`` keeps a
+    packed QTensor block as ONE named leaf instead of data/scale children.
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
     return [(_path_str(path), leaf) for path, leaf in leaves]
 
 
-def map_with_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+def map_with_names(fn: Callable[[str, Any], Any], tree: Any,
+                   is_leaf: Callable[[Any], bool] = None) -> Any:
     """tree_map where fn also receives the '/'-joined path of the leaf."""
     return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: fn(_path_str(path), leaf), tree
+        lambda path, leaf: fn(_path_str(path), leaf), tree, is_leaf=is_leaf
     )
 
 

@@ -334,3 +334,40 @@ def test_fit_allocated_kv_beats_uniform_and_reverse(kv_report):
     assert kls[0] <= kls[2] + 1e-9, (fits, kls)        # fit <= uniform-4
     assert fits[0] <= fits[1] and fits[0] <= fits[2]
     assert spearman(fits, kls) > 0.7, (fits, kls)
+
+
+def test_allocate_kv_bits_per_shard_budget(kv_report):
+    """Tensor-parallel pools: ``budget_bytes`` means ONE shard's HBM.
+
+    With kv-head-sharded pools each device stores 1/tp of every page, so
+    a tp=4 allocation must (a) never overrun a single shard's real HBM
+    and (b) afford at-least-as-rich widths as the replicated allocation
+    at the same per-device budget (4x the aggregate HBM)."""
+    from repro.qtensor import bytes_per_element
+    cfg, _, _, report = kv_report
+    cfg4 = dataclasses.replace(cfg, num_kv_heads=4)   # tp=4 must divide
+    policy = QuantPolicy()
+    tokens = 2 * 64
+    elems = 2 * tokens * cfg4.num_kv_heads * cfg4.head_dim
+    # per-DEVICE budget that fits every layer at 4 bits replicated
+    budget = cfg4.num_layers * elems * bytes_per_element(4)
+    bits1 = allocate_kv_bits(report, cfg4, policy, budget, tokens)
+    bits4 = allocate_kv_bits(report, cfg4, policy, budget, tokens,
+                             tp_shards=4)
+    # (a) the tp=4 spend, charged at per-shard element counts, fits
+    per_shard = sum((elems / 4) * bytes_per_element(b)
+                    for b in bits4.values())
+    assert per_shard <= budget + 1e-6, (bits4, per_shard, budget)
+    # (b) 4x aggregate HBM at the same per-device budget: richer widths
+    assert all(bits4[i] >= bits1[i] for i in bits1), (bits1, bits4)
+    assert sum(bits4.values()) > sum(bits1.values()), (bits1, bits4)
+    # a replicated-budget read of the tp=4 allocation WOULD overrun —
+    # the regression this test pins: pre-shard-aware accounting handed
+    # tp meshes an allocation no single device could hold
+    replicated_cost = sum(elems * bytes_per_element(b)
+                          for b in bits4.values())
+    assert replicated_cost > budget
+    # a mesh that does not divide the kv heads leaves pools replicated:
+    # per-shard accounting must refuse rather than under-charge
+    with pytest.raises(ValueError, match="num_kv_heads"):
+        allocate_kv_bits(report, cfg4, policy, budget, tokens, tp_shards=3)

@@ -153,6 +153,27 @@ def test_qmm_pallas_matches_ref(rng, bits, m, k, n, gs):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("bits", ALL_BITS)
+@pytest.mark.parametrize("m,k,n,gs", [(8, 32, 16, 8), (5, 48, 33, 12)])
+def test_qmm_groups_pallas_matches_group_products(rng, bits, m, k, n, gs):
+    """The tensor-parallel shard-local kernel: per-group scaled partial
+    products must match the jnp oracle BIT-exactly (each (G, M, N) slice
+    is one exact int32 dot cast once and scaled elementwise — the
+    invariant the row-parallel psum combine builds on)."""
+    from repro.kernels.qmm import qmm_groups_pallas
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    xq, _ = _rowquant(x)
+    wq = qt.quantize(jnp.asarray(w), bits, group_size=gs)
+    want = ref.qmm_group_products(jnp.asarray(xq), wq)
+    g = wq.scale.shape[0]
+    got = qmm_groups_pallas(jnp.asarray(xq), wq.data,
+                            wq.scale.reshape(g, n), bits=bits, k=k,
+                            bm=16, bn=32, interpret=True)
+    assert got.shape == (g, m, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_qmm_w8_single_group_matches_int8_matmul(rng):
     """At W8 with one scale group, qmm degenerates to the int8 kernel's
     contract (per-row x per-channel dequant)."""
@@ -274,3 +295,88 @@ def test_checkpoint_roundtrip_qtensor(tmp_path, smoke_model):
                                   np.asarray(wq_b.data))
     np.testing.assert_array_equal(np.asarray(wq_a.dequantize()),
                                   np.asarray(wq_b.dequantize()))
+
+
+# ---------------------------------------------------------------------------
+# shard() — the tensor-parallel split (serve.quantized.shard_params rests
+# on these invariants; see tests/test_sharded_serve.py for the engine)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(bits=st.sampled_from(ALL_BITS), seed=st.integers(0, 999),
+       axis=st.sampled_from([0, 1]),
+       n_shards=st.sampled_from([1, 2, 4, 8]),
+       group_size=st.sampled_from([8, 16, 32, None]))
+def test_shard_roundtrip_and_bytes_property(bits, seed, axis, n_shards,
+                                            group_size):
+    """Every (bits, axis, group_size, shard count) combo: either
+    ``shard_error`` names the violated alignment rule and ``shard``
+    raises it, or the shards reassemble bit-identically (pack/unpack AND
+    dequantize) and ``storage_summary`` byte accounting is additive."""
+    rng = np.random.default_rng(seed)
+    k, n = 32, 16
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    full = qt.quantize(jnp.asarray(w), bits, group_size=group_size)
+    err = qt.shard_error(full, n_shards, axis)
+    if err is not None:
+        with pytest.raises(ValueError, match="cannot shard"):
+            qt.shard(full, n_shards, axis)
+        # the only legal failure modes on these shapes: a pack-axis span
+        # that splits a scale group / pack unit (dims always divide)
+        assert axis == full.axis and n_shards > 1
+        return
+    shards = qt.shard(full, n_shards, axis)
+    assert len(shards) == n_shards
+    # payload + scale reassembly is exact in PACKED coordinates
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(s.data) for s in shards], axis),
+        np.asarray(full.data))
+    # unpack/dequantize of each self-contained shard concatenates to the
+    # whole — bit-identical, the property sharded serving relies on
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(s.unpack()) for s in shards], axis),
+        np.asarray(full.unpack()))
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(s.dequantize()) for s in shards], axis),
+        np.asarray(full.dequantize()))
+    # storage_summary additivity: sharding never changes total bytes
+    whole = qt.storage_summary([full])
+    parts = [qt.storage_summary([s]) for s in shards]
+    for key in ("packed_bytes", "int8_backed_bytes", "fp16_bytes",
+                "predicted_bytes"):
+        assert sum(p[key] for p in parts) == pytest.approx(whole[key])
+    assert sum(s.nbytes for s in shards) == full.nbytes
+    assert sum(s.scale_bytes for s in shards) == full.scale_bytes
+
+
+def test_shard_six_bit_pack_unit_boundary(rng):
+    """The sharp 6-bit case: 4 values share 3 bytes, so a pack-axis
+    shard span that is not a multiple of 4 would split a byte group."""
+    w = rng.normal(size=(8, 16)).astype(np.float32)
+    full = qt.quantize(jnp.asarray(w), 6, group_size=4)
+    # span 4 = one pack unit per shard: fine
+    a, b = qt.shard(full, 2, 0)
+    assert a.data.shape == (3, 16) and a.shape == (4, 16)
+    # span 2 < pack unit: must refuse, naming the pack unit
+    assert "pack unit" in qt.shard_error(full, 4, 0)
+    with pytest.raises(ValueError, match="pack unit"):
+        qt.shard(full, 4, 0)
+
+
+def test_shard_error_paths(rng):
+    w = rng.normal(size=(32, 12)).astype(np.float32)
+    # one scale group spanning the whole pack axis cannot be split
+    whole_group = qt.quantize(jnp.asarray(w), 4)          # group_size=None
+    assert "single scale group" in qt.shard_error(whole_group, 2, 0)
+    with pytest.raises(ValueError, match="group"):
+        qt.shard(whole_group, 2, 0)
+    # group boundaries must align with shard boundaries (G=2, shards=4)
+    grouped = qt.quantize(jnp.asarray(w), 4, group_size=16)
+    assert "scale groups" in qt.shard_error(grouped, 4, 0)
+    # a non-dividing logical dim refuses on any axis
+    assert "does not divide" in qt.shard_error(grouped, 5, 1)
+    # out-channel (non-pack) axis has no pack/group constraint: N=12 into
+    # 4 shards slices payload bytes and per-channel scales together
+    shards = qt.shard(grouped, 4, 1)
+    assert all(s.data.shape == (16, 3) for s in shards)
+    assert all(s.scale.shape == (2, 3) for s in shards)
