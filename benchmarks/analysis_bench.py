@@ -1,0 +1,79 @@
+"""Static-analysis gate cost: wall time of each repro.analysis pass.
+
+The analysis CI job blocks merges, so its cost is a serving-repo metric
+like TTFT: this bench times the three passes (lint AST walk, bounds
+interval proof over every arch x policy width, jaxpr tracing of the
+engine/kernel graphs) in-process and records the wall times under the
+``analysis`` key of ``serve_bench.json`` — merging into the payload the
+serving benchmark wrote earlier in the same run, so one artifact carries
+both serving throughput and the gate's latency budget.
+
+    PYTHONPATH=src python benchmarks/run.py          # REPRO_BENCH=analysis
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+try:
+    from benchmarks.common import emit, emit_json   # via benchmarks/run.py
+except ImportError:                                 # direct execution
+    from common import emit, emit_json
+
+
+def _timed(label: str, fn):
+    t0 = time.perf_counter()
+    findings = fn()
+    dt = time.perf_counter() - t0
+    errors = sum(f.severity == "error" for f in findings)
+    emit(f"analysis_{label}", dt * 1e6,
+         f"{len(findings)} finding(s), {errors} error(s)")
+    return dt, findings
+
+
+def run() -> None:
+    from repro.analysis import bounds, jaxpr_check, lint
+
+    lint_s, lint_f = _timed("lint", lint.run)
+    bounds_s, bounds_f = _timed("bounds", bounds.run)
+    # jaxpr pass: in-process device count decides whether the sharded
+    # targets trace (the CLI/CI job forces 8 host devices; under the
+    # default bench env this times the single-device target set and the
+    # RPR100 note records the skip)
+    jaxpr_s, jaxpr_f = _timed("jaxpr", jaxpr_check.run)
+
+    every = lint_f + bounds_f + jaxpr_f
+    payload = {
+        "lint_s": round(lint_s, 3),
+        "bounds_s": round(bounds_s, 3),
+        "jaxpr_s": round(jaxpr_s, 3),
+        "total_s": round(lint_s + bounds_s + jaxpr_s, 3),
+        "findings": len(every),
+        "errors": sum(f.severity == "error" for f in every),
+        "warnings": sum(f.severity == "warning" for f in every),
+    }
+    emit_json("analysis_bench", payload)
+
+    # merge into the serving artifact (serve_bench.py writes it earlier
+    # in the same benchmarks/run.py sweep; standalone runs create it)
+    out_path = os.environ.get("SERVE_BENCH_JSON", "serve_bench.json")
+    merged = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged["analysis"] = payload
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+
+    # the gate must be clean on the shipped tree — fail the bench loudly
+    # if it ever is not, exactly like the CI analysis job would
+    assert payload["errors"] == 0, \
+        "\n".join(f.render() for f in every if f.severity == "error")
+
+
+if __name__ == "__main__":
+    run()

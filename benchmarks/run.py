@@ -20,6 +20,9 @@ MODULES = [
     ("kernels", "benchmarks.kernels_bench"),
     ("serve", "benchmarks.serve_bench"),
     ("roofline", "benchmarks.roofline_report"),
+    # after serve: merges the static-analysis gate wall time into the
+    # serve_bench.json artifact that serve_bench wrote
+    ("analysis", "benchmarks.analysis_bench"),
 ]
 
 

@@ -1,0 +1,40 @@
+"""Static verification for the quantized serving stack.
+
+Three passes, one CLI (``python -m repro.analysis``), one CI gate:
+
+  * ``jaxpr_check`` — trace the engine/kernel graphs and verify the
+    numerics/sharding invariants at the jaxpr level (RPR1xx).
+  * ``bounds``      — symbolic worst-case interval analysis of the
+    int8/qmm accumulators for every config x policy bit level (RPR2xx).
+  * ``lint``        — repo-specific AST rules over ``src/repro``
+    (RPR0xx).
+
+Findings carry stable rule codes; see ``findings.RULES`` and the README
+"Static analysis" section.  ``run_all`` is what CI and the tests call.
+
+This module stays import-light (no jax at import time) so the CLI can
+set ``XLA_FLAGS`` / ``REPRO_KERNELS`` before jax initializes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.analysis.findings import RULES, Finding, Report  # noqa: F401
+
+
+def run_all(jaxpr: bool = True, bounds: bool = True, lint: bool = True,
+            sharded: Optional[bool] = None,
+            dump_dir: Optional[str] = None) -> Report:
+    """Run the selected passes and return the combined report."""
+    report = Report()
+    if bounds:
+        from repro.analysis import bounds as _bounds
+        report.extend(_bounds.run())
+    if lint:
+        from repro.analysis import lint as _lint
+        report.extend(_lint.run())
+    if jaxpr:
+        from repro.analysis import jaxpr_check as _jaxpr
+        report.extend(_jaxpr.run(sharded=sharded, dump_dir=dump_dir))
+    return report

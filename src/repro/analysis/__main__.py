@@ -1,0 +1,69 @@
+"""CLI for the static verification passes.
+
+    PYTHONPATH=src python -m repro.analysis --all
+
+Environment is pinned BEFORE jax loads: an 8-virtual-device host
+platform (so the tensor-parallel shard_map paths trace even on a
+single-CPU box) and the reference kernel route (the jaxpr contracts are
+stated on the oracle graphs).  Exit code 1 iff any error-severity
+finding; warnings and info notes print but do not gate.
+"""
+
+from __future__ import annotations
+
+import os
+
+# must happen before any jax import (transitively via the passes)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("REPRO_KERNELS", "ref")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static numerics/sharding verification (RPR rules)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when none selected)")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="jaxpr numerics checker (RPR1xx)")
+    ap.add_argument("--bounds", action="store_true",
+                    help="accumulator bound analyzer (RPR2xx)")
+    ap.add_argument("--lint", action="store_true",
+                    help="repo AST lint (RPR0xx)")
+    ap.add_argument("--github", action="store_true",
+                    help="emit GitHub Actions annotations")
+    ap.add_argument("--dump-dir", default=None,
+                    help="write traced jaxprs here (CI artifact cache)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress warning/info findings")
+    args = ap.parse_args(argv)
+
+    selected = args.jaxpr or args.bounds or args.lint
+    want = (lambda x: x) if selected else (lambda x: True)
+
+    from repro.analysis import run_all
+    t0 = time.perf_counter()
+    report = run_all(jaxpr=want(args.jaxpr), bounds=want(args.bounds),
+                     lint=want(args.lint), dump_dir=args.dump_dir)
+    dt = time.perf_counter() - t0
+
+    shown = report.findings if not args.quiet else report.errors
+    for f in sorted(shown, key=lambda f: (f.severity != "error", f.code,
+                                          f.where, f.line or 0)):
+        print(f.render())
+        if args.github:
+            print(f.render_github())
+    n_err, n_warn = len(report.errors), len(report.warnings)
+    n_info = len(report.findings) - n_err - n_warn
+    print(f"repro.analysis: {n_err} error(s), {n_warn} warning(s), "
+          f"{n_info} note(s) in {dt:.1f}s")
+    return report.exit_code()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

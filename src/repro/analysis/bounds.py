@@ -1,0 +1,215 @@
+"""Symbolic worst-case interval analysis for the integer matmul cores.
+
+The exactness story of the quantized serving stack rests on two integer
+facts about the MXU accumulators:
+
+* ``int32 never wraps`` — a group's dot product accumulates
+  ``group_size`` products of grid values whose magnitudes are at most
+  ``qmax_w * qmax_a``, so the worst case is
+
+      peak(bits_w, bits_a, g) = g * qmax(bits_w) * qmax(bits_a)
+
+  and the kernel is safe iff ``peak < 2**31``.  The legacy
+  ``int8_matmul`` accumulates the FULL reduction dim in one int32
+  scratch, so there ``g = K``.
+
+* ``the fp32 group fold is exact`` — ``qmm`` folds each group's int32
+  dot into an fp32 accumulator (``prod.astype(f32) * ws``).  The cast
+  int32 -> fp32 is exact only while ``|dot| <= 2**24`` (fp32 has 24
+  significand bits).  Above that the fold may round — not an overflow,
+  but it voids "the group dot is exact" as a bit-level statement.  The
+  per-group *scaled* sums were never claimed exact across groups (fp
+  adds), so this tier is a WARNING, not an error: W8 per-channel
+  quantization (one group spanning K = d_model) crosses it for every
+  real config, and hard-failing would break the documented W8
+  bit-identity contract between the QTensor and legacy int8 paths.
+
+This module is dependency-light (stdlib + ``repro.qtensor`` for the grid
+math) so the kernels can import its validators without cycling through
+the jaxpr checker: ``kernels/qmm.py``, ``kernels/int8_matmul.py`` and
+``core.mpq.allocate_act_sites`` call :func:`require_group_dot_safe` /
+:func:`require_full_k_safe` / :func:`require_act_alloc_sane` to refuse
+statically-unsafe shapes with a diagnostic instead of wrapping silently.
+
+``verify_configs`` is the CLI pass: for every registered architecture it
+enumerates the matmul reduction dims of the *abstract* parameter tree
+(``jax.eval_shape`` — no weights materialized) and proves the bound for
+every bit width a :class:`~repro.quant.policy.QuantPolicy` can emit.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+from repro.qtensor import qmax_for_bits
+
+INT32_LIMIT = 2**31          # int32 accumulator wraps at +/- 2^31
+FP32_EXACT_LIMIT = 2**24     # largest contiguous exact integer range in fp32
+
+
+def qmax(bits: int) -> int:
+    """Integer grid max of the symmetric ``bits``-wide quantizer."""
+    return int(qmax_for_bits(bits))
+
+
+def group_dot_peak(bits_w: int, bits_a: int, group_size: int) -> int:
+    """Worst-case |int32 partial dot| over one scale group."""
+    return group_size * qmax(bits_w) * qmax(bits_a)
+
+
+def max_safe_group(bits_w: int, bits_a: int) -> int:
+    """Largest group size whose worst-case dot stays below 2^31."""
+    per_term = qmax(bits_w) * qmax(bits_a)
+    return (INT32_LIMIT - 1) // per_term
+
+
+def fp32_exact_group(bits_w: int, bits_a: int) -> int:
+    """Largest group size whose worst-case dot casts to fp32 exactly."""
+    per_term = qmax(bits_w) * qmax(bits_a)
+    return FP32_EXACT_LIMIT // per_term
+
+
+def check_group_dot(bits_w: int, bits_a: int, group_size: int,
+                    where: str) -> List[Finding]:
+    """Findings for one (bits_w, bits_a, group_size) grouped-dot shape."""
+    peak = group_dot_peak(bits_w, bits_a, group_size)
+    out: List[Finding] = []
+    if peak >= INT32_LIMIT:
+        out.append(Finding(
+            "RPR201", "error", where,
+            f"W{bits_w}A{bits_a} group_size={group_size}: worst-case group "
+            f"dot {peak} >= 2^31 wraps int32; requantize with group_size "
+            f"<= {max_safe_group(bits_w, bits_a)}"))
+    elif peak > FP32_EXACT_LIMIT:
+        out.append(Finding(
+            "RPR203", "warning", where,
+            f"W{bits_w}A{bits_a} group_size={group_size}: worst-case group "
+            f"dot {peak} > 2^24, so the fp32 scale fold may round "
+            f"(exact-fold tier needs group_size <= "
+            f"{fp32_exact_group(bits_w, bits_a)}); tolerated — the "
+            "cross-group sum is fp anyway and the W8 per-channel contract "
+            "relies on this granularity"))
+    return out
+
+
+def check_full_k(bits_w: int, bits_a: int, k: int, where: str) -> List[Finding]:
+    """Findings for a full-K int32 accumulation (legacy ``int8_matmul``)."""
+    peak = group_dot_peak(bits_w, bits_a, k)
+    if peak >= INT32_LIMIT:
+        return [Finding(
+            "RPR202", "error", where,
+            f"W{bits_w}A{bits_a} K={k}: worst-case full-K accumulator "
+            f"{peak} >= 2^31 wraps int32 (safe K < "
+            f"{max_safe_group(bits_w, bits_a) + 1})")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# kernel-facing validators (raise instead of returning findings)
+# ---------------------------------------------------------------------------
+
+def require_group_dot_safe(bits_w: int, bits_a: int, group_size: int,
+                           where: str) -> None:
+    """Refuse a grouped quantized matmul whose int32 accumulator can wrap."""
+    peak = group_dot_peak(bits_w, bits_a, group_size)
+    if peak >= INT32_LIMIT:
+        raise ValueError(
+            f"{where}: W{bits_w}A{bits_a} group_size={group_size} can "
+            f"overflow int32 (worst-case group dot {peak} >= 2^31, RPR201); "
+            f"requantize with group_size <= {max_safe_group(bits_w, bits_a)}")
+
+
+def require_full_k_safe(bits_w: int, bits_a: int, k: int, where: str) -> None:
+    """Refuse a full-K int32 accumulation that can wrap."""
+    peak = group_dot_peak(bits_w, bits_a, k)
+    if peak >= INT32_LIMIT:
+        raise ValueError(
+            f"{where}: W{bits_w}A{bits_a} K={k} can overflow the int32 "
+            f"accumulator (worst case {peak} >= 2^31, RPR202); safe only "
+            f"for K <= {max_safe_group(bits_w, bits_a)}")
+
+
+def require_act_alloc_sane(budget_bits: float, group_sizes: Sequence[float],
+                           levels: Sequence[int], container_bits: int = 16,
+                           where: str = "allocate_act_sites") -> None:
+    """Static sanity for an activation-bit allocation problem.
+
+    Rejects non-finite / non-positive site sizes and budgets and levels
+    outside the storable container range — the failure modes that
+    previously surfaced as silent NaN spend or nonsense allocations deep
+    inside the greedy/DP cores.
+    """
+    if not (math.isfinite(budget_bits) and budget_bits > 0):
+        raise ValueError(
+            f"{where}: budget_bits must be finite and positive "
+            f"(got {budget_bits!r})")
+    for i, s in enumerate(group_sizes):
+        if not (math.isfinite(float(s)) and float(s) > 0):
+            raise ValueError(
+                f"{where}: site group {i} has non-finite or non-positive "
+                f"stored-element count {s!r}")
+    for b in levels:
+        if not (1 <= int(b) <= container_bits):
+            raise ValueError(
+                f"{where}: level {b} outside the storable container range "
+                f"[1, {container_bits}]")
+
+
+# ---------------------------------------------------------------------------
+# whole-repo pass: prove the bounds for every config x policy bit level
+# ---------------------------------------------------------------------------
+
+def _matmul_k_dims(arch: str) -> List[Tuple[str, int]]:
+    """(leaf path, reduction dim K) of every quantizable matmul block of
+    ``arch``'s FULL config, from the abstract parameter tree."""
+    from repro.configs import get_config
+    from repro.models.transformer import init_params
+    from repro.serve.quantized import MATMUL_LEAVES
+    from repro.utils.pytree import named_leaves
+
+    shapes = init_params(get_config(arch), abstract=True)
+    out: List[Tuple[str, int]] = []
+    for name, leaf in named_leaves(shapes):
+        if name.split("/")[-1] in MATMUL_LEAVES and leaf.ndim >= 2:
+            # reduction axis is the second-to-last (qtensor pack default)
+            out.append((name, int(leaf.shape[-2])))
+    return out
+
+
+def verify_configs(archs: Optional[Iterable[str]] = None,
+                   policy=None) -> List[Finding]:
+    """Prove the accumulator bounds for every registered architecture.
+
+    For each arch: every (weight bits emittable by ``policy``, A8)
+    pair is checked at the coarsest granularity ``quantize_params`` can
+    produce — ``group_size=None``, one group spanning the full reduction
+    dim K — which dominates every finer grouping.  The legacy int8 path
+    (full-K int32 scratch) is checked at the same K.  8 activation bits
+    is the engine's only dynamic activation grid.
+    """
+    from repro.configs import ARCH_IDS
+    from repro.quant.policy import QuantPolicy
+
+    policy = policy or QuantPolicy()
+    w_levels = sorted({int(b) for b in policy.allowed_bits}
+                      | {int(policy.pinned_bits)})
+    findings: List[Finding] = []
+    for arch in (archs or ARCH_IDS):
+        seen_k: dict[int, str] = {}
+        for name, k in _matmul_k_dims(arch):
+            seen_k.setdefault(k, name)
+        for k, example in sorted(seen_k.items()):
+            for bw in w_levels:
+                if bw >= 16:
+                    continue
+                where = f"{arch}:{example} (K={k})"
+                findings.extend(check_group_dot(bw, 8, k, where))
+                findings.extend(check_full_k(bw, 8, k, where))
+    return findings
+
+
+def run(github: bool = False) -> List[Finding]:
+    """CLI entry for the bounds pass (all archs, default policy)."""
+    return verify_configs()

@@ -1,0 +1,359 @@
+"""Jaxpr-level numerics/sharding checker (the RPR1xx rules).
+
+Traces the real serving graphs — engine decode/prefill step functions
+over smoke configs in every storage mode (dense fp, packed QTensor with
+int8 compute, legacy int8, paged KV, tensor-parallel sharded when the
+host exposes enough devices) plus the standalone kernel wrappers — and
+walks the jaxprs, recursing into every sub-jaxpr (pjit, scan, cond,
+shard_map, custom_vjp), to verify:
+
+  RPR101  no float64 aval anywhere (doubles are outside every contract)
+  RPR102  no lossy convert_element_type on an accumulation path: an
+          int32 accumulator may only widen to fp32 (exactness of THAT
+          cast is the bounds pass's 2^24 tier); int32 -> fp16/bf16
+          silently truncates group dots
+  RPR103  no host callbacks / device->host transfers in the decode hot
+          path (a callback inside the per-step scan serializes the burst)
+  RPR104  every psum/all_reduce operand is exactness-safe: an integer
+          dtype, or an fp32 value provably built as zeros +
+          dynamic_update_slice of disjoint per-shard slots (the PR 5
+          row-parallel contract) — anything else reintroduces
+          order-dependent float summation across shards
+
+Tracing is abstract (``jax.make_jaxpr``): no kernels execute, so the
+pass costs seconds even where the engine itself would need a TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+
+# primitives that move control or data to the host mid-graph
+_CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback",
+                   "callback", "infeed", "outfeed"}
+# cross-device reductions whose operand must be exactness-safe
+# (psum2 is the name the shard_map check_rep rewrite gives psum)
+_REDUCE_PRIMS = {"psum", "psum2", "psum_scatter", "all_reduce"}
+# structural ops a zeros-rooted buffer may pass through untouched
+# (pbroadcast is the value-preserving replication marker the shard_map
+# check_rep rewrite inserts)
+_TRANSPARENT_PRIMS = {"reshape", "squeeze", "transpose", "broadcast_in_dim",
+                      "convert_element_type", "copy", "sharding_constraint",
+                      "pbroadcast"}
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+def _sub_jaxprs(value) -> Iterator:
+    """Yield every (open) jaxpr buried in an eqn-param value."""
+    if hasattr(value, "jaxpr") and hasattr(value, "consts"):
+        yield value.jaxpr                       # ClosedJaxpr
+    elif hasattr(value, "eqns") and hasattr(value, "invars"):
+        yield value                             # Jaxpr
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+    elif isinstance(value, dict):
+        for v in value.values():
+            yield from _sub_jaxprs(v)
+
+
+def iter_eqns(jaxpr) -> Iterator[Tuple[object, object]]:
+    """(enclosing jaxpr, eqn) pairs, depth-first through all sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield jaxpr, eqn
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from iter_eqns(sub)
+
+
+def _producers(jaxpr) -> Dict[object, object]:
+    """var -> producing eqn, within one (non-nested) jaxpr scope."""
+    out: Dict[object, object] = {}
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            out[v] = eqn
+    return out
+
+
+def _is_literal_zero(var) -> bool:
+    val = getattr(var, "val", None)
+    if val is None:
+        return False
+    try:
+        return float(val) == 0.0
+    except (TypeError, ValueError):
+        return False
+
+
+def _zero_rooted(var, producers: Dict, depth: int = 0) -> bool:
+    """True if ``var`` is provably a zeros buffer updated only through
+    ``dynamic_update_slice`` — the disjoint-slot construction whose psum
+    is exact by the row-parallel contract."""
+    if depth > 64:
+        return False
+    if _is_literal_zero(var):
+        return True
+    eqn = producers.get(var)
+    if eqn is None:
+        return False                      # crosses a scope boundary: fail
+    name = eqn.primitive.name
+    if name == "dynamic_update_slice":
+        # updates land in disjoint slots per the contract; the BASE must
+        # trace back to literal zeros
+        return _zero_rooted(eqn.invars[0], producers, depth + 1)
+    if name in ("broadcast_in_dim", "fill"):
+        return _is_literal_zero(eqn.invars[0]) or \
+            _zero_rooted(eqn.invars[0], producers, depth + 1)
+    if name in _TRANSPARENT_PRIMS:
+        return _zero_rooted(eqn.invars[0], producers, depth + 1)
+    if name in ("mul",):                  # 0 * x == 0 (finite int grids)
+        return any(_zero_rooted(v, producers, depth + 1)
+                   for v in eqn.invars)
+    return False
+
+
+def _dtype_of(var):
+    aval = getattr(var, "aval", None)
+    return getattr(aval, "dtype", None)
+
+
+# ---------------------------------------------------------------------------
+# per-trace checks
+# ---------------------------------------------------------------------------
+
+def check_closed_jaxpr(closed, target: str, hot: bool = False
+                       ) -> List[Finding]:
+    """Walk one traced computation and emit RPR1xx findings."""
+    import numpy as np
+
+    findings: List[Finding] = []
+    prod_cache: Dict[int, Dict] = {}
+    seen_f64 = False
+
+    def is_f64(var) -> bool:
+        dt = _dtype_of(var)
+        return dt is not None and dt == np.dtype("float64")
+
+    top = closed.jaxpr
+    for var in top.invars:
+        if is_f64(var) and not seen_f64:
+            seen_f64 = True
+            findings.append(Finding(
+                "RPR101", "error", target,
+                "float64 input to the traced computation"))
+
+    for jx, eqn in iter_eqns(top):
+        name = eqn.primitive.name
+        if not seen_f64:
+            for v in eqn.outvars:
+                if is_f64(v):
+                    seen_f64 = True
+                    findings.append(Finding(
+                        "RPR101", "error", target,
+                        f"float64 aval produced by `{name}` — doubles are "
+                        "outside every exactness contract (and TPUs "
+                        "emulate them at ~100x cost)"))
+                    break
+        if name == "convert_element_type":
+            src = _dtype_of(eqn.invars[0])
+            dst = eqn.params.get("new_dtype")
+            if src is not None and dst is not None:
+                src, dst = np.dtype(src), np.dtype(dst)
+                if src == np.dtype("int32") and \
+                        dst in (np.dtype("float16"), np.dtype("bfloat16")):
+                    findings.append(Finding(
+                        "RPR102", "error", target,
+                        f"lossy cast int32 -> {dst.name}: a group/K "
+                        "accumulator truncated before the scale fold "
+                        "(int32 must widen to fp32; fold first, downcast "
+                        "after)"))
+        if hot and (name in _CALLBACK_PRIMS or "callback" in name):
+            findings.append(Finding(
+                "RPR103", "error", target,
+                f"host callback `{name}` in the decode hot path — every "
+                "burst step would synchronize device -> host"))
+        if name in _REDUCE_PRIMS:
+            for v in eqn.invars:
+                dt = _dtype_of(v)
+                if dt is None:
+                    continue
+                if np.issubdtype(dt, np.integer) or dt == np.dtype("bool"):
+                    continue              # integer adds are exact
+                if dt == np.dtype("float32"):
+                    prods = prod_cache.setdefault(id(jx), _producers(jx))
+                    if _zero_rooted(v, prods):
+                        continue          # zeros + disjoint DUS slots
+                findings.append(Finding(
+                    "RPR104", "error", target,
+                    f"`{name}` over a {np.dtype(dt).name} operand that is "
+                    "not provably exact: reduce int32, or build the "
+                    "operand as zeros + disjoint dynamic_update_slice "
+                    "slots (row-parallel contract) so the float adds are "
+                    "zero-padded"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# trace targets
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TraceTarget:
+    name: str
+    thunk: Callable[[], object]     # () -> ClosedJaxpr
+    hot: bool = False               # held to the decode hot-path rules
+
+
+def _kernel_targets() -> List[TraceTarget]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.qtensor import quantize
+
+    def qmm_jaxpr():
+        x_q = jnp.zeros((8, 32), jnp.int8)
+        w = quantize(jnp.ones((32, 16)), 4, group_size=8)
+        xs = jnp.ones((8, 1), jnp.float32)
+        return jax.make_jaxpr(lambda a, qt, s: ops.qmm(a, qt, s))(x_q, w, xs)
+
+    def int8_jaxpr():
+        x_q = jnp.zeros((8, 32), jnp.int8)
+        w_q = jnp.zeros((32, 16), jnp.int8)
+        xs = jnp.ones((8, 1), jnp.float32)
+        ws = jnp.ones((16,), jnp.float32)
+        return jax.make_jaxpr(ops.int8_matmul)(x_q, w_q, xs, ws)
+
+    def paged_jaxpr():
+        q = jnp.zeros((2, 1, 4, 16), jnp.float32)
+        kp = jnp.zeros((6, 4, 2, 16), jnp.float32)    # (P, page, KV, Dh)
+        table = jnp.zeros((2, 3), jnp.int32)
+        pos = jnp.zeros((2,), jnp.int32)
+        return jax.make_jaxpr(
+            lambda *a: ops.paged_attention(*a))(q, kp, kp, table, pos)
+
+    return [
+        TraceTarget("kernels.ops.qmm[W4A8,g=8]", qmm_jaxpr, hot=True),
+        TraceTarget("kernels.ops.int8_matmul[W8A8]", int8_jaxpr, hot=True),
+        TraceTarget("kernels.ops.paged_attention[fp]", paged_jaxpr, hot=True),
+    ]
+
+
+def _smoke_engine(variant: str, mesh=None):
+    """Build a smoke-scale Engine in one of the serving storage modes."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import init_params
+    from repro.serve import (
+        Engine, EngineConfig, quantize_params, quantize_params_int8)
+
+    cfg = smoke_config("internlm2_1_8b")
+    ecfg = dict(max_slots=2, max_len=32, max_new_tokens=8,
+                prefill_chunk=8, decode_burst=4)
+    scales = None
+    if variant == "dense":
+        params = init_params(cfg, jax.random.key(0))
+    else:
+        cfg = dc.replace(cfg, scan_layers=False)
+        params = init_params(cfg, jax.random.key(0))
+        if variant in ("qtensor", "paged", "sharded"):
+            params, scales = quantize_params(params, 4, group_size=8)
+            ecfg["int8_compute"] = True
+        elif variant == "int8":
+            params, scales = quantize_params_int8(params, 8)
+            ecfg["int8_compute"] = True
+        if variant in ("paged", "sharded"):
+            ecfg.update(kv_cache="paged", page_size=8)
+        if variant == "sharded":
+            ecfg["mesh"] = mesh
+    return Engine(params, cfg, EngineConfig(**ecfg), scales=scales)
+
+
+def _engine_target_pair(variant: str, mesh=None) -> List[TraceTarget]:
+    import functools as ft
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.decode import init_decode_state
+
+    def decode_jaxpr(variant=variant, mesh=mesh):
+        eng = _smoke_engine(variant, mesh)
+        state = eng._fresh_state()
+        tok = eng._put_repl(jnp.zeros(eng._tok_shape, jnp.int32))
+        out = eng._put_repl(jnp.zeros(eng._out_shape, jnp.int32))
+        slots = eng._fresh_slot_table()
+        step = ft.partial(eng._engine_step, steps=2, mode="greedy")
+        return jax.make_jaxpr(
+            lambda *a: step(*a))(eng.params, eng.scales, state, tok, out,
+                                 slots)
+
+    def prefill_jaxpr(variant=variant, mesh=mesh):
+        eng = _smoke_engine(variant, mesh)
+        ps = eng._put_repl(
+            init_decode_state(eng.cfg, 1, eng.ecfg.max_len))
+        chunk = jnp.zeros((1, eng.ecfg.prefill_chunk), jnp.int32)
+        return jax.make_jaxpr(
+            lambda *a: eng._prefill(*a))(eng.params, eng.scales, ps, chunk)
+
+    return [
+        TraceTarget(f"engine[{variant}].decode_step", decode_jaxpr, hot=True),
+        TraceTarget(f"engine[{variant}].prefill", prefill_jaxpr, hot=False),
+    ]
+
+
+def collect_targets(sharded: Optional[bool] = None) -> Tuple[
+        List[TraceTarget], List[Finding]]:
+    """All trace targets + environment notes (skipped sharded paths)."""
+    import jax
+
+    notes: List[Finding] = []
+    targets = _kernel_targets()
+    for variant in ("dense", "qtensor", "int8", "paged"):
+        targets.extend(_engine_target_pair(variant))
+    want_sharded = (len(jax.devices()) >= 2) if sharded is None else sharded
+    if want_sharded:
+        from repro.launch.mesh import make_tp_mesh
+        targets.extend(_engine_target_pair("sharded", mesh=make_tp_mesh(2)))
+    else:
+        notes.append(Finding(
+            "RPR100", "info", "engine[sharded]",
+            f"sharded trace skipped: host exposes {len(jax.devices())} "
+            "device(s); run `python -m repro.analysis` (the CLI forces an "
+            "8-device host platform) to cover the shard_map paths"))
+    return targets, notes
+
+
+def run(sharded: Optional[bool] = None,
+        dump_dir: Optional[str] = None) -> List[Finding]:
+    """Trace every target and check it; optionally dump jaxprs for CI
+    artifact caching/inspection."""
+    from pathlib import Path
+
+    targets, findings = collect_targets(sharded)
+    for t in targets:
+        try:
+            closed = t.thunk()
+        except Exception as e:  # noqa: BLE001 - surface as a finding
+            findings.append(Finding(
+                "RPR100", "error", t.name,
+                f"trace failed: {type(e).__name__}: {e}"))
+            continue
+        if dump_dir:
+            p = Path(dump_dir)
+            p.mkdir(parents=True, exist_ok=True)
+            safe = t.name.replace("/", "_").replace("[", ".").replace(
+                "]", "")
+            (p / f"{safe}.jaxpr.txt").write_text(str(closed))
+        findings.extend(check_closed_jaxpr(closed, t.name, hot=t.hot))
+    return findings

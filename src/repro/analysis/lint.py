@@ -1,0 +1,223 @@
+"""Repo-specific AST lint: the RPR0xx rules.
+
+Rules the generic linters cannot know — they encode this repo's
+quantization contracts (pack units, exact psums, int-only kernel
+numerics).  Pure-AST over ``src/repro`` (plus one semantic table check,
+RPR005), runnable standalone::
+
+    PYTHONPATH=src python -m repro.analysis --lint
+
+Suppress a rule at one site with ``# rpr-ok: CODE reason`` on the
+flagged line or the line directly above.  The reason is mandatory: the
+marker is an audit record, not an off-switch.
+
+Rule summary (rationales live in ``findings.RULES``):
+
+  RPR001  literal quantize() call whose group_size splits a pack unit
+  RPR002  psum / psum_scatter / all_reduce without an exactness marker
+  RPR003  float64 dtype in src (jnp.float64, astype/dtype "float64")
+  RPR004  float() on a non-constant value in kernel code
+  RPR005  qtensor pack tables out of sync (PACKED_BITS vs _UNITS)
+  RPR006  iteration over a set while building ordered pytree structure
+  RPR007  bare assert for validation in kernel code
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.findings import Finding, suppressed_codes
+
+# psum-family collectives: every call site must carry an audit marker
+# saying WHY its operand is exact (int32, or zero-padded disjoint slots).
+_COLLECTIVES = {"psum", "psum_scatter", "all_reduce", "all_gather_invariant"}
+
+# directories (relative to the scan root) held to the kernel-grade rules
+_KERNEL_DIRS = ("kernels",)
+
+
+def _is_float64_dtype(node: ast.AST) -> bool:
+    # jnp.float64 or the "float64" string — host-side np.float64 is fine
+    # (numpy arrays never enter a trace through astype)
+    if isinstance(node, ast.Attribute) and node.attr == "float64" \
+            and isinstance(node.value, ast.Name) and node.value.id == "jnp":
+        return True
+    if isinstance(node, ast.Constant) and node.value == "float64":
+        return True
+    return False
+
+
+def _int_literal(node: Optional[ast.AST]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+def _call_name(func: ast.AST) -> str:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return ""
+
+
+def _pack_unit(bits: int) -> int:
+    from repro.qtensor import pack_unit
+    return pack_unit(bits)
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.lines = source.splitlines()
+        self.findings: List[Finding] = []
+        self.in_kernel_dir = any(
+            part in _KERNEL_DIRS for part in Path(rel).parts[:-1])
+
+    def _add(self, code: str, severity: str, node: ast.AST, msg: str) -> None:
+        lineno = getattr(node, "lineno", 1)
+        if code in suppressed_codes(self.lines, lineno):
+            return
+        self.findings.append(Finding(code, severity, self.rel, msg,
+                                     line=lineno, path=self.rel))
+
+    # --- RPR002 / RPR003 / RPR004 / RPR001 --------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node.func)
+        if name in _COLLECTIVES:
+            self._add(
+                "RPR002", "error", node,
+                f"{name} without an exactness audit marker; add "
+                "'# rpr-ok: RPR002 <why the operand is exact>' (int32, or "
+                "zero-padded disjoint-slot fp32 per the row-parallel "
+                "contract)")
+        if name == "astype" and node.args and _is_float64_dtype(node.args[0]):
+            self._add("RPR003", "error", node,
+                      "astype(float64) on a (possibly traced) array — "
+                      "doubles are outside every exactness contract here")
+        if name == "float" and self.in_kernel_dir and node.args and \
+                not isinstance(node.args[0], ast.Constant):
+            self._add("RPR004", "warning", node,
+                      "float() on a non-constant value in kernel code — "
+                      "hides a trace-time concretization; keep kernel "
+                      "values as arrays or static python ints")
+        if name in ("quantize", "qt_quantize"):
+            self._check_quantize_literals(node)
+        self.generic_visit(node)
+
+    def _check_quantize_literals(self, node: ast.Call) -> None:
+        bits = _int_literal(node.args[1]) if len(node.args) > 1 else None
+        gs = _int_literal(node.args[2]) if len(node.args) > 2 else None
+        for kw in node.keywords:
+            if kw.arg == "bits":
+                bits = _int_literal(kw.value)
+            elif kw.arg == "group_size":
+                gs = _int_literal(kw.value)
+        if bits is None or gs is None:
+            return
+        unit = _pack_unit(bits)
+        if gs % unit:
+            self._add(
+                "RPR001", "error", node,
+                f"quantize(bits={bits}, group_size={gs}): group_size must "
+                f"be a multiple of the {bits}-bit pack unit ({unit}) or the "
+                "packed payload tiles split a byte/3-byte unit")
+
+    # --- RPR003 (attribute / dtype kwarg forms) ---------------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if node.attr == "float64" and isinstance(node.value, ast.Name) \
+                and node.value.id in ("jnp", "lax"):
+            self._add("RPR003", "error", node,
+                      "jnp.float64 in src — doubles are outside every "
+                      "exactness contract of the quantized stack")
+        self.generic_visit(node)
+
+    # --- RPR006: set iteration while building ordered structure -----------
+    def _check_iter(self, it: ast.AST, node: ast.AST) -> None:
+        is_set = isinstance(it, (ast.Set, ast.SetComp)) or (
+            isinstance(it, ast.Call) and _call_name(it.func) == "set")
+        if is_set:
+            self._add(
+                "RPR006", "warning", node,
+                "iterating a set while building a list/dict — set order is "
+                "hash-dependent; wrap in sorted() so flatten/unflatten "
+                "orders are deterministic across processes")
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_iter(node.iter, node)
+        self.generic_visit(node)
+
+    def visit_comprehension_like(self, node) -> None:
+        for gen in node.generators:
+            self._check_iter(gen.iter, node)
+        self.generic_visit(node)
+
+    visit_ListComp = visit_comprehension_like
+    visit_DictComp = visit_comprehension_like
+    visit_GeneratorExp = visit_comprehension_like
+
+    # --- RPR007: bare assert in kernel code -------------------------------
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if self.in_kernel_dir:
+            self._add(
+                "RPR007", "error", node,
+                "bare assert for validation in kernel code — stripped "
+                "under 'python -O'; raise ValueError with a diagnostic "
+                "instead")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, rel: str, path: str = "") -> List[Finding]:
+    """Lint one file's source text (``rel`` is the repo-relative path)."""
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as e:
+        return [Finding("RPR003", "error", rel,
+                        f"file does not parse: {e}", line=e.lineno, path=rel)]
+    linter = _Linter(path or rel, rel, source)
+    linter.visit(tree)
+    return linter.findings
+
+
+def _check_pack_tables() -> List[Finding]:
+    """RPR005: the qtensor pack tables must agree with each other."""
+    from repro import qtensor
+    units = getattr(qtensor.qtensor, "_UNITS", {})
+    packed = set(qtensor.PACKED_BITS)
+    out: List[Finding] = []
+    if packed != set(units):
+        out.append(Finding(
+            "RPR005", "error", "repro.qtensor",
+            f"PACKED_BITS {sorted(packed)} and _UNITS keys "
+            f"{sorted(units)} disagree — every packed width needs a "
+            "(values, bytes) unit and vice versa"))
+    for bits, (vals, nbytes) in units.items():
+        if vals <= 0 or nbytes <= 0 or (bits * vals) > (8 * nbytes):
+            out.append(Finding(
+                "RPR005", "error", "repro.qtensor",
+                f"_UNITS[{bits}] = ({vals}, {nbytes}) cannot hold {vals} "
+                f"{bits}-bit values in {nbytes} bytes"))
+    return out
+
+
+def run(root: Optional[str] = None,
+        paths: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint ``src/repro`` (or explicit ``paths``) and the pack tables."""
+    findings = list(_check_pack_tables())
+    if paths:
+        files = [Path(p) for p in paths]
+        base = Path(root) if root else Path.cwd()
+    else:
+        base = Path(root) if root else Path(__file__).resolve().parents[2]
+        files = sorted((base / "repro").rglob("*.py"))
+    for f in files:
+        try:
+            rel = str(f.relative_to(base))
+        except ValueError:
+            rel = str(f)
+        findings.extend(lint_source(f.read_text(), rel, str(f)))
+    return findings

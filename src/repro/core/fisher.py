@@ -136,6 +136,7 @@ def _ef_trace_weights_sharded(
                 lambda a: a.reshape(local // mb, mb, *a.shape[1:]), z)
             per = jax.lax.map(lambda c: chunk_sums(p, c), chunks)
             sums = {k: jnp.sum(v) for k, v in per.items()}
+        # rpr-ok: RPR002 fp32 Fisher-trace statistics — an estimator (Prop. 5 Monte-Carlo), not a bit-exactness surface; summation order is part of its noise floor
         return jax.lax.psum(sums, mesh_axis)
 
     # check_rep=False: pallas_call (the ef_sqnorm kernel in interpret

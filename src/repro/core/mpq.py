@@ -252,6 +252,11 @@ def allocate_act_sites(
             f"shard_fraction must be in (0, 1] (got {shard_fraction}); "
             "pass 1/tp for a pool sharded across tp devices")
     levels = sorted({int(b) for b in (levels or policy.kv_allowed_bits)})
+    # static sanity before the greedy/DP cores: non-finite sizes/budgets
+    # used to surface as silent NaN spend, and a level outside the
+    # storage container would allocate an unstorable width (RPR2xx)
+    from repro.analysis.bounds import require_act_alloc_sane
+    require_act_alloc_sane(budget_bits, group_sizes, levels)
     if cost_bits is not None and len(cost_bits) != len(levels):
         raise ValueError(f"cost_bits {cost_bits} must map 1:1 onto the "
                          f"sorted level set {levels}")

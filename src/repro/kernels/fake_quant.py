@@ -53,6 +53,7 @@ def fake_quant_pallas(x: jnp.ndarray, scale: jnp.ndarray, zero_point: jnp.ndarra
     out = pl.pallas_call(
         functools.partial(
             _fq_kernel,
+            # rpr-ok: RPR004 `levels` is a static python argument (jit static_argnames), never a tracer
             levels=float(levels) if levels is not None else 2.0 ** bits - 1.0),
         grid=grid,
         in_specs=[
@@ -95,6 +96,7 @@ def fake_quant_per_channel_pallas(x: jnp.ndarray, scale: jnp.ndarray,
     out = pl.pallas_call(
         functools.partial(
             _fq_pc_kernel,
+            # rpr-ok: RPR004 `levels` is a static python argument (jit static_argnames), never a tracer
             levels=float(levels) if levels is not None else 2.0 ** bits - 1.0),
         grid=grid,
         in_specs=[

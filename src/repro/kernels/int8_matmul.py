@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.bounds import require_full_k_safe
+
 DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 256, 256, 512
 
 
@@ -56,7 +58,11 @@ def int8_matmul_pallas(x_q: jnp.ndarray, w_q: jnp.ndarray, x_scale: jnp.ndarray,
     x_scale: scalar (per-tensor) or (M,)/(M,1) (per-row) fp32."""
     m, k = x_q.shape
     k2, n = w_q.shape
-    assert k == k2, (x_q.shape, w_q.shape)
+    if k != k2:
+        raise ValueError(f"int8_matmul_pallas: reduction dims disagree "
+                         f"(x_q {x_q.shape}, w_q {w_q.shape})")
+    # the int32 scratch accumulates the FULL K axis: prove it cannot wrap
+    require_full_k_safe(8, 8, k, where="int8_matmul_pallas")
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     # pad every dim to a block multiple: zero int8 padding is exact for
     # the int32 accumulation, and the output is sliced back afterwards.

@@ -13,6 +13,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.bounds import require_full_k_safe, require_group_dot_safe
 from repro.kernels import ref as _ref
 from repro.kernels.fake_quant import fake_quant_pallas, fake_quant_per_channel_pallas
 from repro.kernels.ef_sqnorm import ef_sqnorm_pallas
@@ -59,6 +60,8 @@ def int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype=jnp.float32):
     keep each batch row's dequantization independent of its batch-mates
     (continuous-batching parity)."""
     mode = _mode()
+    # static overflow proof on EVERY route (the pallas wrapper re-checks)
+    require_full_k_safe(8, 8, x_q.shape[-1], where="ops.int8_matmul")
     x_scale = jnp.asarray(x_scale, jnp.float32)
     if x_scale.size > 1:
         x_scale = x_scale.reshape(-1, 1)          # (M, 1) for row broadcast
@@ -77,6 +80,8 @@ def qmm(x_q, w, x_scale, out_dtype=jnp.float32):
     VMEM both see only the packed bytes.
     """
     mode = _mode()
+    # static overflow proof on EVERY route (the pallas wrapper re-checks)
+    require_group_dot_safe(w.bits, 8, w.group_size, where="ops.qmm")
     x_scale = jnp.asarray(x_scale, jnp.float32)
     if x_scale.size > 1:
         x_scale = x_scale.reshape(-1, 1)          # (M, 1) for row broadcast
@@ -102,6 +107,8 @@ def qmm_group_products(x_q, w):
     which calls ``qmm_groups_pallas`` directly (bit-exact vs the oracle).
     """
     mode = _mode()
+    require_group_dot_safe(w.bits, 8, w.group_size,
+                           where="ops.qmm_group_products")
     if mode != "tpu":
         return _ref.qmm_group_products(x_q, w)
     k, n = w.shape

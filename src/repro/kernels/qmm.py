@@ -32,10 +32,44 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.bounds import require_group_dot_safe
 from repro.qtensor import PACKED_BITS, logical_size, packed_size, unpack_rows
 
 DEFAULT_BM, DEFAULT_BN = 256, 256
 MAX_GROUP = 4096          # VMEM guard: one group's int8 tile must fit
+
+
+def _validate(name: str, x_q, w_data, w_scale, bits: int, k: int) -> int:
+    """Shared trace-time shape/numerics validation; returns the group
+    size. Raises ValueError (NOT assert — asserts vanish under
+    ``python -O`` and these guard exactness, RPR007/RPR201)."""
+    m, k_in = x_q.shape
+    if k_in != k:
+        raise ValueError(f"{name}: x_q {x_q.shape} does not match k={k}")
+    kp, n = w_data.shape
+    if kp != packed_size(k, bits):
+        raise ValueError(
+            f"{name}: packed payload {w_data.shape} inconsistent with "
+            f"logical K={k} at {bits} bits "
+            f"(expected {packed_size(k, bits)} rows)")
+    n_groups = w_scale.shape[0]
+    if k % n_groups:
+        raise ValueError(
+            f"{name}: {n_groups} scale groups do not divide K={k}")
+    bk = k // n_groups
+    if bk > MAX_GROUP:
+        raise ValueError(
+            f"{name}: group_size {bk} too large for one VMEM tile; "
+            f"requantize with group_size <= {MAX_GROUP}")
+    if logical_size(packed_size(bk, bits), bits) != bk:
+        raise ValueError(
+            f"{name}: group_size {bk} splits a {bits}-bit pack unit — "
+            "quantize with a group size that is a multiple of the pack "
+            "unit")
+    # int32 overflow proof: worst-case group dot must stay below 2^31
+    # (A8 activations — the engine's only dynamic activation grid)
+    require_group_dot_safe(bits, 8, bk, where=name)
+    return n_groups
 
 
 def _qmm_kernel(x_ref, w_ref, ws_ref, xs_ref, o_ref, acc_ref,
@@ -85,19 +119,9 @@ def qmm_groups_pallas(x_q: jnp.ndarray, w_data: jnp.ndarray,
     where each shard runs over ITS group-scale rows and the engine
     combines shards with an exact zero-padded psum + canonical sum).
     """
-    m, k_in = x_q.shape
-    assert k_in == k, (x_q.shape, k)
-    kp, n = w_data.shape
-    assert kp == packed_size(k, bits), (w_data.shape, k, bits)
-    n_groups = w_scale.shape[0]
-    assert k % n_groups == 0, (k, n_groups)
+    n_groups = _validate("qmm_groups_pallas", x_q, w_data, w_scale, bits, k)
+    m, n = x_q.shape[0], w_data.shape[1]
     bk = k // n_groups
-    assert bk <= MAX_GROUP, (
-        f"group_size {bk} too large for one VMEM tile; requantize with "
-        f"group_size <= {MAX_GROUP}")
-    assert logical_size(packed_size(bk, bits), bits) == bk, (
-        f"group_size {bk} splits a {bits}-bit pack unit — quantize with a "
-        "group size that is a multiple of the pack unit")
     bkp = packed_size(k, bits) // n_groups
     bm, bn = min(bm, m), min(bn, n)
     pm, pn = (-m) % bm, (-n) % bn
@@ -135,19 +159,9 @@ def qmm_pallas(x_q: jnp.ndarray, w_data: jnp.ndarray, x_scale: jnp.ndarray,
     fp32 with G | K; x_scale: scalar or (M,)/(M, 1) per-row fp32.
     Returns (M, N) ``out_dtype``.
     """
-    m, k_in = x_q.shape
-    assert k_in == k, (x_q.shape, k)
-    kp, n = w_data.shape
-    assert kp == packed_size(k, bits), (w_data.shape, k, bits)
-    n_groups = w_scale.shape[0]
-    assert k % n_groups == 0, (k, n_groups)
+    n_groups = _validate("qmm_pallas", x_q, w_data, w_scale, bits, k)
+    m, n = x_q.shape[0], w_data.shape[1]
     bk = k // n_groups                          # one group per K step
-    assert bk <= MAX_GROUP, (
-        f"group_size {bk} too large for one VMEM tile; requantize with "
-        f"group_size <= {MAX_GROUP}")
-    assert logical_size(packed_size(bk, bits), bits) == bk, (
-        f"group_size {bk} splits a {bits}-bit pack unit — quantize with a "
-        "group size that is a multiple of the pack unit")
     bkp = packed_size(k, bits) // n_groups      # packed rows per step
     bm, bn = min(bm, m), min(bn, n)
     # pad M and N to block multiples (K is never padded: groups are exact)

@@ -32,9 +32,15 @@ hashing, not the O(P²·page) that per-key full-prefix digests would.
 from __future__ import annotations
 
 import hashlib
+import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+# REPRO_DEBUG_ALLOCATOR=1 turns on the O(pages) invariant self-check
+# after every release/COW-relevant mutation (tests set it; serving
+# doesn't pay for it by default)
+_DEBUG = os.environ.get("REPRO_DEBUG_ALLOCATOR", "") not in ("", "0")
 
 
 class BlockAllocator:
@@ -187,9 +193,63 @@ class BlockAllocator:
         """Decref; pages reaching zero return to the free list and drop
         out of the prefix index."""
         for pid in ids:
-            assert self._ref[pid] > 0, f"releasing a free page {pid}"
+            if self._ref[pid] <= 0:
+                raise RuntimeError(f"releasing a free page {pid}")
             self._ref[pid] -= 1
             if self._ref[pid] == 0:
                 for key in self._key_of.pop(pid, ()):
                     del self._index[key]
                 self._free.append(pid)
+        if _DEBUG:
+            self.check_invariants()
+
+    # ------------------------------------------------------------------
+    # consistency
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Full free-list / refcount / prefix-index / reservation audit.
+
+        O(pages + index) — debug/test machinery, not hot-path code (the
+        engine mutates the allocator once per admission/eviction, but
+        serving latency tests still should not pay an O(pool) scan per
+        request unless REPRO_DEBUG_ALLOCATOR is set). Raises
+        AssertionError on the first violated invariant:
+
+          1. the free list holds no duplicates and only valid page ids;
+          2. a page is on the free list iff its refcount is zero
+             (free ∩ referenced = ∅, and no leaked limbo pages);
+          3. refcounts are never negative;
+          4. the prefix index and the per-page key table are exact
+             mirrors, and every indexed page is live (refcount > 0);
+          5. reservations are non-negative and collectively no larger
+             than the free pool (``available()`` cannot go negative).
+        """
+        free = self._free
+        free_set = set(free)
+        assert len(free_set) == len(free), (
+            f"free list holds duplicates: {sorted(free)}")
+        assert all(0 <= p < self.num_pages for p in free), (
+            f"free list holds out-of-range ids: {sorted(free_set)}")
+        assert (self._ref >= 0).all(), (
+            f"negative refcount at pages "
+            f"{np.flatnonzero(self._ref < 0).tolist()}")
+        zero_ref = set(np.flatnonzero(self._ref == 0).tolist())
+        assert free_set == zero_ref, (
+            f"free list / refcount mismatch: free-but-referenced="
+            f"{sorted(free_set - zero_ref)}, "
+            f"unreferenced-but-not-free={sorted(zero_ref - free_set)}")
+        for key, pid in self._index.items():
+            assert pid in self._key_of and key in self._key_of[pid], (
+                f"index key {key!r} -> page {pid} missing from _key_of")
+            assert self._ref[pid] > 0, (
+                f"prefix index points at free page {pid}")
+        for pid, keys in self._key_of.items():
+            for key in keys:
+                assert self._index.get(key) == pid, (
+                    f"_key_of[{pid}] lists key {key!r} not mapped back "
+                    "by the index")
+        assert all(n >= 0 for n in self._reserved.values()), (
+            f"negative reservation: {self._reserved}")
+        assert sum(self._reserved.values()) <= len(free), (
+            f"reservations ({sum(self._reserved.values())}) exceed the "
+            f"free pool ({len(free)})")

@@ -66,6 +66,7 @@ def pipeline_apply(layer_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
         buf, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
         # outputs were collected on the last stage only; all other stages
         # hold zeros, so a psum over the pipe axis replicates the result.
+        # rpr-ok: RPR002 one nonzero term per element (last stage) + zeros elsewhere — zero-padded fp adds are exact
         return jax.lax.psum(outs, axis)
 
     mapped = shard_map(

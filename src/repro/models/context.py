@@ -296,6 +296,7 @@ class ShardedDequantContext(DequantContext):
         full = jax.lax.dynamic_update_slice(full, terms, (i * gl, 0, 0))
         # ONE psum per down-projection: disjoint group slots + zeros, so
         # the float reduction is exact for any shard count
+        # rpr-ok: RPR002 fp32 operand is zeros + disjoint per-shard dynamic_update_slice slots (exact zero-padded adds)
         full = jax.lax.psum(full, self.axis_name)
         y = jnp.sum(full, axis=0)
         return y * jnp.asarray(xs, jnp.float32)
@@ -313,7 +314,8 @@ class ShardedDequantContext(DequantContext):
         acc = jax.lax.dot_general(
             xl, w, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32)
-        acc = jax.lax.psum(acc, self.axis_name)      # int32: exact
+        # rpr-ok: RPR002 int32 operand — integer adds are exact
+        acc = jax.lax.psum(acc, self.axis_name)
         # identical elementwise dequant to kernels.ref.int8_matmul
         return (acc.astype(jnp.float32) * xs.reshape(-1, 1)
                 * s.reshape(1, -1))

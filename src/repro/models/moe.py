@@ -237,8 +237,10 @@ def moe_apply_ep(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx, rules
                      ).astype(jnp.float32)
 
         if seq_sharded:
+            # rpr-ok: RPR002 training-path fp32 expert combine — not under the serving exactness contract; fp reduction noise is part of the training numerics budget
             y = jax.lax.psum_scatter(y, "model", scatter_dimension=0, tiled=True)
         else:
+            # rpr-ok: RPR002 training-path fp32 expert combine — not under the serving exactness contract (serving MoE dispatch is replicated, never psum'd)
             y = jax.lax.psum(y, "model")
         return y.astype(xl.dtype).reshape(xl.shape), aux
 

@@ -72,6 +72,7 @@ def compressed_psum(g: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     gmax = jax.lax.pmax(local_max, axis_name)
     scale = jnp.maximum(gmax, 1e-12) / 127.0
     q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int32)
-    total = jax.lax.psum(q, axis_name)
+    total = jax.lax.psum(q, axis_name)  # rpr-ok: RPR002 int32 operand — integer adds are exact
+    # rpr-ok: RPR002 fp32 ones only count shards — any summation order gives the same small integer
     n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
     return (total.astype(jnp.float32) * scale / n).astype(g.dtype)

@@ -59,14 +59,17 @@ def test_allocator_free_list_and_reservations():
     a = BlockAllocator(8, 16)
     ids = a.allocate(3)
     assert len(ids) == 3 and a.pages_in_use == 3
+    a.check_invariants()
     a.reserve(owner=0, n=4)
     assert a.available() == 1
     assert a.allocate(2) is None            # would eat the reservation
     got = a.allocate(2, owner=0)            # owner draws its reservation
     assert len(got) == 2 and a.available() == 1
+    a.check_invariants()
     a.unreserve(0)
     a.release(ids)
     assert a.pages_in_use == 2 and len(a.allocate(6)) == 6   # recycled
+    a.check_invariants()
 
 
 def test_allocator_prefix_sharing_and_cow():
@@ -101,12 +104,60 @@ def test_allocator_prefix_sharing_and_cow():
     # release the original; shared pages survive via their refcount,
     # exclusive pages return to the free list and leave the index
     a.release(row)
+    a.check_invariants()
     assert a.refcount(row[0]) == 1 and a.refcount(row[2]) == 0
     full4, shared4, _ = a.match_prefix(prompt, 39)
     assert full4 == row[:2] and shared4 == 32   # partial page is gone
     a.release(full)
     assert a.pages_in_use == 0
     assert a.match_prefix(prompt, 39) == ([], 0, None)
+    a.check_invariants()
+
+
+def test_allocator_invariant_check_catches_corruption():
+    """check_invariants flags each bookkeeping corruption class, and
+    double-release is rejected outright."""
+    rng = np.random.default_rng(1)
+    a = BlockAllocator(16, 8)
+    prompt = rng.integers(0, 100, 24).astype(np.int32)
+    row = a.allocate(3)
+    a.register_prompt(prompt, row, 24)
+    a.check_invariants()
+
+    with pytest.raises(RuntimeError, match="free page"):
+        a.release([a._free[-1]])            # double release
+
+    # free-list duplicate
+    a._free.append(a._free[-1])
+    with pytest.raises(AssertionError, match="duplicates"):
+        a.check_invariants()
+    a._free.pop()
+
+    # refcount desync: referenced page also on the free list
+    a._free.append(row[0])
+    with pytest.raises(AssertionError, match="free-but-referenced"):
+        a.check_invariants()
+    a._free.pop()
+
+    # leaked page: refcount zeroed without returning it to the free list
+    a._ref[row[1]] = 0
+    with pytest.raises(AssertionError, match="unreferenced-but-not-free"):
+        a.check_invariants()
+    a._ref[row[1]] = 1
+
+    # prefix index pointing at a page whose key table forgot it
+    key = next(iter(a._index))
+    pid = a._index[key]
+    a._key_of[pid] = [k for k in a._key_of[pid] if k != key]
+    with pytest.raises(AssertionError, match="missing from _key_of"):
+        a.check_invariants()
+
+    # reservations exceeding the free pool
+    b = BlockAllocator(4, 8)
+    b.reserve(owner=0, n=3)
+    b._reserved[0] = 99
+    with pytest.raises(AssertionError, match="exceed the free pool"):
+        b.check_invariants()
 
 
 # ---------------------------------------------------------------------------
