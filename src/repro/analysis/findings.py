@@ -41,6 +41,9 @@ RULES: dict[str, str] = {
     "ordered guarantee (iteration-order hazard for flatten/unflatten)",
     "RPR007": "bare assert used for shape/numeric validation in kernel "
     "code (stripped under python -O; raise ValueError instead)",
+    "RPR008": "host sync (device_get / block_until_ready / np.asarray) "
+    "inside a serving hot-path function — defeats the zero-sync decode "
+    "contract; only the audited drain cadence may transfer",
     # --- jaxpr ---
     "RPR100": "analysis environment note: trace target skipped or failed",
     "RPR101": "float64 aval appears in a traced computation",

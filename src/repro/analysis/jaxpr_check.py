@@ -266,16 +266,22 @@ def _smoke_engine(variant: str, mesh=None):
     else:
         cfg = dc.replace(cfg, scan_layers=False)
         params = init_params(cfg, jax.random.key(0))
-        if variant in ("qtensor", "paged", "sharded"):
+        if variant in ("qtensor", "paged", "sharded", "obs"):
             params, scales = quantize_params(params, 4, group_size=8)
             ecfg["int8_compute"] = True
         elif variant == "int8":
             params, scales = quantize_params_int8(params, 8)
             ecfg["int8_compute"] = True
-        if variant in ("paged", "sharded"):
+        if variant in ("paged", "sharded", "obs"):
             ecfg.update(kv_cache="paged", page_size=8)
         if variant == "sharded":
             ecfg["mesh"] = mesh
+        if variant == "obs":
+            # device counters accumulate INSIDE the decode scan; the hot
+            # decode target below proves the stats graph adds no host
+            # callbacks / transfers (RPR103) — drains happen outside it
+            from repro.obs import ObsConfig
+            ecfg["obs"] = ObsConfig(device_metrics=True)
     return Engine(params, cfg, EngineConfig(**ecfg), scales=scales)
 
 
@@ -293,10 +299,15 @@ def _engine_target_pair(variant: str, mesh=None) -> List[TraceTarget]:
         tok = eng._put_repl(jnp.zeros(eng._tok_shape, jnp.int32))
         out = eng._put_repl(jnp.zeros(eng._out_shape, jnp.int32))
         slots = eng._fresh_slot_table()
-        step = ft.partial(eng._engine_step, steps=2, mode="greedy")
+        ctr = eng._fresh_counters()
+        # stats=True traces the WORST-case burst flavor (sampled
+        # element-wise clip stats included) — the hot-path audit must
+        # hold for the heaviest graph the cadence can dispatch
+        step = ft.partial(eng._engine_step, steps=2, mode="greedy",
+                          stats=bool(ctr))
         return jax.make_jaxpr(
             lambda *a: step(*a))(eng.params, eng.scales, state, tok, out,
-                                 slots)
+                                 slots, ctr)
 
     def prefill_jaxpr(variant=variant, mesh=mesh):
         eng = _smoke_engine(variant, mesh)
@@ -319,7 +330,7 @@ def collect_targets(sharded: Optional[bool] = None) -> Tuple[
 
     notes: List[Finding] = []
     targets = _kernel_targets()
-    for variant in ("dense", "qtensor", "int8", "paged"):
+    for variant in ("dense", "qtensor", "int8", "paged", "obs"):
         targets.extend(_engine_target_pair(variant))
     want_sharded = (len(jax.devices()) >= 2) if sharded is None else sharded
     if want_sharded:

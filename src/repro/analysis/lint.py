@@ -20,6 +20,8 @@ Rule summary (rationales live in ``findings.RULES``):
   RPR005  qtensor pack tables out of sync (PACKED_BITS vs _UNITS)
   RPR006  iteration over a set while building ordered pytree structure
   RPR007  bare assert for validation in kernel code
+  RPR008  host sync (device_get / block_until_ready / np.asarray) inside
+          a serving hot-path function (engine_step / burst / drain)
 """
 
 from __future__ import annotations
@@ -36,6 +38,14 @@ _COLLECTIVES = {"psum", "psum_scatter", "all_reduce", "all_gather_invariant"}
 
 # directories (relative to the scan root) held to the kernel-grade rules
 _KERNEL_DIRS = ("kernels",)
+
+# RPR008: directories holding serving hot-path code, the function-name
+# fragments that mark a decode hot path, and the sync primitives that
+# stall it. ``np.asarray`` on a device array is an implicit device_get;
+# ``jnp.asarray`` stays on device and is NOT flagged.
+_HOT_DIRS = ("serve", "obs")
+_HOT_NAME_FRAGMENTS = ("engine_step", "burst", "drain")
+_HOT_SYNC_CALLS = {"device_get", "block_until_ready"}
 
 
 def _is_float64_dtype(node: ast.AST) -> bool:
@@ -77,6 +87,9 @@ class _Linter(ast.NodeVisitor):
         self.findings: List[Finding] = []
         self.in_kernel_dir = any(
             part in _KERNEL_DIRS for part in Path(rel).parts[:-1])
+        self.in_hot_dir = any(
+            part in _HOT_DIRS for part in Path(rel).parts[:-1])
+        self._func_stack: List[str] = []
 
     def _add(self, code: str, severity: str, node: ast.AST, msg: str) -> None:
         lineno = getattr(node, "lineno", 1)
@@ -85,9 +98,44 @@ class _Linter(ast.NodeVisitor):
         self.findings.append(Finding(code, severity, self.rel, msg,
                                      line=lineno, path=self.rel))
 
+    # --- RPR008: hot-path host syncs --------------------------------------
+    def _in_hot_function(self) -> bool:
+        return self.in_hot_dir and any(
+            frag in fn for fn in self._func_stack
+            for frag in _HOT_NAME_FRAGMENTS)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _check_hot_sync(self, node: ast.Call, name: str) -> None:
+        if not self._in_hot_function():
+            return
+        is_sync = name in _HOT_SYNC_CALLS
+        # np.asarray(<device array>) is an implicit blocking device_get;
+        # jnp.asarray stays on device and is fine (the obs counter carry
+        # uses it), so only the np attribute form is flagged
+        if name == "asarray" and isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == "np":
+            is_sync = True
+        if is_sync:
+            self._add(
+                "RPR008", "error", node,
+                f"{name} inside a serving hot-path function "
+                f"({'.'.join(self._func_stack)}) — per-burst host syncs "
+                "defeat the zero-sync decode contract; move the transfer "
+                "to the audited drain cadence or mark the site with "
+                "'# rpr-ok: RPR008 <why this sync is the measurement / "
+                "on the drain cadence>'")
+
     # --- RPR002 / RPR003 / RPR004 / RPR001 --------------------------------
     def visit_Call(self, node: ast.Call) -> None:
         name = _call_name(node.func)
+        self._check_hot_sync(node, name)
         if name in _COLLECTIVES:
             self._add(
                 "RPR002", "error", node,

@@ -110,3 +110,16 @@ def fake_quant_per_channel_pallas(x: jnp.ndarray, scale: jnp.ndarray,
     )(x2, scale.reshape(1, c).astype(jnp.float32),
       zero_point.reshape(1, c).astype(jnp.float32))
     return out.reshape(orig_shape)
+
+
+def clip_stats(x, scale, zero_point, bits: int, levels=None):
+    """(clipped, total) f32 element counts for one fake-quant call: how
+    many grid indices ``round(x/scale + zp)`` fell outside [0, levels]
+    and were clamped. Feeds the ``fq_clip`` / ``fq_elems`` device
+    counters — a rising clip rate means serving traffic has outgrown
+    the calibrated quantization ranges (the FIT drift signal's cheap
+    in-band cousin)."""
+    lv = (2.0 ** bits - 1.0) if levels is None else levels * 1.0
+    q = jnp.round(x.astype(jnp.float32) / scale + zero_point)
+    clipped = jnp.sum(((q < 0.0) | (q > lv)).astype(jnp.float32))
+    return clipped, jnp.float32(x.size)

@@ -95,3 +95,12 @@ def int8_matmul_pallas(x_q: jnp.ndarray, w_q: jnp.ndarray, x_scale: jnp.ndarray,
         interpret=interpret,
     )(x_q, w_q, x_scale.reshape(m2, 1), w_scale.reshape(1, n2))
     return out[:m, :n]
+
+
+def activation_saturation(x_q):
+    """(saturated, total) f32 counts for the int8 activation operand —
+    the W8A8 route's clip-rate sample (see ``kernels.qmm
+    .saturation_stats`` for the grouped-scale twin)."""
+    sat = jnp.sum((jnp.abs(x_q.astype(jnp.int32)) >= 127)
+                  .astype(jnp.float32))
+    return sat, jnp.float32(x_q.size)

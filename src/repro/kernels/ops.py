@@ -15,12 +15,15 @@ import jax.numpy as jnp
 
 from repro.analysis.bounds import require_full_k_safe, require_group_dot_safe
 from repro.kernels import ref as _ref
-from repro.kernels.fake_quant import fake_quant_pallas, fake_quant_per_channel_pallas
+from repro.kernels.fake_quant import (
+    clip_stats, fake_quant_pallas, fake_quant_per_channel_pallas)
 from repro.kernels.ef_sqnorm import ef_sqnorm_pallas
-from repro.kernels.int8_matmul import int8_matmul_pallas
-from repro.kernels.qmm import qmm_groups_pallas, qmm_pallas
+from repro.kernels.int8_matmul import activation_saturation, int8_matmul_pallas
+from repro.kernels.qmm import qmm_groups_pallas, qmm_pallas, saturation_stats
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention import (
+    paged_attention_pallas, read_token_stats)
+from repro.obs import runtime as obs_rt
 
 
 def _mode() -> str:
@@ -36,6 +39,13 @@ def fake_quant(x, scale, zero_point, bits: int, levels=None):
     the calibrated range clip to the odd symmetric grid."""
     mode = _mode()
     per_channel = getattr(scale, "ndim", 0) and scale.size > 1
+    if obs_rt.emitting_stats():
+        # clip-rate sample for the obs device counters — the stats graph
+        # is only built when a CounterSink is actively collecting AND this
+        # burst is a sampled one (ObsConfig.stats_every)
+        clipped, total = clip_stats(x, scale, zero_point, bits, levels)
+        obs_rt.emit("fq_clip", clipped)
+        obs_rt.emit("fq_elems", total)
     if mode == "ref":
         return _ref.fake_quant(x, scale, zero_point, bits, levels=levels)
     interp = mode == "interpret"
@@ -62,6 +72,12 @@ def int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype=jnp.float32):
     mode = _mode()
     # static overflow proof on EVERY route (the pallas wrapper re-checks)
     require_full_k_safe(8, 8, x_q.shape[-1], where="ops.int8_matmul")
+    if obs_rt.emitting():
+        obs_rt.emit("int8mm_calls", 1.0)
+        if obs_rt.emitting_stats():
+            sat, total = activation_saturation(x_q)
+            obs_rt.emit("act_sat", sat)
+            obs_rt.emit("act_elems", total)
     x_scale = jnp.asarray(x_scale, jnp.float32)
     if x_scale.size > 1:
         x_scale = x_scale.reshape(-1, 1)          # (M, 1) for row broadcast
@@ -82,6 +98,12 @@ def qmm(x_q, w, x_scale, out_dtype=jnp.float32):
     mode = _mode()
     # static overflow proof on EVERY route (the pallas wrapper re-checks)
     require_group_dot_safe(w.bits, 8, w.group_size, where="ops.qmm")
+    if obs_rt.emitting():
+        obs_rt.emit("qmm_calls", 1.0)
+        if obs_rt.emitting_stats():
+            sat, total = saturation_stats(x_q)
+            obs_rt.emit("act_sat", sat)
+            obs_rt.emit("act_elems", total)
     x_scale = jnp.asarray(x_scale, jnp.float32)
     if x_scale.size > 1:
         x_scale = x_scale.reshape(-1, 1)          # (M, 1) for row broadcast
@@ -137,6 +159,9 @@ def paged_attention(q, k_pages, v_pages, table, pos, k_scale=None,
     kernel tests, which call ``paged_attention_pallas`` directly.
     """
     mode = _mode()
+    if obs_rt.emitting():
+        obs_rt.emit("paged_calls", 1.0)
+        obs_rt.emit("paged_tokens_read", read_token_stats(pos))
     if mode != "tpu":
         return _ref.paged_attention(q, k_pages, v_pages, table, pos,
                                     k_scale, v_scale, bits)

@@ -134,3 +134,9 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
         interpret=interpret,
     )(table, lengths, q, k_pages, v_pages, k_scale, v_scale)
+
+
+def read_token_stats(pos):
+    """Total KV tokens attended this call (sum over batch of pos + 1) —
+    the ``paged_tokens_read`` device counter's per-call increment, f32."""
+    return jnp.sum(pos.astype(jnp.float32) + 1.0)

@@ -193,3 +193,14 @@ def qmm_pallas(x_q: jnp.ndarray, w_data: jnp.ndarray, x_scale: jnp.ndarray,
         interpret=interpret,
     )(x_q, w_data, w_scale.astype(jnp.float32), x_scale.reshape(m2, 1))
     return out[:m, :n]
+
+
+def saturation_stats(x_q):
+    """(saturated, total) element counts of an int8 activation block —
+    |x| == 127 means the row-wise quantizer clipped (the activation
+    outgrew its per-row scale). Sampled into the ``act_sat`` /
+    ``act_elems`` device counters by the obs-enabled engine; f32 so the
+    running sums stay cheap on the VPU."""
+    sat = jnp.sum((jnp.abs(x_q.astype(jnp.int32)) >= 127)
+                  .astype(jnp.float32))
+    return sat, jnp.float32(x_q.size)

@@ -90,14 +90,22 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
           clock: str = "steps", paged: bool = False, page_size: int = 16,
           kv_bits: Optional[int] = None, kv_pages: Optional[int] = None,
           prefix_sharing: bool = True, shared_prefix: int = 0,
-          tp: int = 1, group_size: Optional[int] = None) -> Dict:
+          tp: int = 1, group_size: Optional[int] = None,
+          trace_path: Optional[str] = None,
+          events_path: Optional[str] = None,
+          metrics_file: Optional[str] = None,
+          metrics_port: Optional[int] = None, drain_every: int = 8,
+          drift_every: int = 0, drift_stale: float = 1.0,
+          drift_threshold: float = 1.5) -> Dict:
     """Build the model + engine, run the load, return results + metrics."""
     cfg = smoke_config(arch) if smoke else get_config(arch)
-    if int8 or packed or paged:
+    if int8 or packed or paged or drift_every:
         # per-layer dequant scales / page pools / payload shapes are
-        # path-keyed: needs the unrolled layer layout
+        # path-keyed: needs the unrolled layer layout (drift's per-site
+        # probes key on unrolled paths too)
         cfg = dataclasses.replace(cfg, scan_layers=False)
     params = init_params(cfg, jax.random.key(seed))
+    fp_params = params if drift_every else None   # pre-PTQ drift reference
 
     mesh = None
     if tp > 1:
@@ -140,14 +148,47 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
     max_len = prompt_len + gen_len
     if paged:
         max_len = -(-max_len // page_size) * page_size    # page multiple
+    obs = None
+    if trace_path or events_path or metrics_file or metrics_port is not None:
+        from repro.obs import ObsConfig
+        obs = ObsConfig(trace=bool(trace_path or events_path),
+                        device_metrics=True, drain_every=drain_every,
+                        trace_path=trace_path, events_path=events_path,
+                        metrics_file=metrics_file, metrics_port=metrics_port)
     ecfg = EngineConfig(
         max_slots=batch, max_len=max_len, max_new_tokens=gen_len,
         prefill_chunk=min(prefill_chunk, max(prompt_len, 1)),
         decode_burst=decode_burst, clock=clock, int8_compute=int8_compute,
         kv_cache="paged" if paged else "dense", page_size=page_size,
-        kv_pages=kv_pages, prefix_sharing=prefix_sharing, mesh=mesh)
+        kv_pages=kv_pages, prefix_sharing=prefix_sharing, mesh=mesh,
+        obs=obs)
     engine = Engine(params, cfg, ecfg, scales=scales, kv_bits=kv_bits)
-    finished, metrics = engine.run(reqs)
+
+    monitor = None
+    if drift_every:
+        # FIT drift demo: fp reference + self-calibrating ranges;
+        # --drift-stale S shrinks the calibration S x to simulate serving
+        # past a stale SensitivityReport (flags every affected layer)
+        from repro.obs.drift import DriftMonitor
+        monitor = DriftMonitor(fp_params, {}, every=drift_every,
+                               ratio_threshold=drift_threshold,
+                               calibration_scale=1.0 / drift_stale)
+        monitor.attach(engine)
+
+    server = None
+    if obs is not None and obs.metrics_port is not None:
+        from repro.obs import MetricsServer
+        from repro.obs import snapshot as obs_snapshot
+        server = MetricsServer(obs.metrics_port,
+                               lambda: obs_snapshot(engine))
+        log.info("live /metrics endpoint on http://127.0.0.1:%d/metrics",
+                 server.port)
+
+    try:
+        finished, metrics = engine.run(reqs)
+    finally:
+        if server is not None:
+            server.close()
     summ = metrics.summary()
 
     out = {
@@ -157,6 +198,35 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
         "metrics": summ,
         "requests": finished,
     }
+    if obs is not None:
+        from repro.obs import GAUGE_HELP
+        from repro.obs import snapshot as obs_snapshot
+        from repro.obs import write_snapshot
+        if obs.trace_path:
+            engine.tracer.write(obs.trace_path)
+            log.info("chrome trace (%d events) -> %s  [open in "
+                     "https://ui.perfetto.dev]", engine.tracer.n_events,
+                     obs.trace_path)
+        if obs.events_path:
+            engine.tracer.write_events(obs.events_path)
+        if obs.metrics_file:
+            write_snapshot(obs.metrics_file, obs_snapshot(engine),
+                           GAUGE_HELP)
+            log.info("metrics snapshot -> %s (+ .json)", obs.metrics_file)
+        out["observability"] = {
+            "trace_events": engine.tracer.n_events,
+            "counter_drains": engine.counters.n_drains,
+            "counters": engine.counters.totals(),
+            "rates": engine.counters.rates(),
+        }
+    if monitor is not None:
+        rep = monitor.drift_report()
+        out["drift"] = rep
+        log.info("drift: %d samples, kl mean %s, %s", rep["n_samples"],
+                 f"{rep['kl_mean']:.3g}" if rep["kl_mean"] is not None
+                 else "n/a",
+                 "IN calibration" if rep["in_calibration"] else
+                 f"FLAGGED layers: {', '.join(rep['flagged_layers'])}")
     if n_requests is None:
         # closed-loop: uniform lengths -> legacy dense (B, G) matrix
         out["generated"] = np.stack([r.output_tokens for r in finished])
@@ -218,6 +288,29 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--clock", choices=("steps", "wall"), default="steps")
     ap.add_argument("--json", default=None, help="write metrics JSON here")
+    # ---- observability (repro.obs; README "Observability") ----
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON here (load in "
+                         "https://ui.perfetto.dev); also enables the "
+                         "zero-sync device counters")
+    ap.add_argument("--events", default=None, metavar="PATH",
+                    help="write the structured jsonl event log here")
+    ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                    help="write a Prometheus text snapshot (+ sibling "
+                         ".json) at end of run")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve a live /metrics endpoint on this port "
+                         "during the run (0 = ephemeral)")
+    ap.add_argument("--drain-every", type=int, default=8,
+                    help="decode bursts between device-counter drains")
+    ap.add_argument("--drift-every", type=int, default=0,
+                    help="FIT drift monitor: sample one fp-reference "
+                         "forward every N decode steps (0 = off)")
+    ap.add_argument("--drift-stale", type=float, default=1.0,
+                    help="simulate S-x stale calibration (ranges "
+                         "shrunk S x; > --drift-threshold flags)")
+    ap.add_argument("--drift-threshold", type=float, default=1.5,
+                    help="activation-range ratio that flags a site")
     args = ap.parse_args()
 
     out = serve(args.arch, args.smoke, args.batch, args.prompt_len,
@@ -232,11 +325,20 @@ def main() -> None:
                 kv_bits=args.kv_bits, kv_pages=args.kv_pages,
                 prefix_sharing=not args.no_prefix_sharing,
                 shared_prefix=args.shared_prefix, tp=args.tp,
-                group_size=args.group_size)
-    print(json.dumps(out["metrics"], indent=2))
+                group_size=args.group_size, trace_path=args.trace,
+                events_path=args.events, metrics_file=args.metrics_file,
+                metrics_port=args.metrics_port,
+                drain_every=args.drain_every,
+                drift_every=args.drift_every, drift_stale=args.drift_stale,
+                drift_threshold=args.drift_threshold)
+    dump = {"metrics": out["metrics"]}
+    for k in ("observability", "drift"):
+        if k in out:
+            dump[k] = out[k]
+    print(json.dumps(dump, indent=2))
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(out["metrics"], f, indent=2)
+            json.dump(dump, f, indent=2)
 
 
 if __name__ == "__main__":

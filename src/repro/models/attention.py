@@ -292,6 +292,7 @@ def _paged_update_attend_sharded(ctx, lp, q, knew, vnew, table, pos, pid,
         return kc, vc, o
 
     from repro.kernels import ops as kops       # deferred: import cycle
+    from repro.obs import runtime as obs_rt
     qg = q.reshape(b, 1, kv, g * hd)
     rep2 = P(None, None)
     rep1 = P(None)
@@ -305,5 +306,12 @@ def _paged_update_attend_sharded(ctx, lp, q, knew, vnew, table, pos, pid,
         out_specs=(P(None, None, ax, None), P(None, None, ax, None),
                    P(None, None, None, None)),
         check_rep=False)
-    return fn(lp.k, lp.v, lp.k_scale, lp.v_scale, qg, knew, vnew,
-              table, pos, pid, off, sp)
+    if obs_rt.emitting():
+        # counted from the REPLICATED positions (tp-invariant); the
+        # ops-level emit inside the shard_map body is suspended below
+        from repro.kernels.paged_attention import read_token_stats
+        obs_rt.emit("paged_calls", 1.0)
+        obs_rt.emit("paged_tokens_read", read_token_stats(pos))
+    with obs_rt.suspended():
+        return fn(lp.k, lp.v, lp.k_scale, lp.v_scale, qg, knew, vnew,
+                  table, pos, pid, off, sp)

@@ -325,11 +325,25 @@ class ShardedDequantContext(DequantContext):
         mode = self.shard_plan.get(self.path(name))
         if mode is None:
             return super().matmul(name, x, w)
+        from repro.obs import runtime as obs_rt
         mesh, ax = self.mesh, self.axis_name
         lead = x.shape[:-1]
         xq, xs = self._rowquant(
             x.reshape(-1, x.shape[-1]).astype(jnp.float32))
         xs = jnp.asarray(xs, jnp.float32).reshape(-1, 1)
+        if obs_rt.emitting():
+            obs_rt.emit("qmm_calls" if isinstance(w, QTensor)
+                        else "int8mm_calls", 1.0)
+            if obs_rt.emitting_stats():
+                # clip stats come from the REPLICATED pre-shard activation,
+                # so the counters are tp-invariant; the kernel-site emits
+                # inside the shard_map bodies are suspended below (their
+                # values belong to the inner trace and must not leak into
+                # the sink)
+                from repro.kernels.qmm import saturation_stats
+                sat, total = saturation_stats(xq)
+                obs_rt.emit("act_sat", sat)
+                obs_rt.emit("act_elems", total)
         if isinstance(w, QTensor):
             k, n = w.shape
             groups = w.scale.shape[w.axis]
@@ -351,7 +365,8 @@ class ShardedDequantContext(DequantContext):
                     in_specs=(P(None, None), P(ax, None), P(ax, None),
                               P(None, None)),
                     out_specs=P(None, None), check_rep=False)
-            y = fn(xq, w.data, ws2, xs)
+            with obs_rt.suspended():
+                y = fn(xq, w.data, ws2, xs)
             return y.astype(self.dtype).reshape(lead + (n,))
         # legacy int8 leaf + path-keyed scale
         s = self.scales.get(self.path(name))
@@ -363,7 +378,8 @@ class ShardedDequantContext(DequantContext):
                 in_specs=(P(None, None), P(None, ax), P(None, ax),
                           P(None, None)),
                 out_specs=P(None, None), check_rep=False)
-            y = fn(xq, w, s.reshape(1, -1), xs)
+            with obs_rt.suspended():
+                y = fn(xq, w, s.reshape(1, -1), xs)
         else:
             fn = shard_map(
                 lambda a, wl, sl, axs: self._int8_row(
@@ -372,5 +388,6 @@ class ShardedDequantContext(DequantContext):
                 in_specs=(P(None, None), P(ax, None), P(None, None),
                           P(None, None)),
                 out_specs=P(None, None), check_rep=False)
-            y = fn(xq, w, s.reshape(1, -1), xs)
+            with obs_rt.suspended():
+                y = fn(xq, w, s.reshape(1, -1), xs)
         return y.astype(self.dtype).reshape(lead + (n,))

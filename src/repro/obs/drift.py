@@ -1,0 +1,271 @@
+"""Live FIT drift monitoring: does the served model still match its
+calibration?
+
+FIT's offline promise (paper Sec. 3) is that quantization degradation
+is predicted by EF traces x noise power over *calibrated* ranges.  That
+prediction silently expires when serving traffic drifts off the
+calibration distribution — activation ranges grow past the calibrated
+min/max, clip rates climb, and the realized KL-vs-fp diverges from what
+FIT scored.  This module is the online check ("A KL Lens on
+Quantization", PAPERS.md: a forward-only logit-KL tap is a faithful
+cheap proxy for quantization damage):
+
+  * every ``every`` decode steps, run ONE fp-reference forward over the
+    engine's live state (same tokens, same KV pages) next to the
+    quantized forward, and record (a) the per-slot logit KL
+    fp -> quantized, (b) per-site activation min/max against the
+    calibrated ``SensitivityReport.act_ranges`` / ``kv_ranges``;
+  * sites whose observed range exceeds calibration by
+    ``ratio_threshold`` are flagged (grouped per layer in the report);
+  * ``site_kls`` measures a per-weight-block online KL on the live
+    state (quantize one block, KL against fp) — rank-correlating it
+    against ``report.fit_weights({site: bits})`` is the drift demo's
+    FIT-vs-reality check (``spearman >= 0.6`` on the Table-2 harness;
+    see ``tests/test_obs.py``).
+
+The sampling tap runs OUTSIDE the burst dispatch on a step cadence, so
+the decode hot path stays zero-sync; its own (cadenced) host fetch is
+the sampling cost, not a per-burst one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.context import CollectContext
+from repro.models.decode import decode_step
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.obs.drift")
+
+
+def _logsoftmax(lg: jnp.ndarray) -> jnp.ndarray:
+    lg = lg.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    s = lg - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+def _kl_rows(fp_logits: jnp.ndarray, q_logits: jnp.ndarray) -> jnp.ndarray:
+    """Per-row KL(fp || quantized) over the vocab axis."""
+    lf, lq = _logsoftmax(fp_logits), _logsoftmax(q_logits)
+    return jnp.sum(jnp.exp(lf) * (lf - lq), axis=-1)
+
+
+def _replace_leaf(tree, path: str, value):
+    """Functionally replace the leaf at a '/'-joined dict path."""
+    keys = path.split("/")
+
+    def rec(node, i):
+        if i == len(keys):
+            return value
+        out = dict(node)
+        out[keys[i]] = rec(node[keys[i]], i + 1)
+        return out
+
+    return rec(tree, 0)
+
+
+def _get_leaf(tree, path: str):
+    node = tree
+    for k in path.split("/"):
+        node = node[k]
+    return node
+
+
+@dataclasses.dataclass
+class DriftSample:
+    step: int                       # cumulative decode steps at the tap
+    slot: int
+    kl: float                       # logit KL fp -> served for that slot
+    max_ratio: float                # worst site range ratio this sample
+
+
+class DriftMonitor:
+    """Online FIT drift tap over a running :class:`repro.serve.Engine`.
+
+    ``fp_params`` must be the PRE-quantization parameter tree in the
+    same (unrolled) layout the engine serves.  ``act_ranges`` maps tap
+    sites (``layers/3/attn/k`` ...) to calibrated ``(lo, hi)`` —
+    typically ``SensitivityReport.act_ranges``, which covers the KV
+    sites when built through ``kvcache.fit.kv_report_fns``.
+    """
+
+    def __init__(self, fp_params, act_ranges: Mapping[str, Tuple[float,
+                                                                 float]],
+                 every: int = 64, ratio_threshold: float = 1.5,
+                 report=None, calibration_scale: float = 1.0):
+        self.fp_params = fp_params
+        self.cal_ranges = dict(act_ranges)
+        self.every = int(every)
+        self.ratio_threshold = float(ratio_threshold)
+        self.report = report
+        # empty act_ranges: self-calibrate on the first sample, scaled by
+        # ``calibration_scale`` — a scale of 1/S simulates calibration
+        # that is S x stale (the drift-demo knob in launch.serve)
+        self.calibration_scale = float(calibration_scale)
+        self.samples: List[DriftSample] = []
+        self.site_max_ratio: Dict[str, float] = {}
+        self._since = 0
+        self._steps_total = 0
+        self._rr = 0                    # round-robin slot cursor
+        self._engine = None
+        self._fp_probe = None
+        self._q_logits = None
+
+    # -- engine wiring ---------------------------------------------------
+    def attach(self, engine) -> "DriftMonitor":
+        """Bind to an engine (also registers via ``engine.attach_drift``)."""
+        if engine.cfg.family == "audio":
+            raise ValueError("drift monitor reads LM logits; audio "
+                             "families are not supported")
+        self._engine = engine
+        cfg, vocab = engine.cfg, engine.cfg.vocab_size
+
+        def fp_probe(fp_params, state, tok):
+            ctx = CollectContext()
+            logits, _ = decode_step(fp_params, state, tok, cfg, ctx=ctx)
+            lg = logits[:, 0, ..., :vocab]
+            lo = {k: jnp.min(jnp.minimum(a, 0.0),
+                             axis=tuple(range(1, a.ndim)))
+                  for k, a in ctx.acts.items()}
+            hi = {k: jnp.max(jnp.maximum(a, 0.0),
+                             axis=tuple(range(1, a.ndim)))
+                  for k, a in ctx.acts.items()}
+            return lg, lo, hi
+
+        def q_logits(params, scales, state, tok):
+            ctx = engine._make_ctx(scales)
+            logits, _ = decode_step(params, state, tok, cfg, ctx=ctx)
+            return logits[:, 0, ..., :vocab]
+
+        self._fp_probe = jax.jit(fp_probe)
+        self._q_logits = jax.jit(q_logits)
+        engine.attach_drift(self)
+        return self
+
+    # -- the cadenced tap (called by Engine._burst) ----------------------
+    def observe(self, n_steps: int) -> None:
+        self._since += int(n_steps)
+        self._steps_total += int(n_steps)
+        if self._since < self.every or self._engine is None:
+            return
+        active = np.flatnonzero(self._engine._active)
+        if active.size == 0:
+            return
+        self._since = 0
+        slot = int(active[self._rr % active.size])
+        self._rr += 1
+        self._sample(slot)
+
+    def _prepare_probe(self) -> None:
+        """Map the next page for every active slot before probing.
+
+        The engine grows page tables lazily at burst dispatch; between
+        bursts a slot sitting on a page boundary has no mapping for its
+        next write, so the probe's KV write would silently drop (and
+        the wk/wv sites would look dead). Growing by one step is
+        exactly what the next burst would do anyway — reservations made
+        at admission guarantee the pages exist.
+        """
+        eng = self._engine
+        if getattr(eng, "_paged", False):
+            eng._grow_tables(1)
+
+    def _sample(self, slot: int) -> None:
+        eng = self._engine
+        self._prepare_probe()
+        fl, lo, hi = self._fp_probe(self.fp_params, eng._state, eng._tok)
+        ql = self._q_logits(eng.params, eng.scales, eng._state, eng._tok)
+        kl_rows = _kl_rows(fl, ql)
+        # cadenced sampling fetch — NOT on the burst dispatch path
+        kl, lo, hi = jax.device_get((kl_rows[slot], lo, hi))
+        if not self.cal_ranges:
+            c = self.calibration_scale
+            self.cal_ranges = {
+                site: (float(lo[site][slot]) * c, float(hi[site][slot]) * c)
+                for site in hi}
+            log.info("drift monitor self-calibrated on %d sites "
+                     "(scale %.3g)", len(self.cal_ranges), c)
+        worst = 1.0
+        for site, (clo, chi) in self.cal_ranges.items():
+            if site not in hi:
+                continue
+            r = 1.0
+            if chi > 1e-12:
+                r = max(r, float(hi[site][slot]) / chi)
+            if clo < -1e-12:
+                r = max(r, float(lo[site][slot]) / clo)
+            prev = self.site_max_ratio.get(site, 0.0)
+            self.site_max_ratio[site] = max(prev, r)
+            worst = max(worst, r)
+        self.samples.append(DriftSample(step=self._steps_total, slot=slot,
+                                        kl=float(kl), max_ratio=worst))
+        if worst > self.ratio_threshold:
+            log.warning("drift sample @%d steps: range ratio %.2f exceeds "
+                        "calibration (threshold %.2f)", self._steps_total,
+                        worst, self.ratio_threshold)
+
+    # -- per-block online KL (the FIT-vs-reality demo) -------------------
+    def site_kls(self, sites: Optional[Sequence[str]] = None,
+                 bits: int = 4) -> Dict[str, float]:
+        """Measured logit KL of quantizing ONE weight block on the live
+        engine state, per site — the online counterpart of FIT's
+        per-block offline score ``report.fit_weights({site: bits})``.
+
+        Quantizes the fp reference block-at-a-time (paper min-max grid)
+        and reuses the single compiled fp probe for every hybrid tree,
+        so the sweep costs one forward per site, zero recompiles.
+        """
+        from repro.quant.quantizer import QuantSpec, fake_quant_ref
+
+        eng = self._engine
+        if eng is None:
+            raise RuntimeError("attach(engine) first")
+        if sites is None:
+            sites = sorted(self.report.weight_traces) if self.report \
+                else []
+        active = np.flatnonzero(eng._active)
+        rows = active if active.size else np.arange(eng.ecfg.max_slots)
+        self._prepare_probe()
+        fl, _, _ = self._fp_probe(self.fp_params, eng._state, eng._tok)
+        out: Dict[str, float] = {}
+        for site in sites:
+            try:
+                leaf = _get_leaf(self.fp_params, site)
+            except (KeyError, TypeError):
+                continue
+            if getattr(leaf, "ndim", 0) != 2:
+                continue
+            hybrid = _replace_leaf(
+                self.fp_params, site,
+                fake_quant_ref(leaf, QuantSpec(bits=bits)))
+            sl, _, _ = self._fp_probe(hybrid, eng._state, eng._tok)
+            kl = np.asarray(jax.device_get(_kl_rows(fl, sl)))
+            out[site] = float(kl[rows].mean())
+        return out
+
+    # -- reporting -------------------------------------------------------
+    def drift_report(self) -> Dict:
+        """Flagged sites/layers + KL series summary (see README)."""
+        flagged = sorted(s for s, r in self.site_max_ratio.items()
+                         if r > self.ratio_threshold)
+        layers = sorted({"/".join(s.split("/")[:2]) for s in flagged})
+        kls = [s.kl for s in self.samples]
+        return {
+            "n_samples": len(self.samples),
+            "every": self.every,
+            "ratio_threshold": self.ratio_threshold,
+            "kl_mean": float(np.mean(kls)) if kls else None,
+            "kl_max": float(np.max(kls)) if kls else None,
+            "sites": {s: {"max_ratio": float(r),
+                          "flagged": r > self.ratio_threshold}
+                      for s, r in sorted(self.site_max_ratio.items())},
+            "flagged_sites": flagged,
+            "flagged_layers": layers,
+            "in_calibration": not flagged,
+        }

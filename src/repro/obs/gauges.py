@@ -1,0 +1,121 @@
+"""Gauge snapshots: point-in-time engine state for exposition.
+
+Everything here reads HOST-side state the engine already maintains (the
+block allocator, host slot mirrors, jit caches, QTensor storage
+accounting) — collecting a snapshot never touches the device, so the
+exposition cadence is free to be aggressive.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+GAUGE_HELP: Dict[str, str] = {
+    "slots_active": "slots currently decoding",
+    "slots_total": "engine slot capacity",
+    "kv_pages_in_use": "page-pool pages with refcount > 0",
+    "kv_pages_total": "page-pool capacity",
+    "kv_pool_occupancy": "pages_in_use / total",
+    "kv_pages_reserved": "pages held back for admitted requests' decode",
+    "prefix_shared_tokens": "prefill tokens skipped via prefix sharing",
+    "prefix_hit_rate": "shared / (shared + prefilled) prompt tokens",
+    "kv_cow_copies": "boundary pages copied on write",
+    "weight_bytes_per_shard": "packed weight HBM bytes on one shard",
+    "kv_pool_bytes_per_shard": "KV page-pool HBM bytes on one shard",
+    "tp_degree": "tensor-parallel shard count",
+    "jit_cache_engine_step": "compiled engine_step variants "
+                             "(pow2 burst sizes x sampler modes)",
+    "jit_cache_prefill": "compiled prefill-chunk variants",
+    "admission_deferrals": "admissions bounced on a full KV pool",
+    "requests_finished": "requests served to completion",
+    "obs_drains": "device counter drains performed",
+    "obs_drain_s": "wall seconds spent draining counters",
+}
+
+
+def _jit_cache_size(fn) -> Optional[int]:
+    """Compiled-variant count of a ``jax.jit`` callable (None if the
+    runtime does not expose it) — compile-cache churn across pow2 burst
+    sizes is itself a serving health signal."""
+    try:
+        return int(fn._cache_size())
+    except Exception:                       # noqa: BLE001 - version drift
+        return None
+
+
+def collect_gauges(engine) -> Dict[str, object]:
+    """Snapshot an ``Engine``'s host-visible gauges (flat dict)."""
+    out: Dict[str, object] = {}
+    ecfg = engine.ecfg
+    active = getattr(engine, "_active", None)
+    out["slots_total"] = ecfg.max_slots
+    out["slots_active"] = int(active.sum()) if active is not None else 0
+    out["tp_degree"] = getattr(engine, "_tp", 1)
+
+    alloc = getattr(engine, "_alloc", None)
+    if alloc is not None:
+        out["kv_pages_in_use"] = alloc.pages_in_use
+        out["kv_pages_total"] = alloc.num_pages
+        out["kv_pool_occupancy"] = (alloc.pages_in_use / alloc.num_pages
+                                    if alloc.num_pages else 0.0)
+        out["kv_pages_reserved"] = sum(alloc._reserved.values())
+        out["prefix_shared_tokens"] = alloc.shared_tokens
+        out["kv_cow_copies"] = alloc.cow_copies
+        metrics = getattr(engine, "metrics", None)
+        prefilled = getattr(metrics, "prefill_tokens", 0) if metrics else 0
+        denom = alloc.shared_tokens + prefilled
+        out["prefix_hit_rate"] = (alloc.shared_tokens / denom
+                                  if denom else 0.0)
+        page_bytes = getattr(engine, "_page_bytes", 0.0)
+        out["kv_pool_bytes_per_shard"] = (
+            alloc.num_pages * page_bytes / getattr(engine, "_kv_shards", 1))
+
+    # per-shard weight HBM: QTensor trees have realized byte accounting
+    try:
+        from repro.qtensor import tree_has_qtensor
+        from repro.serve.quantized import (
+            sharded_storage_bytes, weight_storage_bytes)
+        if tree_has_qtensor(engine.params):
+            plan = getattr(engine, "_shard_plan", {})
+            tp = getattr(engine, "_tp", 1)
+            out["weight_bytes_per_shard"] = (
+                sharded_storage_bytes(engine.params, plan, tp)
+                if plan and tp > 1 else weight_storage_bytes(engine.params))
+    except Exception:                       # noqa: BLE001 - gauge only
+        pass
+
+    for key, fn_name in (("jit_cache_engine_step", "_engine_step"),
+                         ("jit_cache_prefill", "_prefill")):
+        fn = getattr(engine, fn_name, None)
+        if fn is not None:
+            n = _jit_cache_size(fn)
+            if n is not None:
+                out[key] = n
+
+    metrics = getattr(engine, "metrics", None)
+    if metrics is not None:
+        out["admission_deferrals"] = getattr(metrics, "admission_deferrals",
+                                             0)
+        out["requests_finished"] = getattr(metrics, "n_finished", 0)
+    counters = getattr(engine, "counters", None)
+    if counters is not None:
+        out["obs_drains"] = counters.n_drains
+        out["obs_drain_s"] = counters.drain_s
+    return out
+
+
+def snapshot(engine) -> Dict[str, object]:
+    """Gauges + drained counter totals + derived rates, one flat dict —
+    the payload ``launch.serve`` exposes via ``--metrics-file/-port``."""
+    out = collect_gauges(engine)
+    counters = getattr(engine, "counters", None)
+    if counters is not None:
+        for k, v in counters.totals().items():
+            out["ctr_" + k] = v
+        for k, v in counters.rates().items():
+            out[k] = v
+    metrics = getattr(engine, "metrics", None)
+    if metrics is not None:
+        for k, v in metrics.summary().items():
+            if isinstance(v, (int, float)) or v is None:
+                out["m_" + k] = v
+    return out

@@ -1,0 +1,225 @@
+"""In-trace counter emission: the zero-sync half of the obs subsystem.
+
+The serving hot path (``Engine._engine_step``) accumulates its metrics
+*inside* the jit'd computation — a dict of device-resident counter
+arrays rides through the burst scan as a donated carry, and kernel
+dispatch sites (``kernels.ops``, ``DequantContext._rowquant``) add their
+contributions while the step function is being TRACED.  Nothing here
+runs per executed step on the host; the only device->host transfer is
+the audited drain in ``repro.obs.counters``.
+
+Mechanics: ``Engine._engine_step`` opens a :class:`CounterSink` around
+the ``decode_step`` call (``collecting(sink)``); any code executing
+under that trace may call ``emit(name, value)`` with a (possibly
+traced) scalar.  After the call the engine folds the sink's sums into
+the counter carry (``fold``).  With no sink on the stack ``emit`` is a
+two-instruction no-op, so instrumented kernels cost nothing when the
+engine runs with observability off (or when kernels run outside any
+engine at all).
+
+``shard_map`` boundary: values produced inside a ``shard_map`` body
+belong to a different trace and MUST NOT reach an outer sink — the
+tensor-parallel call sites (``ShardedDequantContext.matmul``, the
+kv-head-sharded paged attention) first emit their statistics from the
+REPLICATED pre-shard values (identical on every shard, so the counters
+are tp-invariant by construction) and then wrap the sharded region in
+``suspended()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+# log2 burst-size histogram buckets: 2^0 .. 2^(HIST_BUCKETS-1) steps
+HIST_BUCKETS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterSpec:
+    kind: str                    # "i32" (exact, parity-checked) | "f32"
+    shape: Tuple[int, ...] = ()
+    doc: str = ""
+
+
+# The full counter registry. Every name an ``emit`` call may use is
+# declared here so the device buffer has a fixed layout (a scan carry
+# must hold every key from step 0) and unknown names fail at trace time.
+COUNTERS: Dict[str, CounterSpec] = {
+    # -- engine-level (int32: drained values are bit-equal to the host
+    #    bookkeeping; see tests/test_obs.py drain-parity) --
+    "decode_bursts": CounterSpec("i32", (), "engine_step dispatches"),
+    "decode_steps": CounterSpec("i32", (), "fused decode steps run"),
+    "decode_tokens": CounterSpec(
+        "i32", (), "USEFUL tokens written (burst overshoot excluded — "
+        "same active & budget mask as the output scatter)"),
+    "burst_size_hist": CounterSpec(
+        "i32", (HIST_BUCKETS,), "log2(steps) histogram of burst sizes"),
+    # -- kernel/context taps (f32 sums; rates, not exact counts) --
+    "qmm_calls": CounterSpec("f32", (), "fused qmm dispatches"),
+    "int8mm_calls": CounterSpec("f32", (), "legacy int8 matmul dispatches"),
+    "act_sat": CounterSpec(
+        "f32", (), "row-quantized activation values at the int8 rail "
+        "(|q| == 127) — the serve-time clip-rate numerator"),
+    "act_elems": CounterSpec("f32", (), "row-quantized activation values"),
+    "fq_clip": CounterSpec("f32", (), "fake-quant values clipped to the grid"),
+    "fq_elems": CounterSpec("f32", (), "fake-quant values processed"),
+    "paged_calls": CounterSpec("f32", (), "paged-attention dispatches"),
+    "paged_tokens_read": CounterSpec(
+        "f32", (), "KV tokens attended over across paged reads"),
+}
+
+_DTYPES = {"i32": jnp.int32, "f32": jnp.float32}
+
+# module-level sink stack + suspension depth (host-side trace state)
+_STACK: List["CounterSink"] = []
+_SUSPEND: int = 0
+
+
+class CounterSink:
+    """Collects traced per-call contributions during one trace region.
+
+    ``stats=False`` builds a cheap sink: call/token counters still
+    collect, but the element-wise clip statistics (``emitting_stats``
+    guards — full reductions over activation tensors) are skipped.  The
+    engine samples those on a burst cadence (``ObsConfig.stats_every``)
+    so the always-on cost is a handful of scalar adds per step; the
+    clip RATES stay unbiased because numerator and denominator are
+    sampled together.
+    """
+
+    def __init__(self, stats: bool = True) -> None:
+        self.stats = stats
+        self.sums: Dict[str, jnp.ndarray] = {}
+
+    def add(self, name: str, value) -> None:
+        spec = COUNTERS.get(name)
+        if spec is None:
+            raise KeyError(
+                f"emit({name!r}): unregistered counter — declare it in "
+                "repro.obs.runtime.COUNTERS")
+        v = jnp.asarray(value, _DTYPES[spec.kind])
+        if v.ndim:
+            v = jnp.sum(v)
+        prev = self.sums.get(name)
+        self.sums[name] = v if prev is None else prev + v
+
+
+def emitting() -> bool:
+    """True when an enclosing trace is collecting counters."""
+    return bool(_STACK) and not _SUSPEND
+
+
+def emitting_stats() -> bool:
+    """True when the collecting sink also wants the EXPENSIVE
+    element-wise statistics (saturation / clip-rate reductions) — gate
+    any emit whose value costs a pass over an activation tensor on
+    this, not on :func:`emitting`."""
+    return bool(_STACK) and not _SUSPEND and _STACK[-1].stats
+
+
+def emit(name: str, value) -> None:
+    """Add ``value`` (scalar, possibly traced) to counter ``name``.
+
+    No-op (and near-free) outside a ``collecting`` region or inside a
+    ``suspended`` one.
+    """
+    if not _STACK or _SUSPEND:
+        return
+    _STACK[-1].add(name, value)
+
+
+@contextmanager
+def collecting(sink: CounterSink):
+    """Route ``emit`` calls to ``sink`` for the duration of the block."""
+    _STACK.append(sink)
+    try:
+        yield sink
+    finally:
+        _STACK.pop()
+
+
+@contextmanager
+def suspended():
+    """Silence ``emit`` — wrap ``shard_map`` bodies so shard-local
+    tracers never leak into an outer trace's sink."""
+    global _SUSPEND
+    _SUSPEND += 1
+    try:
+        yield
+    finally:
+        _SUSPEND -= 1
+
+
+# ---------------------------------------------------------------------------
+# packed device buffer
+#
+# The live buffer is TWO flat arrays ({"i32": (Ni,), "f32": (Nf,)}), not
+# one array per counter: the buffer rides every engine_step dispatch as
+# a donated argument, and at serving burst sizes of 1-4 steps the
+# per-dispatch flatten/donate cost of a dozen tiny arrays is itself a
+# measurable slice of the burst wall. Each counter owns a static slice
+# of its kind's array (registry order).
+# ---------------------------------------------------------------------------
+
+def _layout() -> Dict[str, Tuple[str, int, int]]:
+    """name -> (kind, offset, size) into the packed per-kind arrays."""
+    out: Dict[str, Tuple[str, int, int]] = {}
+    used = {"i32": 0, "f32": 0}
+    for name, spec in COUNTERS.items():
+        n = 1
+        for d in spec.shape:
+            n *= d
+        out[name] = (spec.kind, used[spec.kind], n)
+        used[spec.kind] += n
+    return out
+
+
+_LAYOUT = _layout()
+_SIZES = {kind: sum(n for k, _, n in _LAYOUT.values() if k == kind)
+          for kind in _DTYPES}
+
+
+def init_counters() -> Dict[str, jnp.ndarray]:
+    """Fresh zeroed device counter buffer (the engine_step carry)."""
+    return {kind: jnp.zeros(_SIZES[kind], dtype)
+            for kind, dtype in _DTYPES.items()}
+
+
+def ctr_get(ctr: Dict[str, jnp.ndarray], name: str) -> jnp.ndarray:
+    """Counter ``name``'s view of the packed buffer (registry shape)."""
+    kind, off, n = _LAYOUT[name]
+    return ctr[kind][off:off + n].reshape(COUNTERS[name].shape)
+
+
+def ctr_add(ctr: Dict[str, jnp.ndarray], name: str, value,
+            idx: int = 0) -> Dict[str, jnp.ndarray]:
+    """Pure scatter-add of a (possibly traced) scalar into counter
+    ``name`` (element ``idx`` for vector counters, e.g. a histogram
+    bucket). Static offsets — trace-safe inside the burst scan."""
+    kind, off, n = _LAYOUT[name]
+    assert 0 <= idx < n, (name, idx)
+    v = jnp.asarray(value, _DTYPES[kind])
+    return dict(ctr, **{kind: ctr[kind].at[off + idx].add(v)})
+
+
+def unpack_counters(host: Dict[str, "jnp.ndarray"]) -> Dict[str, object]:
+    """Split a drained (host-side) packed buffer into per-name arrays."""
+    if not host:
+        return {}
+    out = {}
+    for name, (kind, off, n) in _LAYOUT.items():
+        out[name] = host[kind][off:off + n].reshape(COUNTERS[name].shape)
+    return out
+
+
+def fold(ctr: Dict[str, jnp.ndarray], sink: CounterSink
+         ) -> Dict[str, jnp.ndarray]:
+    """Add a sink's sums into the counter carry (pure, trace-safe)."""
+    out = dict(ctr)
+    for name, v in sink.sums.items():
+        kind, off, _ = _LAYOUT[name]
+        out[kind] = out[kind].at[off].add(v.astype(_DTYPES[kind]))
+    return out

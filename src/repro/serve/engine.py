@@ -81,6 +81,9 @@ from repro.qtensor import tree_has_qtensor
 from repro.kvcache.paged import (
     PagedKVConfig, copy_page, gather_layer, kv_layer_count,
     page_bytes_all_layers, scatter_span)
+from repro.obs import DeviceCounters, ObsConfig, Tracer, init_counters
+from repro.obs import runtime as obs_rt
+from repro.obs.trace import ENGINE_TID
 from repro.serve.metrics import EngineMetrics
 from repro.serve.request import Request, RequestStatus
 from repro.serve.sampling import greedy_tokens, request_keys, sample_tokens
@@ -116,6 +119,12 @@ class EngineConfig:
     # dense scratch state are replicated across the mesh.
     mesh: Optional[object] = None   # jax.sharding.Mesh, 1-D, axis "tp"
     tp_axis: str = "tp"
+    # ---- observability (repro.obs; everything defaults OFF) ----
+    # obs.device_metrics threads a counter dict through the engine_step
+    # carry (accumulated INSIDE the jit'd burst, drained in bulk every
+    # obs.drain_every bursts — the decode hot path stays zero-sync);
+    # obs.trace records request/dispatch spans + a jsonl event log.
+    obs: Optional[ObsConfig] = None
 
 
 class Engine:
@@ -134,6 +143,13 @@ class Engine:
         self.ecfg = ecfg
         self.scales = dict(scales) if scales else {}
         self._audio = cfg.family == "audio"
+        # ---- observability (all off by default; see repro.obs) ----
+        self._obs: Optional[ObsConfig] = ecfg.obs
+        self._obs_counters = bool(ecfg.obs and ecfg.obs.device_metrics)
+        self.tracer = Tracer(enabled=bool(ecfg.obs and ecfg.obs.trace))
+        self.counters = DeviceCounters()
+        self._drift = None              # optional obs.drift.DriftMonitor
+        self._runnable = 0              # slots with work available (obs)
         # QTensor-packed weight blocks carry their scales inside the leaf
         # (repro.qtensor) — they need the DequantContext even when no
         # path-keyed scales dict is supplied
@@ -246,15 +262,40 @@ class Engine:
         def deactivate_fn(slots, slot):
             return dict(slots, active=slots["active"].at[slot].set(False))
 
-        def engine_step_fn(params, scales, state, tok, out, slots, steps,
-                           mode):
+        def engine_step_fn(params, scales, state, tok, out, slots, ctr,
+                           steps, mode, stats=False):
             ctx = make_ctx(scales)
             active, nwritten = slots["active"], slots["nwritten"]
             act_tok = active.reshape((-1,) + (1,) * (tok.ndim - 1))
+            # ``ctr`` is {} when device metrics are off — the branch is
+            # static, so the off path compiles to the exact old graph.
+            # ``stats`` (static too) selects the burst flavor: sampled
+            # bursts additionally build the element-wise clip-stat
+            # reductions (ObsConfig.stats_every cadence).
+            with_ctr = bool(ctr)
 
             def body(carry, i):
-                state, tok = carry
-                logits, new = decode_step(params, state, tok, cfg, ctx=ctx)
+                state, tok, ctr = carry
+                if with_ctr:
+                    # kernel-site emits (clip rates, call counts) land in
+                    # the sink while decode_step traces; fold merges the
+                    # traced sums into the scan carry — all on device
+                    sink = obs_rt.CounterSink(stats=stats)
+                    with obs_rt.collecting(sink):
+                        logits, new = decode_step(params, state, tok, cfg,
+                                                  ctx=ctx)
+                    ctr = obs_rt.fold(ctr, sink)
+                    ctr = obs_rt.ctr_add(ctr, "decode_steps", 1)
+                    # per-step emitted-token count: mirrors the post-scan
+                    # budget clamp exactly (parity-tested vs the host
+                    # mirror in tests/test_obs.py)
+                    emitted = active & (nwritten + i < slots["budget"])
+                    ctr = obs_rt.ctr_add(
+                        ctr, "decode_tokens",
+                        jnp.sum(emitted.astype(jnp.int32)))
+                else:
+                    logits, new = decode_step(params, state, tok, cfg,
+                                              ctx=ctx)
                 # inactive slots: freeze position (cache/ssm writes are
                 # harmless — fully overwritten at backfill)
                 new = new._replace(pos=jnp.where(active, new.pos, state.pos))
@@ -271,10 +312,15 @@ class Engine:
                                         slots["top_ks"], slots["top_ps"],
                                         skip_filters=(mode == "nofilter"))
                 tok = jnp.where(act_tok, nxt[:, None], tok)
-                return (new, tok), nxt
+                return (new, tok, ctr), nxt
 
-            (state, tok), ys = jax.lax.scan(
-                body, (state, tok), jnp.arange(steps))
+            (state, tok, ctr), ys = jax.lax.scan(
+                body, (state, tok, ctr), jnp.arange(steps))
+            if with_ctr:
+                ctr = obs_rt.ctr_add(ctr, "decode_bursts", 1)
+                bucket = min(max(steps.bit_length() - 1, 0),
+                             obs_rt.HIST_BUCKETS - 1)    # steps is static
+                ctr = obs_rt.ctr_add(ctr, "burst_size_hist", 1, idx=bucket)
             # one scatter per burst (a per-step scatter in the scan body
             # costs ~2x the whole decode step on CPU): ys is (steps, S
             # [, CB]). Inactive slots and columns past a slot's token
@@ -288,16 +334,18 @@ class Engine:
             out = out.at[rows, cols].set(ys, mode="drop")
             slots = dict(slots, nwritten=jnp.minimum(
                 nwritten + steps * active, slots["budget"]))
-            return state, tok, out, slots
+            return state, tok, out, slots, ctr
 
         self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
         self._sample_first = jax.jit(sample_first_fn)
         self._insert = jax.jit(insert_fn, donate_argnums=(0, 3, 5, 6))
         self._deactivate = jax.jit(deactivate_fn, donate_argnums=(0,))
         self._engine_step = jax.jit(engine_step_fn,
-                                    static_argnames=("steps", "mode"),
-                                    donate_argnums=(2, 3, 4, 5))
+                                    static_argnames=("steps", "mode",
+                                                     "stats"),
+                                    donate_argnums=(2, 3, 4, 5, 6))
         self._warmed_modes: set = set()
+        self._make_ctx = make_ctx       # reused by obs.drift's probes
 
         if self._paged:
             nl = self._n_kv_layers
@@ -437,6 +485,23 @@ class Engine:
             "budget": jnp.zeros(S, jnp.int32),
         })
 
+    def _fresh_counters(self) -> Dict[str, jnp.ndarray]:
+        """Device counter carry for engine_step: the FULL registry (the
+        scan-carry structure must never change) when device metrics are
+        on, ``{}`` (compiles to the unobserved graph) when off."""
+        if not self._obs_counters:
+            return {}
+        return self._put_repl(init_counters())
+
+    def attach_drift(self, monitor) -> None:
+        """Register a ``repro.obs.drift.DriftMonitor`` — its cadenced tap
+        runs after decode bursts (never inside the dispatch)."""
+        self._drift = monitor
+
+    def _jit_cache(self, name: str) -> Optional[int]:
+        from repro.obs.gauges import _jit_cache_size
+        return _jit_cache_size(getattr(self, name))
+
     @staticmethod
     def _mode_for(sampling_params) -> str:
         """The cheapest sampler specialization that serves these requests
@@ -470,12 +535,17 @@ class Engine:
         tok = self._put_repl(jnp.zeros(self._tok_shape, jnp.int32))
         out = self._put_repl(jnp.zeros(self._out_shape, jnp.int32))
         slots = self._fresh_slot_table()
+        ctr = self._fresh_counters()        # scratch: discarded after warmup
+        # with counters on, warm BOTH burst flavors (plain + sampled
+        # clip-stats) so the stats_every cadence never compiles mid-run
+        stats_variants = (False, True) if ctr else (False,)
         for mode in modes:
             k = 1
             while k <= ecfg.decode_burst:
-                state, tok, out, slots = self._engine_step(
-                    self.params, self.scales, state, tok, out, slots,
-                    steps=k, mode=mode)
+                for stats in stats_variants:
+                    state, tok, out, slots, ctr = self._engine_step(
+                        self.params, self.scales, state, tok, out, slots,
+                        ctr, steps=k, mode=mode, stats=stats)
                 k *= 2
             self._warmed_modes.add(mode)
         cb = self._tok_shape[2:]
@@ -562,17 +632,36 @@ class Engine:
         if self._paged:
             self.metrics.kv_total_pages = self._pcfg.num_pages
             self.metrics.kv_page_bytes = self._page_bytes
+        self._ctr = self._fresh_counters()
+        self._burst_i = 0
+        run_sid = self.tracer.begin("run", cat="engine", tid=ENGINE_TID) \
+            if self.tracer.enabled else None
         finished: List[Request] = []
 
         pending = collections.deque(
             sorted(requests, key=lambda r: (r.arrival_time, r.id)))
 
         while pending or self._active.any():
+            # slots that HAVE work this iteration: active + arrived-but-
+            # waiting requests (the honest occupancy denominator — idle
+            # tail steps where nothing could run are not a scheduling
+            # failure; see EngineMetrics.summary)
+            n_arrived = 0
+            for r in pending:
+                if r.arrival_time > self._now():
+                    break
+                n_arrived += 1
+            self._runnable = min(S, int(self._active.sum()) + n_arrived)
             # ---- admission: fill free slots with arrived requests ----
             while (pending and not self._active.all()
                    and pending[0].arrival_time <= self._now()):
                 if not self._admit(pending[0]):
-                    break                        # KV pool full: decode on
+                    # KV pool full: defer, keep decoding to free pages
+                    self.metrics.record_deferral()
+                    self.tracer.event("admission_deferred",
+                                      req=pending[0].id,
+                                      pages_free=self._alloc.available())
+                    break
                 pending.popleft()
                 self._harvest(finished)          # max_new_tokens == 1
             if not self._active.any():
@@ -608,6 +697,13 @@ class Engine:
             self._burst(max(k, 1))
             self._harvest(finished)
 
+        if self._obs_counters:
+            self.counters.drain(self._ctr)       # final end-of-run drain
+            self.tracer.event("drain", n=self.counters.n_drains)
+        if run_sid is not None:
+            self.tracer.end(run_sid, {"requests": len(finished),
+                                      "deferrals":
+                                      self.metrics.admission_deferrals})
         finished.sort(key=lambda r: r.id)
         return finished, self.metrics
 
@@ -675,22 +771,38 @@ class Engine:
             shared_len, partial_src, row, gather_ids = plan
         req.slot, req.status = slot, RequestStatus.PREFILLING
         req.t_admitted = self._now()
+        tr = self.tracer
+        rtid = tr.request_tid(req.id) if tr.enabled else ENGINE_TID
+        if tr.enabled:
+            # the request's lifecycle span (one per tid row in Perfetto);
+            # closed at eviction in _harvest
+            req.obs_span = tr.begin(f"request {req.id}", cat="request",
+                                    tid=rtid,
+                                    args={"prompt_len": req.prompt_len})
+        admit_sid = tr.begin("admit", cat="admit", tid=rtid) \
+            if tr.enabled else None
 
         pstate = self._put_repl(init_decode_state(self.cfg, 1, ecfg.max_len))
         if shared_len > 0:
             # prefix reuse: seed the scratch cache from the shared pages
             # and prefill only the suffix (the engine's prefill saving)
-            kvd = self._gather(self._state, self._pad_row(gather_ids),
-                               jnp.int32(shared_len))
+            with tr.span("gather_prefix", cat="admit", tid=rtid,
+                         args={"shared_len": shared_len}):
+                kvd = self._gather(self._state, self._pad_row(gather_ids),
+                                   jnp.int32(shared_len))
             pstate = pstate._replace(pos=jnp.int32(shared_len), kv=kvd)
         prompt = jnp.asarray(req.prompt)[None]               # (1, P[, CB])
         logits = None
         for lo in range(shared_len, req.prompt_len, ecfg.prefill_chunk):
             chunk = prompt[:, lo:lo + ecfg.prefill_chunk]
             t0 = time.perf_counter()
+            sid = tr.begin("prefill_chunk", cat="prefill", tid=rtid) \
+                if tr.enabled else None
             logits, pstate = self._prefill(self.params, self.scales,
                                            pstate, chunk)
             jax.block_until_ready(logits)
+            if sid is not None:
+                tr.end(sid, {"tokens": int(chunk.shape[1]), "lo": lo})
             self.metrics.record_prefill(time.perf_counter() - t0,
                                         chunk.shape[1])
             if self.ecfg.clock == "steps":
@@ -750,6 +862,10 @@ class Engine:
         self._budget[slot] = req.max_new_tokens
         req.t_first_token = self._now()
         req.status = RequestStatus.RUNNING
+        if admit_sid is not None:
+            tr.end(admit_sid, {"slot": slot, "shared_len": shared_len})
+        tr.event("admit", req=req.id, slot=slot, shared_len=shared_len,
+                 prompt_len=req.prompt_len)
         return True
 
     # ------------------------------------------------------------------
@@ -791,11 +907,24 @@ class Engine:
         exact = self._mode_for([self._slots[b].sampling
                                 for b in np.flatnonzero(self._active)])
         mode = exact if exact in self._warmed_modes else self._run_mode
+        tr = self.tracer
+        n_active = int(self._active.sum())
+        c0 = self._jit_cache("_engine_step") if tr.enabled else None
+        sid = tr.begin("decode_burst", cat="decode", tid=ENGINE_TID) \
+            if tr.enabled else None
+        # sampled clip-stat cadence: every stats_every-th burst carries
+        # the element-wise saturation reductions; the rest run the cheap
+        # counter graph (scalar call/token adds only)
+        stats = bool(self._ctr) and \
+            self._burst_i % self._obs.stats_every == 0
         t0 = time.perf_counter()
-        self._state, self._tok, self._out, self._dslots = self._engine_step(
+        (self._state, self._tok, self._out, self._dslots,
+         self._ctr) = self._engine_step(
             self.params, self.scales, self._state, self._tok, self._out,
-            self._dslots, steps=steps, mode=mode)
-        jax.block_until_ready(self._tok)
+            self._dslots, self._ctr, steps=steps, mode=mode, stats=stats)
+        # the wall-timing sync IS the burst-latency measurement
+        jax.block_until_ready(self._tok)  # rpr-ok: RPR008 timed sync — the burst latency metric is this wait
+        wall = time.perf_counter() - t0
         # host mirror of the device-side clamp (tokens past a slot's
         # budget were dropped)
         before = self._nwritten[self._active]
@@ -803,11 +932,27 @@ class Engine:
         self._nwritten[self._active] = after
         if self._paged:
             self._pos_h[self._active] += steps
-        self.metrics.record_burst(time.perf_counter() - t0, steps,
-                                  int(self._active.sum()),
-                                  n_tokens=int((after - before).sum()))
+        n_tokens = int((after - before).sum())
+        if sid is not None:
+            c1 = self._jit_cache("_engine_step")
+            tr.end(sid, {"steps": steps, "mode": mode,
+                         "n_active": n_active, "tokens": n_tokens,
+                         "tp": self._tp,
+                         "compiled": bool(c1 is not None and c1 != c0)})
+        self.metrics.record_burst(wall, steps, n_active,
+                                  n_tokens=n_tokens,
+                                  n_runnable=max(n_active, self._runnable))
         if self.ecfg.clock == "steps":
             self._ticks += steps
+        self._burst_i += 1
+        de = self._obs.drain_every if self._obs is not None else 0
+        if self._obs_counters and de and self._burst_i % de == 0:
+            # cadenced bulk drain — the ONE audited host-transfer site on
+            # the serving loop (see obs.counters)
+            with tr.span("drain", cat="obs", tid=ENGINE_TID):
+                self.counters.drain(self._ctr)
+        if self._drift is not None:
+            self._drift.observe(steps)
 
     # ------------------------------------------------------------------
     def _harvest(self, finished: List[Request]) -> None:
@@ -838,6 +983,11 @@ class Engine:
             req.status = RequestStatus.FINISHED
             self.metrics.record_request(req)
             finished.append(req)
+            tr = self.tracer
+            evict_sid = tr.begin("evict", cat="evict",
+                                 tid=tr.request_tid(req.id),
+                                 args={"slot": int(b)}) \
+                if tr.enabled else None
             self._slots[b] = None          # slot freed: backfilled by the
             self._active[b] = False        # admission loop next iteration
             self._dslots = self._deactivate(self._dslots, jnp.int32(b))
@@ -852,3 +1002,10 @@ class Engine:
                 self._rows[b] = []
                 self._pos_h[b] = self._limit_h[b] = 0
                 self._state = self._clear_slot(self._state, jnp.int32(b))
+            if evict_sid is not None:
+                tr.end(evict_sid)
+                span = getattr(req, "obs_span", None)
+                if span is not None:
+                    tr.end(span, {"tokens": int(len(toks))})
+            tr.event("finish", req=req.id, slot=int(b),
+                     tokens=int(len(toks)))

@@ -34,8 +34,10 @@ class EngineMetrics:
     decode_tokens: int = 0
     decode_steps: int = 0
     occupied_slot_steps: int = 0
+    runnable_slot_steps: int = 0      # slots that HAD work, per step
     n_finished: int = 0
     prefill_dispatches: int = 0
+    admission_deferrals: int = 0      # admissions bounced on a full pool
     # paged KV cache (zeroed / None for the dense cache)
     kv_total_pages: int = 0
     kv_page_bytes: float = 0.0        # HBM bytes per page, all layers
@@ -50,19 +52,30 @@ class EngineMetrics:
         self.prefill_dispatches += 1
 
     def record_burst(self, wall_dt: float, steps: int, n_active: int,
-                     n_tokens: Optional[int] = None) -> None:
+                     n_tokens: Optional[int] = None,
+                     n_runnable: Optional[int] = None) -> None:
         """``n_tokens`` is the USEFUL token count (bursts may overshoot a
-        nearly-finished slot; those writes are dropped)."""
+        nearly-finished slot; those writes are dropped). ``n_runnable``
+        is how many slots COULD have held work during this burst (active
+        + arrived-but-waiting, capped at max_slots); it defaults to
+        max_slots, which keeps the legacy all-slots denominator."""
         if n_tokens is None:
             n_tokens = steps * n_active
+        if n_runnable is None:
+            n_runnable = self.max_slots
         self.decode_s += wall_dt
         self.decode_tokens += n_tokens
         self.decode_steps += steps
         self.occupied_slot_steps += n_tokens
+        self.runnable_slot_steps += steps * min(n_runnable, self.max_slots)
         if n_tokens and steps:
             # per-token latency attributed evenly across the burst,
             # weighted by the tokens it actually produced
             self.token_lat_s.extend([wall_dt / steps] * n_tokens)
+
+    def record_deferral(self) -> None:
+        """An arrived request could not be admitted (KV pool full)."""
+        self.admission_deferrals += 1
 
     def record_request(self, req) -> None:
         self.n_finished += 1
@@ -102,8 +115,17 @@ class EngineMetrics:
             "prefill_tokens_per_s": (self.prefill_tokens / self.prefill_s
                                      if self.prefill_s > 0 else None),
             "prefill_dispatches": self.prefill_dispatches,
-            "slot_occupancy": (self.occupied_slot_steps / slot_steps
-                               if slot_steps else None),
+            # occupancy over slots that HAD work (idle tail steps where
+            # no request was waiting are not a scheduling failure);
+            # slot_occupancy_raw keeps the all-slots denominator
+            "slot_occupancy": (
+                self.occupied_slot_steps / self.runnable_slot_steps
+                if self.runnable_slot_steps else
+                (self.occupied_slot_steps / slot_steps
+                 if slot_steps else None)),
+            "slot_occupancy_raw": (self.occupied_slot_steps / slot_steps
+                                   if slot_steps else None),
+            "admission_deferrals": self.admission_deferrals,
             # paged KV cache (None when the dense cache is in use)
             "kv_peak_pages": (self.kv_peak_pages
                               if self.kv_total_pages else None),

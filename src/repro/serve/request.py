@@ -51,6 +51,7 @@ class Request:
     t_admitted: Optional[float] = None
     t_first_token: Optional[float] = None
     t_finished: Optional[float] = None
+    obs_span: Optional[int] = None       # open tracer span handle (obs)
 
     def __post_init__(self):
         # fail at construction with a nameable error instead of a shape
