@@ -1,9 +1,11 @@
-"""Shared benchmark utilities: testbed training + CSV/JSON emission."""
+"""Shared benchmark utilities: testbed training, steady-state timing,
+CSV/JSON emission, and the in-process record registry the bench-history
+trajectory writer (benchmarks/history.py) snapshots."""
 from __future__ import annotations
 
 import json
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +14,13 @@ import numpy as np
 from repro.data.synthetic import ClassifyConfig, batched, classify_dataset
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
+# every emit()/emit_json() lands here so a bench module can snapshot
+# its own metrics for the trajectory file without re-plumbing returns
+_RECORDS: List[Tuple[str, float, str]] = []
+
 
 def emit(name: str, us_per_call: float, derived: str) -> str:
+    _RECORDS.append((name, float(us_per_call), derived))
     line = f"{name},{us_per_call:.2f},{derived}"
     print(line, flush=True)
     return line
@@ -28,16 +35,52 @@ def emit_json(name: str, payload: Dict) -> str:
     return line
 
 
-def timeit(fn: Callable, iters: int = 10, warmup: int = 2) -> float:
-    """Median wall time per call in microseconds."""
+def records(prefix: str = "") -> List[Tuple[str, float, str]]:
+    """Snapshot of the emitted CSV records (optionally name-filtered)."""
+    return [r for r in _RECORDS if r[0].startswith(prefix)]
+
+
+def steady_median(samples: Sequence[float], discard: int = 1) -> float:
+    """Median after dropping the first ``discard`` samples — the
+    steady-state report (first iterations carry cache/allocator warmup
+    that the median of a short run does not wash out)."""
+    xs = list(samples)
+    if len(xs) > discard + 1:
+        xs = xs[discard:]
+    return float(np.median(xs))
+
+
+def timeit_stats(fn: Callable, iters: int = 10, warmup: int = 2,
+                 repeats: int = 1, discard: int = 0) -> Dict[str, float]:
+    """Steady-state timing of ``fn`` with full dispersion info.
+
+    ``warmup`` calls compile and populate caches; then ``repeats``
+    rounds of ``iters`` synced samples each are collected, the first
+    ``discard`` samples of every round dropped, and robust stats taken
+    over the pooled remainder: {median_us, min_us, mad_us, n}.
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn())
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    pooled: List[float] = []
+    for _ in range(max(repeats, 1)):
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        pooled.extend(ts[discard:] if len(ts) > discard else ts)
+    med = float(np.median(pooled))
+    return {"median_us": med * 1e6,
+            "min_us": float(np.min(pooled)) * 1e6,
+            "mad_us": float(np.median(np.abs(np.array(pooled) - med))) * 1e6,
+            "n": float(len(pooled))}
+
+
+def timeit(fn: Callable, iters: int = 10, warmup: int = 2,
+           repeats: int = 1, discard: int = 0) -> float:
+    """Steady-state median wall time per call in microseconds."""
+    return timeit_stats(fn, iters=iters, warmup=warmup, repeats=repeats,
+                        discard=discard)["median_us"]
 
 
 def train_cnn_testbed(seed: int = 0, batchnorm: bool = True, steps: int = 300,

@@ -1,0 +1,81 @@
+"""Bench-run trajectory recording + the CI regression annotation step.
+
+Every serve_bench / kernels_bench run appends one schema-versioned
+record to ``BENCH_<name>.json`` under ``$BENCH_HISTORY_DIR`` (default
+``experiments/bench_history/``), then the noise-aware checker
+(``repro.obs.perf.history``) compares it against the stored trajectory.
+On CPU runners the gate is warn-only: problems print as GitHub
+``::warning`` annotations and the exit code stays 0 unless ``--strict``.
+
+  PYTHONPATH=src:. python benchmarks/history.py check --bench serve_bench
+  PYTHONPATH=src:. python benchmarks/history.py show  --bench serve_bench
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Mapping, Optional
+
+from repro.obs.perf.history import (
+    append_run, check_regression, load_history)
+
+_DEFAULT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "..", "experiments", "bench_history")
+
+
+def history_dir() -> str:
+    return os.environ.get("BENCH_HISTORY_DIR", _DEFAULT_DIR)
+
+
+def trajectory_path(bench: str) -> str:
+    return os.path.join(history_dir(), f"BENCH_{bench}.json")
+
+
+def record_and_check(bench: str, metrics: Mapping[str, float],
+                     meta: Optional[Mapping[str, Any]] = None
+                     ) -> List[Dict[str, Any]]:
+    """Append one run to the bench's trajectory, run the regression
+    checker against its predecessors, print any findings as warnings
+    (never raises — CPU-runner noise must not fail a bench)."""
+    path = trajectory_path(bench)
+    append_run(path, bench, metrics, meta=meta)
+    problems = check_regression(load_history(path))
+    for p in problems:
+        print(f"::warning title=bench regression ({bench})::"
+              f"{p['metric']}={p['value']:.4g} vs baseline "
+              f"{p['baseline']:.4g} (band ±{p['band']:.4g}, "
+              f"n={p['n_prior']}, {p['direction']}-is-better)", flush=True)
+    n = len(load_history(path)["runs"])
+    print(f"history: {bench} run {n} appended -> {path} "
+          f"({len(problems)} regression warning(s))", flush=True)
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("cmd", choices=("check", "show"))
+    ap.add_argument("--bench", required=True)
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on regressions (device runners)")
+    a = ap.parse_args()
+    hist = load_history(trajectory_path(a.bench))
+    if a.cmd == "show":
+        try:
+            print(json.dumps(hist, indent=1))
+        except BrokenPipeError:  # `show | head` closing the pipe is fine
+            os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        return 0
+    problems = check_regression(hist)
+    for p in problems:
+        print(f"::warning title=bench regression ({a.bench})::"
+              f"{p['metric']}={p['value']:.4g} vs baseline "
+              f"{p['baseline']:.4g} (band ±{p['band']:.4g})", flush=True)
+    print(f"{a.bench}: {len(hist['runs'])} run(s) in trajectory, "
+          f"{len(problems)} regression warning(s)")
+    return 1 if (a.strict and problems) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

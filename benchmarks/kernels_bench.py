@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks import history
+from benchmarks.common import emit, records, timeit
 from repro.core import SensitivityReport, sample_packed
 from repro.kernels import ref
 from repro.quant.policy import QuantPolicy
@@ -120,6 +121,13 @@ def run() -> None:
          str(256 * 512 + 512 * 256 + 256 * 256 * 4 + 256 * 256 * 4))
     emit("kernel.flash_attention.vmem_tile_bytes", 0.0,
          str(512 * 128 * 2 * 3 + 512 * 512 * 4 + 512 * 128 * 4))
+
+    # trajectory: every kernel.*/fit.* wall-time record from this run
+    # (`_us` suffix marks them lower-is-better for the regression gate)
+    metrics = {f"{name}_us": us
+               for name, us, _ in records("kernel.") + records("fit.")
+               if us > 0.0}
+    history.record_and_check("kernels_bench", metrics)
 
 
 if __name__ == "__main__":

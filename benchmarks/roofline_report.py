@@ -1,23 +1,68 @@
-"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline table (EXPERIMENTS.md §Roofline).
 
-Reads experiments/dryrun/*.json and emits one CSV row per cell with the
-three terms, bottleneck, and MODEL_FLOPS/HLO_FLOPs ratio. Run the dry-run
-sweep first (python -m repro.launch.dryrun --all --both-meshes)."""
+Two sources, best-available:
+
+  * dry-run artifacts — ``experiments/dryrun/*.json`` from the XLA
+    cost-analysis sweep (``python -m repro.launch.dryrun``): one CSV
+    row per (arch, shape, mesh) cell with measured-HLO terms;
+  * analytic fallback — when no artifacts exist, the QTensor cost
+    model (``repro.obs.perf.cost``) composes closed-form bytes/ops for
+    the smoke serving arch at W8A8 and W4A8 (+ int8 paged KV) into the
+    same step-time/bottleneck rows.  No sweep required, so the table
+    is never silently empty (this is the path CI exercises).
+"""
 from __future__ import annotations
 
 import glob
 import json
 import os
 
-from benchmarks.common import emit
+try:
+    from benchmarks.common import emit
+except ImportError:                       # run as benchmarks/<file>.py
+    from common import emit
 
 DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def _analytic() -> None:
+    """Cost-model roofline of the smoke serving arch, one row per
+    weight width: per-decode-step bytes/ops and the bound."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import init_params
+    from repro.obs.perf.cost import roofline, site_costs_from_tree
+    from repro.serve import quantize_params
+
+    cfg = dataclasses.replace(smoke_config("internlm2_1_8b"),
+                              scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    for bits in (8, 4):
+        qp, _ = quantize_params(params, bits, group_size=8)
+        costs = site_costs_from_tree(qp, 8, context=96, kv_bits=8,
+                                     page_size=16, cfg=cfg)
+        r = roofline(costs)["totals"]
+        bound = ("memory" if r["memory_bound_sites"]
+                 >= r["compute_bound_sites"] else "compute")
+        emit(f"roofline.analytic.{cfg.name}.w{bits}a8kv8",
+             r["step_time_s"] * 1e6,
+             f"bytes={r['bytes']:.0f};int_ops={r['int_ops']:.3g};"
+             f"fp_ops={r['fp_ops']:.3g};bottleneck={bound};"
+             f"mem_sites={r['memory_bound_sites']};"
+             f"compute_sites={r['compute_bound_sites']}")
+    emit("roofline.cells_ok", 0.0, "2 (analytic)")
 
 
 def run() -> None:
     files = sorted(glob.glob(os.path.join(DRY, "*.json")))
     if not files:
-        emit("roofline.missing", 0.0, "run repro.launch.dryrun first")
+        emit("roofline.dryrun_missing", 0.0,
+             "no experiments/dryrun artifacts; using the analytic "
+             "QTensor cost model (repro.obs.perf.cost)")
+        _analytic()
         return
     n_ok = 0
     for f in files:

@@ -266,13 +266,13 @@ def _smoke_engine(variant: str, mesh=None):
     else:
         cfg = dc.replace(cfg, scan_layers=False)
         params = init_params(cfg, jax.random.key(0))
-        if variant in ("qtensor", "paged", "sharded", "obs"):
+        if variant in ("qtensor", "paged", "sharded", "obs", "perf"):
             params, scales = quantize_params(params, 4, group_size=8)
             ecfg["int8_compute"] = True
         elif variant == "int8":
             params, scales = quantize_params_int8(params, 8)
             ecfg["int8_compute"] = True
-        if variant in ("paged", "sharded", "obs"):
+        if variant in ("paged", "sharded", "obs", "perf"):
             ecfg.update(kv_cache="paged", page_size=8)
         if variant == "sharded":
             ecfg["mesh"] = mesh
@@ -282,6 +282,14 @@ def _smoke_engine(variant: str, mesh=None):
             # callbacks / transfers (RPR103) — drains happen outside it
             from repro.obs import ObsConfig
             ecfg["obs"] = ObsConfig(device_metrics=True)
+        if variant == "perf":
+            # full profiling stack on: device-timed dispatch spans +
+            # tracing + counters.  All timing is host-side around the
+            # audited syncs — the traced decode/prefill graphs must stay
+            # identical to the obs variant (no host callbacks, RPR103)
+            from repro.obs import ObsConfig
+            ecfg["obs"] = ObsConfig(trace=True, device_metrics=True,
+                                    perf=True, time_every=1)
     return Engine(params, cfg, EngineConfig(**ecfg), scales=scales)
 
 
@@ -330,7 +338,7 @@ def collect_targets(sharded: Optional[bool] = None) -> Tuple[
 
     notes: List[Finding] = []
     targets = _kernel_targets()
-    for variant in ("dense", "qtensor", "int8", "paged", "obs"):
+    for variant in ("dense", "qtensor", "int8", "paged", "obs", "perf"):
         targets.extend(_engine_target_pair(variant))
     want_sharded = (len(jax.devices()) >= 2) if sharded is None else sharded
     if want_sharded:

@@ -11,11 +11,17 @@ Four layers over the continuous-batching engine:
      sharing, per-shard HBM, jit-cache churn, Prometheus text format;
   4. FIT drift monitoring (``drift``) — online logit KL + activation-
      range drift vs the calibrated SensitivityReport, closing the loop
-     between FIT's offline prediction and the live system.
+     between FIT's offline prediction and the live system;
+  5. performance profiling (``perf``) — device-timed dispatch spans
+     (host-side, around the audited syncs), the analytic QTensor cost
+     model, per-site FIT/bytes/ms attribution, and bench-history
+     regression gating. See README "Performance profiling".
 
 ``repro.obs.drift`` imports the model stack, which imports this
 package's ``runtime`` — import it as ``repro.obs.drift`` directly
-(kept out of this namespace to stay cycle-free).
+(kept out of this namespace to stay cycle-free); ``repro.obs.perf``
+is likewise imported directly (its cost/attrib modules reach the
+serve/quant stacks lazily).
 """
 from repro.obs.config import ObsConfig
 from repro.obs.counters import DeviceCounters

@@ -21,6 +21,9 @@ class ObsConfig:
     #                               samples (act_sat / fq_clip reductions);
     #                               1 = every burst. Exact i32 counters
     #                               (tokens/steps/bursts) are never sampled.
+    perf: bool = False            # device-timed dispatch spans (obs.perf)
+    time_every: int = 1           # per-kind cadence of device-track trace
+    #                               mirroring; aggregation sees every sample
     trace_path: Optional[str] = None    # Chrome trace JSON output
     events_path: Optional[str] = None   # structured jsonl log output
     metrics_file: Optional[str] = None  # Prometheus text snapshot output
@@ -28,10 +31,12 @@ class ObsConfig:
 
     @property
     def enabled(self) -> bool:
-        return self.trace or self.device_metrics
+        return self.trace or self.device_metrics or self.perf
 
     def __post_init__(self):
         if self.drain_every < 0:
             raise ValueError("drain_every must be >= 0")
         if self.stats_every < 1:
             raise ValueError("stats_every must be >= 1")
+        if self.time_every < 1:
+            raise ValueError("time_every must be >= 1")

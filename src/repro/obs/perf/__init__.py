@@ -1,0 +1,40 @@
+"""repro.obs.perf — performance observability (README "Performance
+profiling").
+
+Three views of the serving hot path, joined per site:
+
+  measured  (``timing``)  — device-timed dispatch spans: the engine's
+      audited ``block_until_ready`` syncs feed a host-side aggregator
+      with a jit-cache-aware compile-vs-execute split, mirrored onto a
+      "device" track of the Chrome trace;
+  predicted (``cost``)    — closed-form bytes-moved / op counts per
+      kernel from the real packed layouts (qmm, paged_attention,
+      int8_matmul), composed into a per-site roofline;
+  attributed (``attrib``) — the join of both with the calibrated
+      SensitivityReport: site -> (FIT score, predicted bytes,
+      measured ms share) — the measured quality-vs-cost Pareto.
+
+``history`` stores schema-versioned bench trajectories and runs the
+noise-aware regression gate over them.
+
+``cost``/``attrib`` reach into the model stack lazily (inside
+functions); this namespace itself stays import-cycle-free the same way
+``repro.obs`` does.
+"""
+from repro.obs.perf.attrib import SiteRow, attribute, format_table, site_fit
+from repro.obs.perf.cost import (
+    HBM_BW, INT8_OPS, PEAK_FLOPS, KernelCost, fp_matmul_cost,
+    int8_matmul_cost, kv_pool_bytes, paged_attention_cost, qmm_cost,
+    qmm_weight_bytes, roofline, site_costs_from_tree)
+from repro.obs.perf.history import (
+    HISTORY_SCHEMA, append_run, check_regression, load_history,
+    metric_direction)
+from repro.obs.perf.timing import DispatchTimer
+
+__all__ = [
+    "HBM_BW", "HISTORY_SCHEMA", "INT8_OPS", "PEAK_FLOPS", "DispatchTimer",
+    "KernelCost", "SiteRow", "append_run", "attribute", "check_regression",
+    "format_table", "fp_matmul_cost", "int8_matmul_cost", "kv_pool_bytes",
+    "load_history", "metric_direction", "paged_attention_cost", "qmm_cost",
+    "qmm_weight_bytes", "roofline", "site_costs_from_tree", "site_fit",
+]

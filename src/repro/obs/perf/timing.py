@@ -1,0 +1,94 @@
+"""Device-timed dispatch spans for the serving engine.
+
+The measurement itself is the engine's existing audited syncs: each
+prefill-chunk / decode-burst dispatch already ends in a
+``jax.block_until_ready`` carrying its ``# rpr-ok: RPR008`` audit
+marker in ``serve/engine.py`` (the burst latency metric IS that wait),
+and counter drains are timed by ``DeviceCounters``.  This module adds
+NO sync primitives and never touches the jit'd graphs — it only
+aggregates the walls the engine hands it, so a perf-off engine
+compiles and runs the exact pre-obs computation (pinned by
+``tests/test_perf.py``).
+
+Per dispatch kind the timer keeps a jit-cache-aware compile-vs-execute
+split: the engine detects a cache-miss dispatch by the jit-cache-size
+delta around the call and flags it ``compiled`` — its wall (trace +
+compile + execute) is booked to ``compile_s`` so steady-state
+``exec_s`` stays uncontaminated.  Every ``time_every``-th sample per
+kind is mirrored onto the Chrome trace's "device" track
+(``Tracer.complete`` on ``DEVICE_TID``) — the cadence knob bounds
+trace growth on long serves, aggregation always sees every sample.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.obs.trace import Tracer
+
+KINDS = ("prefill_chunk", "decode_burst", "drain")
+
+
+@dataclasses.dataclass
+class KindStats:
+    """Aggregates for one dispatch kind."""
+    count: int = 0
+    wall_s: float = 0.0
+    exec_s: float = 0.0       # steady-state (cache-hit) dispatch walls
+    compile_s: float = 0.0    # cache-miss walls: trace + compile + run
+    compiled: int = 0
+    tokens: int = 0
+    sampled: int = 0          # dispatches mirrored onto the device track
+
+
+class DispatchTimer:
+    """Host-side aggregator for device-timed dispatch samples."""
+
+    def __init__(self, time_every: int = 1):
+        if time_every < 1:
+            raise ValueError(f"time_every must be >= 1, got {time_every}")
+        self.time_every = int(time_every)
+        self.stats: Dict[str, KindStats] = {k: KindStats() for k in KINDS}
+
+    def record(self, kind: str, wall_s: float, *, tokens: int = 0,
+               compiled: bool = False, tracer: Optional[Tracer] = None,
+               args: Optional[Dict[str, Any]] = None) -> None:
+        """Book one synced dispatch wall; mirror every
+        ``time_every``-th sample per kind onto the device track."""
+        st = self.stats.setdefault(kind, KindStats())
+        st.count += 1
+        st.wall_s += wall_s
+        st.tokens += int(tokens)
+        if compiled:
+            st.compiled += 1
+            st.compile_s += wall_s
+        else:
+            st.exec_s += wall_s
+        if (tracer is not None and tracer.enabled
+                and (st.count - 1) % self.time_every == 0):
+            st.sampled += 1
+            a: Dict[str, Any] = {"compiled": bool(compiled)}
+            if tokens:
+                a["tokens"] = int(tokens)
+            if args:
+                a.update(args)
+            end = tracer.now_us()
+            tracer.complete(f"device:{kind}", end - wall_s * 1e6,
+                            wall_s * 1e6, cat="device",
+                            tid=tracer.device_tid(), args=a)
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-kind aggregate dict (kinds with no samples omitted)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for kind, st in self.stats.items():
+            if not st.count:
+                continue
+            steady = st.count - st.compiled
+            out[kind] = {
+                "count": st.count, "wall_s": st.wall_s,
+                "exec_s": st.exec_s, "compile_s": st.compile_s,
+                "compiled": st.compiled, "tokens": st.tokens,
+                "sampled": st.sampled,
+                "mean_exec_ms": 1e3 * st.exec_s / steady if steady else 0.0,
+            }
+        return out

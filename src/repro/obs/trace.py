@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 ENGINE_TID = 0          # batch-wide spans (bursts, drains, warmup)
 _REQ_TID_BASE = 1       # request r -> tid r + 1
+DEVICE_TID = -1         # device-timing track (sampled dispatch spans)
 
 
 class Tracer:
@@ -59,6 +60,18 @@ class Tracer:
             self._name_tid(tid, f"req {int(req_id)}")
         return tid
 
+    def device_tid(self) -> int:
+        """The device-timing track (``repro.obs.perf.timing`` mirrors
+        sampled dispatch spans here, sibling to the engine thread)."""
+        if self.enabled:
+            self._name_tid(DEVICE_TID, "device")
+        return DEVICE_TID
+
+    def now_us(self) -> float:
+        """Trace-clock timestamp (µs since tracer start) — lets callers
+        that measured a duration themselves place a complete span."""
+        return self._us()
+
     # -- spans ----------------------------------------------------------
     def begin(self, name: str, cat: str = "serve", tid: int = ENGINE_TID,
               args: Optional[Dict] = None) -> Optional[int]:
@@ -93,6 +106,19 @@ class Tracer:
             yield sid
         finally:
             self.end(sid)
+
+    def complete(self, name: str, ts_us: float, dur_us: float,
+                 cat: str = "device", tid: int = DEVICE_TID,
+                 args: Optional[Dict] = None) -> None:
+        """Append an already-measured complete ("X") span at an explicit
+        [ts, ts+dur] on the trace clock — used for the device-timing
+        track, where the duration is known only after the sync."""
+        if not self.enabled:
+            return
+        self._events.append({
+            "ph": "X", "name": name, "cat": cat, "pid": self.pid,
+            "tid": tid, "ts": float(ts_us), "dur": max(float(dur_us), 0.0),
+            "args": dict(args or {})})
 
     def instant(self, name: str, tid: int = ENGINE_TID,
                 args: Optional[Dict] = None) -> None:

@@ -83,6 +83,7 @@ from repro.kvcache.paged import (
     page_bytes_all_layers, scatter_span)
 from repro.obs import DeviceCounters, ObsConfig, Tracer, init_counters
 from repro.obs import runtime as obs_rt
+from repro.obs.perf.timing import DispatchTimer
 from repro.obs.trace import ENGINE_TID
 from repro.serve.metrics import EngineMetrics
 from repro.serve.request import Request, RequestStatus
@@ -147,6 +148,9 @@ class Engine:
         self._obs: Optional[ObsConfig] = ecfg.obs
         self._obs_counters = bool(ecfg.obs and ecfg.obs.device_metrics)
         self.tracer = Tracer(enabled=bool(ecfg.obs and ecfg.obs.trace))
+        self.perf: Optional[DispatchTimer] = \
+            DispatchTimer(ecfg.obs.time_every) \
+            if ecfg.obs and ecfg.obs.perf else None
         self.counters = DeviceCounters()
         self._drift = None              # optional obs.drift.DriftMonitor
         self._runnable = 0              # slots with work available (obs)
@@ -698,7 +702,11 @@ class Engine:
             self._harvest(finished)
 
         if self._obs_counters:
+            d0 = self.counters.drain_s
             self.counters.drain(self._ctr)       # final end-of-run drain
+            if self.perf is not None:
+                self.perf.record("drain", self.counters.drain_s - d0,
+                                 tracer=self.tracer)
             self.tracer.event("drain", n=self.counters.n_drains)
         if run_sid is not None:
             self.tracer.end(run_sid, {"requests": len(finished),
@@ -796,15 +804,23 @@ class Engine:
         for lo in range(shared_len, req.prompt_len, ecfg.prefill_chunk):
             chunk = prompt[:, lo:lo + ecfg.prefill_chunk]
             t0 = time.perf_counter()
+            p0 = self._jit_cache("_prefill") \
+                if self.perf is not None else None
             sid = tr.begin("prefill_chunk", cat="prefill", tid=rtid) \
                 if tr.enabled else None
             logits, pstate = self._prefill(self.params, self.scales,
                                            pstate, chunk)
             jax.block_until_ready(logits)
+            dt = time.perf_counter() - t0
             if sid is not None:
                 tr.end(sid, {"tokens": int(chunk.shape[1]), "lo": lo})
-            self.metrics.record_prefill(time.perf_counter() - t0,
-                                        chunk.shape[1])
+            if self.perf is not None:
+                p1 = self._jit_cache("_prefill")
+                self.perf.record("prefill_chunk", dt,
+                                 tokens=int(chunk.shape[1]),
+                                 compiled=bool(p1 is not None and p1 != p0),
+                                 tracer=tr)
+            self.metrics.record_prefill(dt, chunk.shape[1])
             if self.ecfg.clock == "steps":
                 self._ticks += chunk.shape[1]
             # chunked prefill: keep in-flight decodes moving between
@@ -909,7 +925,8 @@ class Engine:
         mode = exact if exact in self._warmed_modes else self._run_mode
         tr = self.tracer
         n_active = int(self._active.sum())
-        c0 = self._jit_cache("_engine_step") if tr.enabled else None
+        timed = tr.enabled or self.perf is not None
+        c0 = self._jit_cache("_engine_step") if timed else None
         sid = tr.begin("decode_burst", cat="decode", tid=ENGINE_TID) \
             if tr.enabled else None
         # sampled clip-stat cadence: every stats_every-th burst carries
@@ -933,12 +950,20 @@ class Engine:
         if self._paged:
             self._pos_h[self._active] += steps
         n_tokens = int((after - before).sum())
-        if sid is not None:
+        compiled = False
+        if timed:
             c1 = self._jit_cache("_engine_step")
+            compiled = bool(c1 is not None and c1 != c0)
+        if sid is not None:
             tr.end(sid, {"steps": steps, "mode": mode,
                          "n_active": n_active, "tokens": n_tokens,
-                         "tp": self._tp,
-                         "compiled": bool(c1 is not None and c1 != c0)})
+                         "tp": self._tp, "compiled": compiled})
+        if self.perf is not None:
+            # the synced wall above is the device-timed dispatch sample;
+            # cache-miss dispatches are booked to the compile bucket
+            self.perf.record("decode_burst", wall, tokens=n_tokens,
+                             compiled=compiled, tracer=tr,
+                             args={"steps": steps, "n_active": n_active})
         self.metrics.record_burst(wall, steps, n_active,
                                   n_tokens=n_tokens,
                                   n_runnable=max(n_active, self._runnable))
@@ -950,7 +975,11 @@ class Engine:
             # cadenced bulk drain — the ONE audited host-transfer site on
             # the serving loop (see obs.counters)
             with tr.span("drain", cat="obs", tid=ENGINE_TID):
+                d0 = self.counters.drain_s
                 self.counters.drain(self._ctr)
+                if self.perf is not None:
+                    self.perf.record("drain",
+                                     self.counters.drain_s - d0, tracer=tr)
         if self._drift is not None:
             self._drift.observe(steps)
 
