@@ -109,6 +109,29 @@ def run() -> None:
     assert w4.nbytes * 2 == int8_bytes            # W4A8 halves the stream
     assert qt.quantize(w, 6, group_size=128).nbytes * 4 == 3 * int8_bytes
 
+    # grouped_qmm: every MoE expert's projection in one ragged dispatch.
+    # The byte stream is the whole packed expert STACK read once per
+    # token batch — vs the dense loop re-launching E kernels. Ragged
+    # counts leave two experts near-empty so the masked-tail path is in
+    # the timed region, not just the full-capacity happy path.
+    e, cap = 8, 64
+    we = jnp.asarray(rng.normal(size=(e, k, n)).astype(np.float32))
+    xg = jnp.asarray(rng.integers(-127, 128, (e, cap, k)).astype(np.int8))
+    xgs = jnp.full((e, cap, 1), 0.02, jnp.float32)
+    counts = jnp.asarray([cap, 0, 17, cap, 1, 40, cap, 9], jnp.int32)
+    stack_int8_bytes = e * k * n
+    for bits in (8, 6, 4, 3):
+        wst = qt.quantize_experts(we, bits, group_size=128)
+        gmm = jax.jit(lambda a, d, s, c: ref.grouped_qmm(
+            a, qt.QTensor(d, s, wst.bits, wst.shape, wst.axis), xgs, c))
+        us = timeit(lambda: gmm(xg, wst.data, wst.scale, counts))
+        payload = wst.nbytes
+        emit(f"kernel.grouped_qmm.ref_w{bits}a8_8ex64x2048x512", us,
+             f"{payload}B_expert_stack_{payload / stack_int8_bytes:.2f}x_"
+             f"int8_{payload / (2 * e * k * n):.2f}x_fp16")
+    w4e = qt.quantize_experts(we, 4, group_size=128)
+    assert w4e.nbytes == e * w4.nbytes      # stack = E per-expert payloads
+
     q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(np.float32))
     fa = jax.jit(lambda q: ref.flash_attention(q, q, q, causal=True))
     us = timeit(lambda: fa(q))

@@ -257,7 +257,8 @@ def _smoke_engine(variant: str, mesh=None):
     from repro.serve import (
         Engine, EngineConfig, quantize_params, quantize_params_int8)
 
-    cfg = smoke_config("internlm2_1_8b")
+    moe = variant.startswith("moe")
+    cfg = smoke_config("deepseek_moe_16b" if moe else "internlm2_1_8b")
     ecfg = dict(max_slots=2, max_len=32, max_new_tokens=8,
                 prefill_chunk=8, decode_burst=4)
     scales = None
@@ -266,7 +267,7 @@ def _smoke_engine(variant: str, mesh=None):
     else:
         cfg = dc.replace(cfg, scan_layers=False)
         params = init_params(cfg, jax.random.key(0))
-        if variant in ("qtensor", "paged", "sharded", "obs", "perf"):
+        if variant in ("qtensor", "paged", "sharded", "obs", "perf") or moe:
             params, scales = quantize_params(params, 4, group_size=8)
             ecfg["int8_compute"] = True
         elif variant == "int8":
@@ -274,7 +275,10 @@ def _smoke_engine(variant: str, mesh=None):
             ecfg["int8_compute"] = True
         if variant in ("paged", "sharded", "obs", "perf"):
             ecfg.update(kv_cache="paged", page_size=8)
-        if variant == "sharded":
+        if variant == "moe-dense":
+            # the per-expert qmm loop the grouped kernel is pinned against
+            ecfg["moe_dispatch"] = "dense"
+        if variant in ("sharded", "moe-ep"):
             ecfg["mesh"] = mesh
         if variant == "obs":
             # device counters accumulate INSIDE the decode scan; the hot
@@ -338,18 +342,28 @@ def collect_targets(sharded: Optional[bool] = None) -> Tuple[
 
     notes: List[Finding] = []
     targets = _kernel_targets()
-    for variant in ("dense", "qtensor", "int8", "paged", "obs", "perf"):
+    # moe-grouped/moe-dense: the packed MoE engine in both dispatch modes
+    # (one grouped ragged kernel per projection vs the per-expert qmm
+    # loop it replaced — both graphs must satisfy the same hot-path and
+    # exactness rules, since either can serve as the parity oracle)
+    for variant in ("dense", "qtensor", "int8", "paged", "obs", "perf",
+                    "moe-grouped", "moe-dense"):
         targets.extend(_engine_target_pair(variant))
     want_sharded = (len(jax.devices()) >= 2) if sharded is None else sharded
     if want_sharded:
         from repro.launch.mesh import make_tp_mesh
         targets.extend(_engine_target_pair("sharded", mesh=make_tp_mesh(2)))
+        # expert-parallel MoE: expert stacks sharded over the tp mesh —
+        # RPR104 must prove the ep combine's psum exact (zeros + disjoint
+        # per-expert dynamic_update_slice slots)
+        targets.extend(_engine_target_pair("moe-ep", mesh=make_tp_mesh(2)))
     else:
         notes.append(Finding(
             "RPR100", "info", "engine[sharded]",
-            f"sharded trace skipped: host exposes {len(jax.devices())} "
-            "device(s); run `python -m repro.analysis` (the CLI forces an "
-            "8-device host platform) to cover the shard_map paths"))
+            f"sharded + expert-parallel traces skipped: host exposes "
+            f"{len(jax.devices())} device(s); run `python -m repro.analysis` "
+            "(the CLI forces an 8-device host platform) to cover the "
+            "shard_map paths"))
     return targets, notes
 
 

@@ -19,6 +19,7 @@ from repro.kernels.fake_quant import (
     clip_stats, fake_quant_pallas, fake_quant_per_channel_pallas)
 from repro.kernels.ef_sqnorm import ef_sqnorm_pallas
 from repro.kernels.int8_matmul import activation_saturation, int8_matmul_pallas
+from repro.kernels.grouped_qmm import grouped_qmm_pallas
 from repro.kernels.qmm import qmm_groups_pallas, qmm_pallas, saturation_stats
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.paged_attention import (
@@ -114,6 +115,44 @@ def qmm(x_q, w, x_scale, out_dtype=jnp.float32):
                       w.scale.reshape(w.scale.shape[w.axis], n),
                       bits=w.bits, k=k, out_dtype=out_dtype,
                       interpret=(mode == "interpret"))
+
+
+def grouped_qmm(x_q, w, x_scale, counts, expert_ids=None,
+                out_dtype=jnp.float32):
+    """Grouped ragged quantized MoE matmul over a packed expert stack.
+
+    x_q: (S, C, K) int8 capacity-sorted segments; ``w``: a
+    ``qtensor.quantize_experts`` QTensor of logical (E, K, N) packed
+    along axis 1 (per-expert scales (E, G, N)); x_scale: (S, C, 1)
+    per-row fp32; counts: (S,) valid rows per segment; expert_ids: (S,)
+    expert feeding each segment (default ``arange(S)``). Rows past a
+    segment's count come back exactly 0.0; sub-byte payloads are
+    expanded in-kernel — HBM and VMEM both see only the packed bytes.
+    """
+    mode = _mode()
+    # static overflow proof on EVERY route (the pallas wrapper re-checks)
+    require_group_dot_safe(w.bits, 8, w.group_size, where="ops.grouped_qmm")
+    if obs_rt.emitting():
+        obs_rt.emit("qmm_calls", 1.0)
+        if obs_rt.emitting_stats():
+            sat, total = saturation_stats(x_q)
+            obs_rt.emit("act_sat", sat)
+            obs_rt.emit("act_elems", total)
+    counts = counts.astype(jnp.int32)
+    if expert_ids is not None:
+        expert_ids = expert_ids.astype(jnp.int32)
+    if mode == "ref":
+        return _ref.grouped_qmm(x_q, w, x_scale, counts, expert_ids,
+                                out_dtype)
+    e, k, n = w.shape
+    ws = w.scale
+    if ws.shape[0] != e:                  # legacy shared-scale stack
+        ws = jnp.broadcast_to(ws, (e,) + ws.shape[1:])
+    if expert_ids is None:
+        expert_ids = jnp.arange(x_q.shape[0], dtype=jnp.int32)
+    return grouped_qmm_pallas(x_q, w.data, x_scale, ws, counts, expert_ids,
+                              bits=w.bits, k=k, out_dtype=out_dtype,
+                              interpret=(mode == "interpret"))
 
 
 def qmm_group_products(x_q, w):

@@ -116,6 +116,53 @@ def qmm(x_q: jnp.ndarray, w, x_scale: jnp.ndarray,
     return (y * jnp.asarray(x_scale, jnp.float32)).astype(out_dtype)
 
 
+def grouped_qmm(x_q: jnp.ndarray, w, x_scale: jnp.ndarray,
+                counts: jnp.ndarray, expert_ids: jnp.ndarray | None = None,
+                out_dtype=jnp.float32) -> jnp.ndarray:
+    """Grouped ragged quantized matmul oracle: every MoE expert's FFN
+    projection in ONE batched W{8,6,4,3}A8 dispatch.
+
+    x_q: (S, C, K) int8 activation segments — S token→expert segments of
+    capacity C rows each (the capacity-sorted layout ``models.moe``
+    builds); x_scale: (S, C, 1) per-row fp32 activation scales;
+    ``w``: a ``qtensor.quantize_experts`` stack — logical (E, K, N)
+    packed along axis 1 with PER-EXPERT scales (E, G, N);
+    counts: (S,) int32 valid rows per segment (rows >= count are masked
+    to exact 0.0 — empty experts cost nothing and poison nothing);
+    expert_ids: (S,) int32 expert feeding each segment (default
+    ``arange(S)`` — the identity layout where segment s IS expert s).
+
+    Bit-identity contract (pinned by ``tests/test_grouped_qmm.py``):
+    output segment s equals ``qmm(x_q[s], expert_slice(w, ids[s]),
+    x_scale[s])`` on its valid rows — same int32 group dots, same fp32
+    scale folds, same group-axis ``jnp.sum`` — so the grouped MoE path
+    is bitwise the dense per-expert loop, only batched.
+    """
+    e, k, n = w.shape
+    s, c = x_q.shape[0], x_q.shape[1]
+    wi = w.unpack()                                   # (E, K, N) int8
+    g = w.scale.shape[w.axis]
+    ws = w.scale.reshape(w.scale.shape[0], g, n)
+    if ws.shape[0] != e:                              # legacy shared scales
+        ws = jnp.broadcast_to(ws, (e, g, n))
+    gs = k // g
+    if expert_ids is None:
+        expert_ids = jnp.arange(s, dtype=jnp.int32)
+    wsel = jnp.take(wi, expert_ids, axis=0)           # (S, K, N)
+    wssel = jnp.take(ws, expert_ids, axis=0)          # (S, G, N)
+    acc = jax.lax.dot_general(
+        x_q.reshape(s, c, g, gs),
+        wsel.reshape(s, g, gs, n),
+        (((3,), (2,)), ((0, 2), (0, 1))),   # contract gs; batch (seg, group)
+        preferred_element_type=jnp.int32,
+    )                                                 # (S, G, C, N)
+    y = jnp.sum(acc.astype(jnp.float32) * wssel[:, :, None, :], axis=1)
+    y = y * jnp.asarray(x_scale, jnp.float32)         # (S, C, N)
+    rows = jnp.arange(c, dtype=jnp.int32)[None, :, None]
+    y = jnp.where(rows < counts[:, None, None], y, 0.0)
+    return y.astype(out_dtype)
+
+
 NEG_INF = -1e30
 
 

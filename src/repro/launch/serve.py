@@ -28,6 +28,11 @@ kv-head across a 1-D device mesh — outputs stay bit-identical to
 ``--tp 1`` (see README "Tensor-parallel serving"). Implies
 ``--int8-compute`` for quantized weights.
 
+MoE archs (deepseek_moe_16b, olmoe_1b_7b): packed expert stacks serve
+through the grouped ragged quantized kernel by default; ``--moe-dispatch
+dense`` selects the per-expert loop oracle (bit-identical outputs) and
+``--tp N`` additionally shards the expert stacks expert-parallel.
+
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
       --smoke --batch 8 --prompt-len 64 --gen-len 32 --weight-bits 8
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
@@ -91,6 +96,7 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
           kv_bits: Optional[int] = None, kv_pages: Optional[int] = None,
           prefix_sharing: bool = True, shared_prefix: int = 0,
           tp: int = 1, group_size: Optional[int] = None,
+          moe_dispatch: str = "grouped",
           trace_path: Optional[str] = None,
           events_path: Optional[str] = None,
           metrics_file: Optional[str] = None,
@@ -161,7 +167,7 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
         decode_burst=decode_burst, clock=clock, int8_compute=int8_compute,
         kv_cache="paged" if paged else "dense", page_size=page_size,
         kv_pages=kv_pages, prefix_sharing=prefix_sharing, mesh=mesh,
-        obs=obs)
+        moe_dispatch=moe_dispatch, obs=obs)
     engine = Engine(params, cfg, ecfg, scales=scales, kv_bits=kv_bits)
 
     monitor = None
@@ -282,6 +288,13 @@ def main() -> None:
                     help="scale-group size along the reduction axis for "
                          "--packed (row-parallel sharding needs each "
                          "shard to own whole groups)")
+    ap.add_argument("--moe-dispatch",
+                    choices=("grouped", "dense", "einsum"),
+                    default="grouped",
+                    help="MoE expert dispatch for quantized stacks: one "
+                         "grouped ragged kernel per projection (default), "
+                         "the dense per-expert qmm loop (bit-identical "
+                         "oracle), or the fp-dequant einsum fallback")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -325,7 +338,8 @@ def main() -> None:
                 kv_bits=args.kv_bits, kv_pages=args.kv_pages,
                 prefix_sharing=not args.no_prefix_sharing,
                 shared_prefix=args.shared_prefix, tp=args.tp,
-                group_size=args.group_size, trace_path=args.trace,
+                group_size=args.group_size,
+                moe_dispatch=args.moe_dispatch, trace_path=args.trace,
                 events_path=args.events, metrics_file=args.metrics_file,
                 metrics_port=args.metrics_port,
                 drain_every=args.drain_every,

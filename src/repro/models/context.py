@@ -81,7 +81,54 @@ class Context:
         the int8 MXU kernel instead of dequantize-then-fp-matmul."""
         return x @ self.qw(name, w)
 
+    def expert_matmul(self, name: str, buf: jnp.ndarray, w,
+                      counts: jnp.ndarray) -> jnp.ndarray:
+        """The MoE expert-stack interception point.
+
+        ``buf``: (E, C, D) capacity-sorted token segments (rows past
+        ``counts[e]`` are zero); ``w``: (E, D, F) stacked expert weights;
+        ``counts``: (E,) int32 valid rows per expert. Returns (E, C, F)
+        with rows past ``counts[e]`` still (exactly) zero — the combine
+        gather relies on dropped slots contributing nothing.
+
+        Default: the batched fp einsum over ``qw`` (zero rows in, zero
+        rows out), which preserves QAT/tap/FIT semantics unchanged.
+        ``DequantContext`` overrides to dispatch packed expert stacks to
+        the grouped ragged quantized kernel.
+        """
+        del counts
+        return jnp.einsum("ecd,edf->ecf", buf, self.qw(name, w))
+
     def tap(self, name: str, a: jnp.ndarray) -> jnp.ndarray:
+        return a
+
+
+class RecordTaps:
+    """Delegating wrapper that records every ``tap`` site's value while
+    leaving all other context behavior (scoping, matmul routing, weight
+    handling) to the wrapped context.
+
+    ``obs.drift`` uses this to collect the QUANTIZED engine's activation
+    taps (e.g. ``router_logits``) through the engine's own
+    ``DequantContext`` — ``CollectContext`` can't, because it would also
+    replace the quantized matmul routing being probed.
+    """
+
+    def __init__(self, inner: Context):
+        self._inner = inner
+        self.acts: Dict[str, jnp.ndarray] = {}
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    @contextmanager
+    def scope(self, name: str):
+        with self._inner.scope(name):
+            yield self
+
+    def tap(self, name: str, a: jnp.ndarray) -> jnp.ndarray:
+        a = self._inner.tap(name, a)
+        self.acts[self._inner.path(name)] = a
         return a
 
 
@@ -172,11 +219,16 @@ class DequantContext(Context):
     """
 
     def __init__(self, scales: Mapping[str, jnp.ndarray], dtype,
-                 int8_compute: bool = False, scope_prefix: str = ""):
+                 int8_compute: bool = False, moe_dispatch: str = "grouped",
+                 scope_prefix: str = ""):
         super().__init__(scope_prefix)
         self.scales = scales
         self.dtype = dtype
         self.int8_compute = int8_compute
+        if moe_dispatch not in ("grouped", "dense", "einsum"):
+            raise ValueError(f"moe_dispatch must be grouped|dense|einsum, "
+                             f"got {moe_dispatch!r}")
+        self.moe_dispatch = moe_dispatch
 
     def _rowquant(self, x2: jnp.ndarray):
         # dynamic symmetric per-row activation scale: row b's quantization
@@ -214,6 +266,43 @@ class DequantContext(Context):
                              out_dtype=jnp.float32)
         return y.astype(self.dtype).reshape(lead + (w.shape[-1],))
 
+    def expert_matmul(self, name: str, buf: jnp.ndarray, w,
+                      counts: jnp.ndarray) -> jnp.ndarray:
+        """Packed expert stacks dispatch to the grouped ragged quantized
+        kernel (``moe_dispatch="grouped"``) or the dense per-expert
+        ``qmm`` loop (``"dense"`` — the bit-identity oracle the parity
+        tests pin the grouped path against); everything else (fp
+        weights, legacy int8 stacks, legacy shared-scale QTensors,
+        ``"einsum"``) falls back to the fp-dequant einsum.
+
+        Activation rows are quantized with the SAME dynamic per-row
+        scales as 2-D ``matmul`` sites — each token row's numerics
+        depend only on itself, so capacity-sorted batching preserves the
+        engine's batch-composition invariance inside MoE layers too.
+        """
+        from repro.kernels import ops as kops
+        if (not isinstance(w, QTensor) or not self.int8_compute
+                or len(w.shape) != 3 or self.moe_dispatch == "einsum"
+                or w.scale.shape[0] != w.shape[0]):
+            return super().expert_matmul(name, buf, w, counts)
+        e, c, d = buf.shape
+        n = w.shape[-1]
+        xq, xs = self._rowquant(
+            buf.reshape(-1, d).astype(jnp.float32))
+        xq, xs = xq.reshape(e, c, d), xs.reshape(e, c, 1)
+        cnt = counts.astype(jnp.int32)
+        if self.moe_dispatch == "dense":
+            from repro.qtensor import expert_slice
+            y = jnp.stack([
+                kops.qmm(xq[ei], expert_slice(w, ei), xs[ei],
+                         out_dtype=jnp.float32)
+                for ei in range(e)], axis=0)
+            rows = jnp.arange(c, dtype=jnp.int32)[None, :, None]
+            y = jnp.where(rows < cnt[:, None, None], y, 0.0)
+        else:
+            y = kops.grouped_qmm(xq, w, xs, cnt, out_dtype=jnp.float32)
+        return y.astype(self.dtype)
+
 
 class ShardedDequantContext(DequantContext):
     """Tensor-parallel ``DequantContext``: quantized matmuls execute
@@ -221,11 +310,13 @@ class ShardedDequantContext(DequantContext):
     single-device path for every tp degree.
 
     ``shard_plan`` (from ``repro.serve.quantized.shard_params``) maps a
-    scoped block path to its layout: ``"col"`` (output dim sharded) or
-    ``"row"`` (reduction dim sharded); unplanned blocks are replicated
-    and fall through to the parent. Activations stay replicated between
-    blocks — the per-row activation quantization therefore sees the
-    identical full-row values at every tp degree.
+    scoped block path to its layout: ``"col"`` (output dim sharded),
+    ``"row"`` (reduction dim sharded), or ``"ep"`` (3-D expert stacks
+    sharded by expert — expert parallelism, see ``expert_matmul``);
+    unplanned blocks are replicated and fall through to the parent.
+    Activations stay replicated between blocks — the per-row activation
+    quantization therefore sees the identical full-row values at every
+    tp degree.
 
     Why this is exact (the tp-vs-tp=1 parity contract):
 
@@ -267,8 +358,10 @@ class ShardedDequantContext(DequantContext):
     def __init__(self, scales: Mapping[str, jnp.ndarray], dtype,
                  mesh, shard_plan: Mapping[str, str],
                  int8_compute: bool = True, kv_shards: int = 1,
+                 moe_dispatch: str = "grouped",
                  axis_name: str = "tp", scope_prefix: str = ""):
         super().__init__(scales, dtype, int8_compute=int8_compute,
+                         moe_dispatch=moe_dispatch,
                          scope_prefix=scope_prefix)
         self.mesh = mesh
         self.shard_plan = dict(shard_plan)
@@ -300,6 +393,39 @@ class ShardedDequantContext(DequantContext):
         full = jax.lax.psum(full, self.axis_name)
         y = jnp.sum(full, axis=0)
         return y * jnp.asarray(xs, jnp.float32)
+
+    def _qmm_ep(self, xq, xs, cnt, wd, ws, *, bits, e, k, n, cap):
+        """Expert-parallel grouped qmm (runs under shard_map).
+
+        Routing, capacity assignment and per-row activation quantization
+        all happened on the REPLICATED token buffer, so every shard
+        holds identical (E, cap, K) segments; expert weights are the
+        only sharded operand. Shard i slices ITS experts' segments out
+        of the replicated buffer (the all_to_all dispatch of the
+        classical EP layout degenerates to a local slice when tokens are
+        replicated — nothing to exchange), runs the grouped kernel over
+        its self-contained expert blocks, and the combine is a scatter
+        into disjoint expert slots of a zero buffer + ONE exact psum.
+        Each expert's segment is computed by exactly one shard with the
+        same int32 dots / fp32 folds the unsharded grouped call does —
+        bit-identical for every tp degree.
+        """
+        from repro.kernels import ops as kops
+        el = e // self.n_shards
+        i = jax.lax.axis_index(self.axis_name)
+        xl = jax.lax.dynamic_slice_in_dim(xq, i * el, el, axis=0)
+        xsl = jax.lax.dynamic_slice_in_dim(xs, i * el, el, axis=0)
+        cl = jax.lax.dynamic_slice_in_dim(cnt, i * el, el, axis=0)
+        w_local = QTensor(wd, ws, bits, (el, k, n), 1)
+        y = kops.grouped_qmm(xl, w_local, xsl, cl,
+                             out_dtype=jnp.float32)      # (el, cap, N)
+        full = jnp.zeros((e, cap, n), jnp.float32)
+        full = jax.lax.dynamic_update_slice(full, y, (i * el, 0, 0))
+        # ONE psum per MoE projection: each expert slot is written by
+        # exactly one shard, everything else is zero, so the float
+        # reduction is exact for any shard count
+        # rpr-ok: RPR002 fp32 operand is zeros + disjoint per-expert dynamic_update_slice slots (each expert computed on exactly one shard)
+        return jax.lax.psum(full, self.axis_name)
 
     def _int8_col(self, xq, w, s, xs):
         from repro.kernels import ops as kops
@@ -391,3 +517,42 @@ class ShardedDequantContext(DequantContext):
             with obs_rt.suspended():
                 y = fn(xq, w, s.reshape(1, -1), xs)
         return y.astype(self.dtype).reshape(lead + (n,))
+
+    def expert_matmul(self, name: str, buf: jnp.ndarray, w,
+                      counts: jnp.ndarray) -> jnp.ndarray:
+        """Expert-parallel MoE dispatch: blocks the shard plan marks
+        ``"ep"`` (3-D ``quantize_experts`` stacks sharded by expert) run
+        ``_qmm_ep`` under shard_map; everything else falls through to
+        the parent's replicated grouped/dense/einsum dispatch, so the
+        engine stays bit-identical to tp=1 either way."""
+        if (self.shard_plan.get(self.path(name)) != "ep"
+                or not isinstance(w, QTensor)
+                or self.moe_dispatch == "einsum"):
+            return super().expert_matmul(name, buf, w, counts)
+        from repro.obs import runtime as obs_rt
+        e, c, d = buf.shape
+        k, n = w.shape[1], w.shape[2]
+        xq, xs = self._rowquant(
+            buf.reshape(-1, d).astype(jnp.float32))
+        if obs_rt.emitting():
+            # counters come from the REPLICATED pre-shard activation (the
+            # kernel-site emits inside the shard_map body are suspended)
+            obs_rt.emit("qmm_calls", 1.0)
+            if obs_rt.emitting_stats():
+                from repro.kernels.qmm import saturation_stats
+                sat, total = saturation_stats(xq)
+                obs_rt.emit("act_sat", sat)
+                obs_rt.emit("act_elems", total)
+        xq, xs = xq.reshape(e, c, d), xs.reshape(e, c, 1)
+        cnt = counts.astype(jnp.int32)
+        ax = self.axis_name
+        fn = shard_map(
+            lambda a, axs, cl, dta, sc: self._qmm_ep(
+                a, axs, cl, dta, sc, bits=w.bits, e=e, k=k, n=n, cap=c),
+            mesh=self.mesh,
+            in_specs=(P(None, None, None), P(None, None, None), P(None),
+                      P(ax, None, None), P(ax, None, None)),
+            out_specs=P(None, None, None), check_rep=False)
+        with obs_rt.suspended():
+            y = fn(xq, xs, cnt, w.data, w.scale)
+        return y.astype(self.dtype)

@@ -4,17 +4,23 @@ dispatch, optional shared experts (DeepSeek-MoE style).
 Dispatch is scatter/gather based (not the O(N·E·C) one-hot einsum of
 Mesh-TF — infeasible at 1M tokens): tokens are ranked within their expert
 via a cumsum over the (N·k, E) assignment matrix, dropped beyond capacity
-C = ceil(cf·N·k/E), scattered into an (E, C, D) buffer, processed as E
-batched FFNs (one einsum on the MXU), and gathered back weighted by the
-renormalized gate values.
+C = ceil(cf·N·k/E), scattered into an (E, C, D) buffer, processed through
+``ctx.expert_matmul`` per projection, and gathered back weighted by the
+renormalized gate values. The capacity-sorted (E, C, D) segment layout
+plus the per-expert ``counts`` vector IS the interface of the grouped
+ragged quantized kernel: a fp/QAT/tap context runs the E batched FFNs as
+one einsum, while ``DequantContext`` streams the whole packed expert
+stack through ``kernels.grouped_qmm`` in ONE dispatch (and
+``ShardedDequantContext`` shards it by expert — see ``_qmm_ep``).
 
-Sharding modes (launch/sharding.py):
+Sharding modes (launch/sharding.py, training):
   * TP  — expert hidden dim sharded over "model" (always lowers cleanly)
   * EP  — expert axis sharded over "model"; XLA SPMD materializes the
           token exchange as all-to-alls on the dispatch scatter/gather.
 
 Routers stay fp32 and are pinned to ≥8 bits by QuantPolicy (top-k flips
-under aggressive router quantization — see DESIGN.md §5).
+under aggressive router quantization — see DESIGN.md §5); the
+``router_logits`` tap feeds ``obs.drift``'s live top-k flip gauge.
 """
 from __future__ import annotations
 
@@ -84,6 +90,7 @@ def _moe_apply_auto(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx
     xt = x.reshape(n, d)
 
     logits = xt.astype(jnp.float32) @ ctx.qw("router", p["router"])
+    logits = ctx.tap("router_logits", logits)
     gates, idx = _topk_route(logits, k)                   # (N,k)
 
     # load-balance aux loss (Switch-style): E * Σ_e f_e · p_e
@@ -99,6 +106,15 @@ def _moe_apply_auto(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx
     pos = jnp.sum(pos, axis=-1)                                      # (N·k,)
     keep = pos < cap
 
+    # ragged segment fill: tokens landing in expert e, capped — the
+    # grouped kernel's per-segment row counts (empty experts are 0)
+    assigned = jnp.sum(onehot, axis=0)                               # (E,)
+    counts = jnp.minimum(assigned, cap).astype(jnp.int32)
+    from repro.obs import runtime as obs_rt
+    if obs_rt.emitting():
+        obs_rt.emit("moe_dropped_tokens",
+                    jnp.sum(assigned - counts).astype(jnp.float32))
+
     # scatter tokens into (E, cap, D) buffers
     xk = jnp.repeat(xt, k, axis=0)       # (N·k, D) — repeat, NOT xt[tok]:
     # a data-dependent-looking gather across a sharded token dim makes
@@ -109,12 +125,13 @@ def _moe_apply_auto(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx
         upd, mode="drop")
     buf = constrain(buf, "experts", None, None)
 
-    # E batched FFNs — one MXU einsum each
-    up = jnp.einsum("ecd,edf->ecf", buf, ctx.qw("w_up", p["w_up"]))
-    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, ctx.qw("w_gate", p["w_gate"])))
+    # per-projection expert dispatch: one fp einsum OR one grouped
+    # ragged quantized kernel over the whole packed expert stack
+    up = ctx.expert_matmul("w_up", buf, p["w_up"], counts)
+    gate = jax.nn.silu(ctx.expert_matmul("w_gate", buf, p["w_gate"], counts))
     h = ctx.tap("moe_h", up * gate)
     h = constrain(h, "experts", None, "expert_ff")
-    out_buf = jnp.einsum("ecf,efd->ecd", h, ctx.qw("w_down", p["w_down"]))
+    out_buf = ctx.expert_matmul("w_down", h, p["w_down"], counts)
     out_buf = constrain(out_buf, "experts", None, None)
 
     # gather back, weighted by gates; the k slots of one token are
@@ -126,10 +143,13 @@ def _moe_apply_auto(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx
     y = y.astype(x.dtype)
 
     if cfg.num_shared_experts:
+        # first-class matmul sites: quantized shared experts take the
+        # fused kernel (and col/row sharding) like any other FFN block
         sp = p["shared"]
-        su = xt @ ctx.qw("shared_w_up", sp["w_up"])
-        sg = jax.nn.silu(xt @ ctx.qw("shared_w_gate", sp["w_gate"]))
-        y = y + ctx.tap("shared_h", su * sg) @ ctx.qw("shared_w_down", sp["w_down"])
+        su = ctx.matmul("shared_w_up", xt, sp["w_up"])
+        sg = jax.nn.silu(ctx.matmul("shared_w_gate", xt, sp["w_gate"]))
+        y = y + ctx.matmul("shared_w_down", ctx.tap("shared_h", su * sg),
+                           sp["w_down"])
 
     return y.reshape(b, s, d), aux
 
@@ -219,6 +239,7 @@ def moe_apply_ep(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx, rules
             xf = jax.lax.all_gather(xf, "model", tiled=True)   # (n_row, D)
 
         logits = xf.astype(jnp.float32) @ ctx.qw("router", pl["router"])
+        logits = ctx.tap("router_logits", logits)
         gates, idx = _topk_route(logits, k)
 
         me = jnp.mean(jax.nn.softmax(logits, -1), axis=0)

@@ -17,6 +17,10 @@ cheap proxy for quantization damage):
     calibrated ``SensitivityReport.act_ranges`` / ``kv_ranges``;
   * sites whose observed range exceeds calibration by
     ``ratio_threshold`` are flagged (grouped per layer in the report);
+  * MoE models additionally get a router top-k flip gauge: the fp and
+    quantized forwards' ``router_logits`` taps are compared per sample —
+    the fraction of routed expert picks quantization flips is routing
+    damage FIT's fixed-routing weight scores cannot see;
   * ``site_kls`` measures a per-weight-block online KL on the live
     state (quantize one block, KL against fp) — rank-correlating it
     against ``report.fit_weights({site: bits})`` is the drift demo's
@@ -36,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.context import CollectContext
+from repro.models.context import CollectContext, RecordTaps
 from repro.models.decode import decode_step
 from repro.utils.logging import get_logger
 
@@ -110,6 +114,9 @@ class DriftMonitor:
         self.calibration_scale = float(calibration_scale)
         self.samples: List[DriftSample] = []
         self.site_max_ratio: Dict[str, float] = {}
+        # per-sample mean fraction of MoE router top-k picks the
+        # quantized forward flips vs fp (empty for router-less models)
+        self.router_flips: List[float] = []
         self._since = 0
         self._steps_total = 0
         self._rr = 0                    # round-robin slot cursor
@@ -126,6 +133,10 @@ class DriftMonitor:
         self._engine = engine
         cfg, vocab = engine.cfg, engine.cfg.vocab_size
 
+        def routers(acts):
+            return {k: a for k, a in acts.items()
+                    if k.endswith("router_logits")}
+
         def fp_probe(fp_params, state, tok):
             ctx = CollectContext()
             logits, _ = decode_step(fp_params, state, tok, cfg, ctx=ctx)
@@ -136,12 +147,15 @@ class DriftMonitor:
             hi = {k: jnp.max(jnp.maximum(a, 0.0),
                              axis=tuple(range(1, a.ndim)))
                   for k, a in ctx.acts.items()}
-            return lg, lo, hi
+            return lg, lo, hi, routers(ctx.acts)
 
         def q_logits(params, scales, state, tok):
-            ctx = engine._make_ctx(scales)
+            # RecordTaps wraps the engine's OWN context, so the probed
+            # forward routes matmuls exactly as serving does while still
+            # surfacing the router_logits taps for the flip gauge
+            ctx = RecordTaps(engine._make_ctx(scales))
             logits, _ = decode_step(params, state, tok, cfg, ctx=ctx)
-            return logits[:, 0, ..., :vocab]
+            return logits[:, 0, ..., :vocab], routers(ctx.acts)
 
         self._fp_probe = jax.jit(fp_probe)
         self._q_logits = jax.jit(q_logits)
@@ -179,11 +193,13 @@ class DriftMonitor:
     def _sample(self, slot: int) -> None:
         eng = self._engine
         self._prepare_probe()
-        fl, lo, hi = self._fp_probe(self.fp_params, eng._state, eng._tok)
-        ql = self._q_logits(eng.params, eng.scales, eng._state, eng._tok)
+        fl, lo, hi, fr = self._fp_probe(self.fp_params, eng._state, eng._tok)
+        ql, qr = self._q_logits(eng.params, eng.scales, eng._state, eng._tok)
         kl_rows = _kl_rows(fl, ql)
         # cadenced sampling fetch — NOT on the burst dispatch path
-        kl, lo, hi = jax.device_get((kl_rows[slot], lo, hi))
+        kl, lo, hi, fr, qr = jax.device_get(
+            (kl_rows[slot], lo, hi, fr, qr))
+        self._observe_router(slot, fr, qr)
         if not self.cal_ranges:
             c = self.calibration_scale
             self.cal_ranges = {
@@ -210,6 +226,27 @@ class DriftMonitor:
                         "calibration (threshold %.2f)", self._steps_total,
                         worst, self.ratio_threshold)
 
+    def _observe_router(self, slot: int, fp_routers: Mapping[str, np.ndarray],
+                        q_routers: Mapping[str, np.ndarray]) -> None:
+        """Top-k flip gauge: the fraction of the sampled slot's routed
+        expert picks that differ between the fp and quantized forwards,
+        averaged over router sites.  A rising flip rate means
+        quantization is re-routing tokens — degradation FIT's
+        fixed-routing weight scores cannot see."""
+        if not fp_routers:
+            return
+        k = max(1, int(getattr(self._engine.cfg, "top_k", 1) or 1))
+        flips = []
+        for site, fa in fp_routers.items():
+            qa = q_routers.get(site)
+            if qa is None or fa.shape[-1] < k:
+                continue
+            f_top = set(np.argsort(fa[slot])[-k:].tolist())
+            q_top = set(np.argsort(qa[slot])[-k:].tolist())
+            flips.append(1.0 - len(f_top & q_top) / k)
+        if flips:
+            self.router_flips.append(float(np.mean(flips)))
+
     # -- per-block online KL (the FIT-vs-reality demo) -------------------
     def site_kls(self, sites: Optional[Sequence[str]] = None,
                  bits: int = 4) -> Dict[str, float]:
@@ -232,7 +269,7 @@ class DriftMonitor:
         active = np.flatnonzero(eng._active)
         rows = active if active.size else np.arange(eng.ecfg.max_slots)
         self._prepare_probe()
-        fl, _, _ = self._fp_probe(self.fp_params, eng._state, eng._tok)
+        fl, _, _, _ = self._fp_probe(self.fp_params, eng._state, eng._tok)
         out: Dict[str, float] = {}
         for site in sites:
             try:
@@ -244,7 +281,7 @@ class DriftMonitor:
             hybrid = _replace_leaf(
                 self.fp_params, site,
                 fake_quant_ref(leaf, QuantSpec(bits=bits)))
-            sl, _, _ = self._fp_probe(hybrid, eng._state, eng._tok)
+            sl, _, _, _ = self._fp_probe(hybrid, eng._state, eng._tok)
             kl = np.asarray(jax.device_get(_kl_rows(fl, sl)))
             out[site] = float(kl[rows].mean())
         return out
@@ -262,6 +299,10 @@ class DriftMonitor:
             "ratio_threshold": self.ratio_threshold,
             "kl_mean": float(np.mean(kls)) if kls else None,
             "kl_max": float(np.max(kls)) if kls else None,
+            "router_flip_rate": (float(np.mean(self.router_flips))
+                                 if self.router_flips else None),
+            "router_flip_max": (float(np.max(self.router_flips))
+                                if self.router_flips else None),
             "sites": {s: {"max_ratio": float(r),
                           "flagged": r > self.ratio_threshold}
                       for s, r in sorted(self.site_max_ratio.items())},

@@ -29,6 +29,9 @@ GAUGE_HELP: Dict[str, str] = {
     "requests_finished": "requests served to completion",
     "obs_drains": "device counter drains performed",
     "obs_drain_s": "wall seconds spent draining counters",
+    "router_topk_flip_rate": "mean fraction of MoE router top-k expert "
+                             "picks the quantized forward flips vs fp "
+                             "(drift-monitor samples)",
 }
 
 
@@ -100,6 +103,10 @@ def collect_gauges(engine) -> Dict[str, object]:
     if counters is not None:
         out["obs_drains"] = counters.n_drains
         out["obs_drain_s"] = counters.drain_s
+    drift = getattr(engine, "_drift", None)
+    flips = getattr(drift, "router_flips", None)
+    if flips:
+        out["router_topk_flip_rate"] = float(sum(flips) / len(flips))
     return out
 
 

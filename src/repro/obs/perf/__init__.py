@@ -24,8 +24,9 @@ functions); this namespace itself stays import-cycle-free the same way
 from repro.obs.perf.attrib import SiteRow, attribute, format_table, site_fit
 from repro.obs.perf.cost import (
     HBM_BW, INT8_OPS, PEAK_FLOPS, KernelCost, fp_matmul_cost,
-    int8_matmul_cost, kv_pool_bytes, paged_attention_cost, qmm_cost,
-    qmm_weight_bytes, roofline, site_costs_from_tree)
+    grouped_qmm_cost, grouped_qmm_weight_bytes, int8_matmul_cost,
+    kv_pool_bytes, paged_attention_cost, qmm_cost, qmm_weight_bytes,
+    roofline, site_costs_from_tree)
 from repro.obs.perf.history import (
     HISTORY_SCHEMA, append_run, check_regression, load_history,
     metric_direction)
@@ -34,7 +35,8 @@ from repro.obs.perf.timing import DispatchTimer
 __all__ = [
     "HBM_BW", "HISTORY_SCHEMA", "INT8_OPS", "PEAK_FLOPS", "DispatchTimer",
     "KernelCost", "SiteRow", "append_run", "attribute", "check_regression",
-    "format_table", "fp_matmul_cost", "int8_matmul_cost", "kv_pool_bytes",
+    "format_table", "fp_matmul_cost", "grouped_qmm_cost",
+    "grouped_qmm_weight_bytes", "int8_matmul_cost", "kv_pool_bytes",
     "load_history", "metric_direction", "paged_attention_cost", "qmm_cost",
     "qmm_weight_bytes", "roofline", "site_costs_from_tree", "site_fit",
 ]

@@ -46,7 +46,8 @@ class KernelCost:
     """
 
     site: str
-    kind: str            # "qmm" | "int8_matmul" | "fp_matmul" | "paged_attention"
+    kind: str            # "qmm" | "grouped_qmm" | "int8_matmul" |
+                         # "fp_matmul" | "paged_attention"
     bits: int
     bytes_weight: float
     bytes_act: float
@@ -98,6 +99,37 @@ def qmm_cost(site: str, m: int, k: int, n: int, bits: int,
     return KernelCost(
         site=site, kind="qmm", bits=bits,
         bytes_weight=qmm_weight_bytes(k, n, bits, group_size),
+        bytes_act=float(m * k + m * 4),
+        bytes_out=float(m * n * 4),
+        int_ops=2.0 * m * k * n,
+        fp_ops=2.0 * m * n * groups)
+
+
+def grouped_qmm_weight_bytes(e: int, k: int, n: int, bits: int,
+                             group_size: Optional[int] = None) -> float:
+    """Resident bytes of a packed (E, K, N) ``quantize_experts`` stack:
+    E payloads at the packed row size plus the (E, K/group, N) fp32
+    per-expert scale grid — exactly E x ``qmm_weight_bytes`` of one
+    expert, and byte-equal to ``storage_summary``'s packed_bytes for
+    the stack (pinned by ``tests/test_perf.py``)."""
+    return float(e) * qmm_weight_bytes(k, n, bits, group_size)
+
+
+def grouped_qmm_cost(site: str, e: int, c: int, k: int, n: int, bits: int,
+                     group_size: Optional[int] = None) -> KernelCost:
+    """One grouped ragged dispatch over E capacity-``c`` segments: the
+    WHOLE packed expert stack streams once — that is the kernel's point;
+    the dense per-expert loop pays the same weight bytes across E
+    dispatch latencies — plus E*c int8 activation rows with per-row
+    scales in and an (E, c, N) fp32 tile out.  Op counts assume full
+    segments (the roofline upper bound: ragged tails and empty experts
+    only SKIP MXU tiles, they never add work)."""
+    gs = k if group_size is None else min(group_size, k)
+    groups = k // gs
+    m = e * c
+    return KernelCost(
+        site=site, kind="grouped_qmm", bits=bits,
+        bytes_weight=grouped_qmm_weight_bytes(e, k, n, bits, group_size),
         bytes_act=float(m * k + m * 4),
         bytes_out=float(m * n * 4),
         int_ops=2.0 * m * k * n,
@@ -167,9 +199,11 @@ def site_costs_from_tree(params: Any, m: int, *, context: int = 0,
     """Per-site decode-step costs of a (possibly quantized) parameter
     tree at batch ``m``: every 2-D matmul leaf becomes a qmm /
     int8_matmul / fp_matmul cost keyed by its '/'-joined tree path (the
-    same keys ``SensitivityReport`` uses), and with ``cfg`` +
-    ``context`` one ``paged_attention`` site is added per layer at the
-    KV cache's width."""
+    same keys ``SensitivityReport`` uses); 3-D packed expert stacks
+    become one ``grouped_qmm`` row at the layer's MoE capacity (from
+    ``cfg``'s capacity_factor/top_k when given, else segments of ``m``);
+    and with ``cfg`` + ``context`` one ``paged_attention`` site is added
+    per layer at the KV cache's width."""
     from repro.serve.quantized import MATMUL_LEAVES
     from repro.utils.pytree import named_leaves
 
@@ -179,6 +213,17 @@ def site_costs_from_tree(params: Any, m: int, *, context: int = 0,
         if tail not in MATMUL_LEAVES:
             continue
         if isinstance(leaf, QTensor):
+            if leaf.ndim == 3:
+                # packed MoE expert stack: one grouped ragged dispatch at
+                # the layer's capacity-sorted segment shape
+                e, k, n = leaf.shape
+                cap = m
+                if cfg is not None and getattr(cfg, "num_experts", 0):
+                    cap = int(cfg.capacity_factor * m * cfg.top_k / e
+                              + 0.999)
+                costs[name] = grouped_qmm_cost(
+                    name, e, max(cap, 1), k, n, leaf.bits, leaf.group_size)
+                continue
             if leaf.ndim != 2:
                 continue
             k, n = leaf.shape

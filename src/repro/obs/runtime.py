@@ -69,6 +69,10 @@ COUNTERS: Dict[str, CounterSpec] = {
     "paged_calls": CounterSpec("f32", (), "paged-attention dispatches"),
     "paged_tokens_read": CounterSpec(
         "f32", (), "KV tokens attended over across paged reads"),
+    "moe_dropped_tokens": CounterSpec(
+        "f32", (), "MoE token->expert assignments dropped past expert "
+        "capacity (sum over layers; 0 means every routed token was "
+        "served)"),
 }
 
 _DTYPES = {"i32": jnp.int32, "f32": jnp.float32}

@@ -9,15 +9,16 @@ See ``qtensor.py`` for the byte layouts and scale semantics, and
 ``kernels.qmm`` for the fused matmul that consumes it in-kernel.
 """
 from repro.qtensor.qtensor import (
-    PACKED_BITS, QTensor, bytes_per_element, expand_scale, is_qtensor,
-    logical_size, pack, pack_unit, packed_size, qmax_for_bits, quantize,
-    quantize_values, shard, shard_error, storage_summary, tree_has_qtensor,
-    tree_payload_bytes, unpack, unpack_rows)
+    PACKED_BITS, QTensor, bytes_per_element, expand_scale, expert_slice,
+    is_qtensor, logical_size, pack, pack_unit, packed_size, qmax_for_bits,
+    quantize, quantize_experts, quantize_values, shard, shard_error,
+    storage_summary, tree_has_qtensor, tree_payload_bytes, unpack,
+    unpack_rows)
 
 __all__ = [
     "PACKED_BITS", "QTensor", "bytes_per_element", "expand_scale",
-    "is_qtensor", "logical_size", "pack", "pack_unit", "packed_size",
-    "qmax_for_bits", "quantize", "quantize_values", "shard", "shard_error",
-    "storage_summary", "tree_has_qtensor", "tree_payload_bytes", "unpack",
-    "unpack_rows",
+    "expert_slice", "is_qtensor", "logical_size", "pack", "pack_unit",
+    "packed_size", "qmax_for_bits", "quantize", "quantize_experts",
+    "quantize_values", "shard", "shard_error", "storage_summary",
+    "tree_has_qtensor", "tree_payload_bytes", "unpack", "unpack_rows",
 ]

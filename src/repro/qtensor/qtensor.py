@@ -325,6 +325,58 @@ def quantize(x: jnp.ndarray, bits: int, group_size: Optional[int] = None,
                    tuple(x.shape), ax)
 
 
+def quantize_experts(x: jnp.ndarray, bits: int,
+                     group_size: Optional[int] = None) -> QTensor:
+    """Quantize a stacked expert weight tensor (E, K, N) with PER-EXPERT
+    per-(group, out-channel) scales -> packed QTensor.
+
+    ``quantize`` on a 3-D input reduces |max| over the leading dims too,
+    sharing one (1, G, N) scale grid across all experts — fine for a
+    fp-dequant einsum but it couples every expert's grid to the loudest
+    one and makes the stack unshardable by expert (a shard would need
+    scales it does not own). This variant keeps the expert dim in the
+    scale grid, (E, G, N), so slicing expert ``e`` yields exactly
+    ``quantize(x[e], bits, group_size)`` bit-for-bit: the per-expert 2-D
+    view IS a valid ``kernels.qmm`` block, and expert-parallel sharding
+    along dim 0 carries whole self-contained experts
+    (``shard_error(qt, n, 0) is None`` whenever ``n`` divides E).
+    """
+    if x.ndim != 3:
+        raise ValueError(f"expert stacks are 3-D (E, K, N); got {x.shape}")
+    e, k, n = x.shape
+    gs = k if group_size is None else min(group_size, k)
+    if k % gs:
+        raise ValueError(f"group_size {gs} does not divide K ({k})")
+    if bits in _UNITS:
+        if k % _UNITS[bits][0]:
+            raise ValueError(
+                f"{bits}-bit packing needs K ({k}) divisible by "
+                f"{_UNITS[bits][0]}")
+        if gs % _UNITS[bits][0]:
+            raise ValueError(
+                f"group_size {gs} must be a multiple of the {bits}-bit "
+                f"pack unit ({_UNITS[bits][0]})")
+    qmax = qmax_for_bits(bits)
+    x32 = x.astype(jnp.float32)
+    a = jnp.abs(x32).reshape(e, k // gs, gs, n)
+    amax = jnp.max(a, axis=2)                    # (E, G, N) — expert kept
+    scale = (jnp.maximum(amax, 1e-12) / qmax).astype(jnp.float32)
+    q = quantize_values(x32, expand_scale(scale, x.shape), bits)
+    return QTensor(pack(q, bits, 1), scale, bits, tuple(x.shape), 1)
+
+
+def expert_slice(qt: QTensor, e: int) -> QTensor:
+    """Expert ``e`` of a ``quantize_experts`` stack as a self-contained
+    2-D (K, N) QTensor — the dense-loop oracle's per-expert ``qmm``
+    block. Pack axis 1 means the expert dim owns whole bytes, so this is
+    a pure slice of payload and scales."""
+    if qt.ndim != 3:
+        raise ValueError(f"expert_slice needs a 3-D QTensor; got {qt.shape}")
+    scale = qt.scale[e] if qt.scale.shape[0] == qt.shape[0] else qt.scale[0]
+    return QTensor(qt.data[e], scale, qt.bits, qt.shape[1:],
+                   qt.axis - 1 if qt.axis else 0)
+
+
 def pack_unit(bits: int) -> int:
     """Logical elements per indivisible pack unit (1 for unpacked widths)."""
     return _UNITS[bits][0] if bits in _UNITS else 1

@@ -105,6 +105,13 @@ class EngineConfig:
     interleave_steps: int = 4     # decode steps run between prefill chunks
     clock: str = "steps"          # "steps" (deterministic) | "wall" (seconds)
     int8_compute: bool = False    # route int8 blocks through the MXU kernel
+    # MoE expert dispatch for packed expert stacks (int8_compute only):
+    # "grouped" — one grouped ragged kernel over the whole expert stack
+    # (the fast path); "dense" — per-expert qmm loop (the bit-identity
+    # oracle the parity tests pin "grouped" against); "einsum" —
+    # fp-dequant batched einsum (the pre-grouped fallback, also what
+    # non-int8_compute and legacy int8 expert stacks always use)
+    moe_dispatch: str = "grouped"
     # ---- paged KV cache (repro.kvcache) ----
     kv_cache: str = "dense"       # "dense" | "paged"
     page_size: int = 16           # tokens per KV page
@@ -229,11 +236,14 @@ class Engine:
                 return ShardedDequantContext(
                     scales, cfg.param_dtype, self._mesh, self._shard_plan,
                     int8_compute=ecfg.int8_compute,
-                    kv_shards=self._kv_shards, axis_name=self._tp_axis)
+                    kv_shards=self._kv_shards,
+                    moe_dispatch=ecfg.moe_dispatch,
+                    axis_name=self._tp_axis)
             if not scales and not self._qt_params:
                 return Context()
             return DequantContext(scales, cfg.param_dtype,
-                                  int8_compute=ecfg.int8_compute)
+                                  int8_compute=ecfg.int8_compute,
+                                  moe_dispatch=ecfg.moe_dispatch)
 
         def prefill_fn(params, scales, state, toks):
             return prefill_into(params, state, toks, cfg, ctx=make_ctx(scales))

@@ -35,7 +35,8 @@ from repro.core.fit import SensitivityReport
 from repro.core.mpq import greedy_allocate
 from repro.models.context import DequantContext
 from repro.qtensor import (
-    QTensor, is_qtensor, quantize as qt_quantize, shard_error,
+    QTensor, is_qtensor, quantize as qt_quantize,
+    quantize_experts as qt_quantize_experts, shard_error,
     tree_payload_bytes)
 from repro.quant.policy import BitConfig, QuantPolicy
 from repro.utils.logging import get_logger
@@ -119,7 +120,13 @@ def quantize_params(
         b = _block_bits(bit_cfg, name, leaf, policy)
         if b is None:
             return leaf
-        qt = qt_quantize(leaf, b, group_size=group_size)
+        # 3-D MoE expert stacks get PER-EXPERT scale grids (E, G, N): each
+        # expert is a self-contained qmm block — the grouped MoE kernel
+        # and expert-parallel sharding both require it, and it can only
+        # tighten the grid vs the shared-amax alternative.
+        qt = (qt_quantize_experts(leaf, b, group_size=group_size)
+              if leaf.ndim == 3 else
+              qt_quantize(leaf, b, group_size=group_size))
         scales[qw_path(name)] = qt.scale
         hist[b] = hist.get(b, 0) + 1
         return qt
@@ -156,8 +163,12 @@ def quantize_params_int8(
             return leaf
         qmax = float(2 ** (min(b, 8) - 1) - 1)
         w32 = leaf.astype(jnp.float32)
-        amax = jnp.max(jnp.abs(w32), axis=tuple(range(leaf.ndim - 1)),
-                       keepdims=True)
+        # 3-D expert stacks keep the expert dim in the scale — (E, 1, N),
+        # matching quantize_params' per-expert grids so the W8 packed ==
+        # int8-backed bit-identity contract holds for MoE blocks too
+        red = ((1,) if leaf.ndim == 3
+               else tuple(range(leaf.ndim - 1)))
+        amax = jnp.max(jnp.abs(w32), axis=red, keepdims=True)
         scale = jnp.maximum(amax, 1e-12) / qmax
         q = jnp.clip(jnp.round(w32 / scale), -qmax, qmax).astype(jnp.int8)
         # scale shaped for broadcast against the weight: (1,..,1,N)
@@ -186,15 +197,21 @@ def weight_storage_bytes(params) -> float:
 COL_PARALLEL = frozenset({"wq", "wk", "wv", "w_up", "w_gate",
                           "wz", "wx", "wB", "wC", "wdt", "head"})
 ROW_PARALLEL = frozenset({"wo", "w_down", "out_proj"})
+# 3-D stacked-expert blocks: sharded by EXPERT (dim 0) — each shard owns
+# whole self-contained (K, N) qmm blocks with their per-expert scales
+MOE_EXPERT_LEAVES = frozenset({"w_up", "w_gate", "w_down"})
 
 
 def _plan_leaf(name: str, leaf, n_shards: int) -> Tuple[Optional[str],
                                                         Optional[str]]:
     """(layout, reason-not-sharded) for one parameter leaf.
 
-    Only 2-D quantized storage shards (QTensor or legacy int8): the
-    sharded execution path is the integer-exact kernel route, and 3-D
-    expert stacks take the fp-dequant einsum which cannot psum exactly.
+    2-D quantized storage (QTensor or legacy int8) shards col/row; a 3-D
+    ``quantize_experts`` QTensor stack shards by expert ("ep") when the
+    expert count divides the mesh — ``ShardedDequantContext`` then runs
+    each expert's grouped qmm on exactly one shard and combines with an
+    exact zero-padded psum. Legacy shared-scale 3-D stacks (and legacy
+    int8 expert stacks) stay on the replicated fp-dequant einsum path.
     Divisibility/alignment failures degrade to replicated (the
     launch/sharding.py convention), with the reason logged.
     """
@@ -207,6 +224,10 @@ def _plan_leaf(name: str, leaf, n_shards: int) -> Tuple[Optional[str],
         return None, None
     if is_qtensor(leaf):
         if len(leaf.shape) != 2:
+            if (len(leaf.shape) == 3 and tail in MOE_EXPERT_LEAVES
+                    and leaf.scale.shape[0] == leaf.shape[0]):
+                err = shard_error(leaf, n_shards, 0)
+                return ("ep", None) if err is None else (None, err)
             return None, "non-matrix QTensor (fp-dequant einsum path)"
         err = shard_error(leaf, n_shards, axis % 2)
         return (mode, None) if err is None else (None, err)
@@ -228,13 +249,16 @@ def shard_params(params, mesh, scales: Optional[Mapping] = None,
     dim; row-parallel blocks along the reduction (pack) dim, where
     ``qtensor.shard_error`` enforces that shard boundaries land on whole
     pack units AND whole scale groups (each shard dequantizes with its
-    own group-scale rows). Everything else — fp leaves, 3-D expert
-    stacks, blocks that fail alignment — is replicated, so the sharded
-    engine stays bit-identical to tp=1 no matter how much of the tree
-    actually sharded.
+    own group-scale rows); 3-D ``quantize_experts`` stacks co-shard
+    payload and per-expert scales along the EXPERT dim (expert
+    parallelism — each shard owns whole self-contained qmm blocks).
+    Everything else — fp leaves, legacy shared-scale expert stacks,
+    blocks that fail alignment — is replicated, so the sharded engine
+    stays bit-identical to tp=1 no matter how much of the tree actually
+    sharded.
 
     Returns ``(placed_params, placed_scales, plan)`` with ``plan``
-    mapping scoped qw paths to "col"/"row" — the routing table
+    mapping scoped qw paths to "col"/"row"/"ep" — the routing table
     ``ShardedDequantContext`` dispatches on.
     """
     n = mesh.shape[axis_name]
@@ -254,6 +278,7 @@ def shard_params(params, mesh, scales: Optional[Mapping] = None,
             return jax.device_put(leaf, repl)
         plan[qw_path(name)] = mode
         spec = (P(None, axis_name) if mode == "col"
+                else P(axis_name, None, None) if mode == "ep"
                 else P(axis_name, None))
         ns = NamedSharding(mesh, spec)
         if is_qtensor(leaf):
@@ -273,9 +298,10 @@ def shard_params(params, mesh, scales: Optional[Mapping] = None,
             placed_scales[key] = jax.device_put(s, NamedSharding(mesh, spec))
         else:
             placed_scales[key] = jax.device_put(s, repl)
-    log.info("tp=%d sharded materialization: %d col, %d row blocks",
+    log.info("tp=%d sharded materialization: %d col, %d row, %d ep blocks",
              n, sum(1 for v in plan.values() if v == "col"),
-             sum(1 for v in plan.values() if v == "row"))
+             sum(1 for v in plan.values() if v == "row"),
+             sum(1 for v in plan.values() if v == "ep"))
     return placed, placed_scales, plan
 
 
@@ -292,9 +318,11 @@ def sharded_storage_bytes(params, plan: Mapping[str, str],
 
 
 def make_dequant_context(cfg: ModelConfig, scales=None,
-                         int8_compute: bool = False) -> DequantContext:
+                         int8_compute: bool = False,
+                         moe_dispatch: str = "grouped") -> DequantContext:
     return DequantContext(dict(scales) if scales else {}, cfg.param_dtype,
-                          int8_compute=int8_compute)
+                          int8_compute=int8_compute,
+                          moe_dispatch=moe_dispatch)
 
 
 def bit_config_from_report(report: SensitivityReport,

@@ -1,0 +1,276 @@
+"""Grouped ragged MoE qmm: expert-stack quantization, the jnp oracle vs
+the per-expert dense loop, the Pallas kernel vs both, and engine-level
+MoE dispatch parity.
+
+The load-bearing guarantees:
+  * ``quantize_experts`` slices are BIT-identical to quantizing each
+    expert alone (``expert_slice(quantize_experts(w), e) ==
+    quantize(w[e])``), so the grouped path serves the exact same grid
+    the dense loop would;
+  * ``ref.grouped_qmm`` segment s equals ``ref.qmm`` against
+    ``expert_slice(w, expert_ids[s])`` bit-for-bit, with rows past
+    ``counts[s]`` (ragged tails, capacity-dropped rows, empty experts)
+    forced to exact 0.0;
+  * the Pallas kernel matches per-expert ``qmm_pallas`` calls BIT-exactly
+    (same int32 group dots folded in the same order) and the jnp oracle
+    within fp32 summation-order noise;
+  * the serving engine's ``moe_dispatch="grouped"`` path produces tokens
+    bit-identical to the ``"dense"`` per-expert loop it replaced.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import qtensor as qt
+from repro.configs import smoke_config
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.qmm import qmm_pallas
+from repro.kernels.grouped_qmm import grouped_qmm_pallas
+from repro.models import init_params
+from repro.serve import Engine, EngineConfig, quantize_params, trace_requests
+
+ALL_BITS = (8, 6, 4, 3)
+GS = {8: 8, 6: 4, 4: 4, 3: 8}          # pack-unit-aligned group sizes
+
+
+def _rowquant3(x):
+    """Per-row int8 activation quantization over (S, C, K) segments."""
+    xs = np.maximum(np.abs(x).max(axis=2, keepdims=True), 1e-8) / 127.0
+    return np.clip(np.round(x / xs), -127, 127).astype(np.int8), \
+        xs.astype(np.float32)
+
+
+def _make_case(rng, bits, e, k, n, c, gs=None):
+    w = rng.normal(size=(e, k, n)).astype(np.float32)
+    wq = qt.quantize_experts(jnp.asarray(w), bits,
+                             group_size=gs or GS[bits])
+    x = rng.normal(size=(e, c, k)).astype(np.float32)
+    xq, xs = _rowquant3(x)
+    return wq, jnp.asarray(xq), jnp.asarray(xs)
+
+
+# ---------------------------------------------------------------------------
+# quantize_experts / expert_slice
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+def test_quantize_experts_slices_match_per_expert_quantize(rng, bits):
+    """Stacked quantization == per-expert quantization, bit for bit:
+    packed payload, scales, and dequantized values all agree."""
+    e, k, n = 5, 24, 16
+    w = rng.normal(size=(e, k, n)).astype(np.float32)
+    wq = qt.quantize_experts(jnp.asarray(w), bits, group_size=GS[bits])
+    assert wq.shape == (e, k, n) and wq.axis == 1
+    assert wq.scale.shape == (e, k // GS[bits], n)
+    for ei in range(e):
+        single = qt.quantize(jnp.asarray(w[ei]), bits, group_size=GS[bits])
+        sl = qt.expert_slice(wq, ei)
+        assert sl.shape == (k, n) and sl.bits == bits and sl.axis == 0
+        np.testing.assert_array_equal(np.asarray(sl.data),
+                                      np.asarray(single.data))
+        np.testing.assert_array_equal(np.asarray(sl.scale),
+                                      np.asarray(single.scale))
+        np.testing.assert_array_equal(np.asarray(sl.dequantize()),
+                                      np.asarray(single.dequantize()))
+
+
+def test_quantize_experts_rejects_bad_shapes(rng):
+    with pytest.raises(ValueError, match="expert stack"):
+        qt.quantize_experts(jnp.zeros((8, 4)), 8)
+    with pytest.raises(ValueError, match="group_size"):
+        qt.quantize_experts(jnp.zeros((2, 10, 4)), 8, group_size=3)
+
+
+# ---------------------------------------------------------------------------
+# ref.grouped_qmm: the jnp oracle vs the per-expert dense loop
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from(ALL_BITS), seed=st.integers(0, 99),
+       permute=st.sampled_from([False, True]))
+def test_grouped_ref_equals_dense_loop_property(bits, seed, permute):
+    """Ragged counts (incl. empty experts and capacity-dropped rows),
+    optionally permuted expert_ids: every segment of ``ref.grouped_qmm``
+    is BIT-identical to ``ref.qmm`` against that segment's expert slice,
+    and rows past the count are exactly 0.0."""
+    rng = np.random.default_rng(seed)
+    e, k, n, c = int(rng.integers(2, 7)), 24, int(rng.integers(4, 20)), \
+        int(rng.integers(1, 9))
+    wq, xq, xs = _make_case(rng, bits, e, k, n, c)
+    counts = jnp.asarray(rng.integers(0, c + 1, e), jnp.int32)
+    eids = jnp.asarray(rng.permutation(e) if permute else np.arange(e),
+                       jnp.int32)
+    got = np.asarray(ref.grouped_qmm(xq, wq, xs, counts, eids))
+    rows = np.arange(c)[:, None]
+    for s in range(e):
+        want = np.asarray(ref.qmm(xq[s], qt.expert_slice(wq, int(eids[s])),
+                                  xs[s]))
+        want = np.where(rows < int(counts[s]), want, 0.0)
+        np.testing.assert_array_equal(got[s], want)
+
+
+def test_grouped_ref_equals_dense_dequant(rng):
+    """Valid rows match the fully dequantized float matmul (the grid
+    semantics, not just internal consistency)."""
+    wq, xq, xs = _make_case(rng, 4, 4, 32, 12, 6)
+    counts = jnp.asarray([6, 0, 3, 5], jnp.int32)
+    got = np.asarray(ref.grouped_qmm(xq, wq, xs, counts))
+    wd = np.asarray(wq.dequantize())
+    for s in range(4):
+        want = (np.asarray(xq[s], np.float32) * np.asarray(xs[s])) @ wd[s]
+        nc = int(counts[s])
+        np.testing.assert_allclose(got[s, :nc], want[:nc],
+                                   rtol=2e-5, atol=2e-4)
+        assert (got[s, nc:] == 0.0).all()
+
+
+def test_grouped_ref_default_expert_ids_is_identity(rng):
+    wq, xq, xs = _make_case(rng, 8, 3, 16, 8, 4)
+    counts = jnp.asarray([4, 2, 0], jnp.int32)
+    a = np.asarray(ref.grouped_qmm(xq, wq, xs, counts))
+    b = np.asarray(ref.grouped_qmm(xq, wq, xs, counts,
+                                   jnp.arange(3, dtype=jnp.int32)))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+def test_grouped_pallas_bit_matches_per_expert_qmm_pallas(rng, bits):
+    """The kernel contract: segment s == a ``qmm_pallas`` call against
+    ``expert_slice(w, expert_ids[s])``, BIT-exactly (same int32 dots
+    folded through the same fp32 accumulation order). Small bm/bn force
+    padded row/column tiles; counts include an empty expert and
+    capacity-dropped rows."""
+    e, k, n, c = 5, 24, 16, 7
+    wq, xq, xs = _make_case(rng, bits, e, k, n, c)
+    counts = np.array([7, 0, 3, 5, 1], np.int32)
+    eids = np.array([2, 0, 4, 1, 3], np.int32)
+    g = wq.scale.shape[1]
+    got = np.asarray(grouped_qmm_pallas(
+        xq, wq.data, xs, wq.scale, jnp.asarray(counts), jnp.asarray(eids),
+        bits=bits, k=k, bm=4, bn=8, interpret=True))
+    rows = np.arange(c)[:, None]
+    for s in range(e):
+        ws = qt.expert_slice(wq, int(eids[s]))
+        want = np.asarray(qmm_pallas(xq[s], ws.data, xs[s],
+                                     ws.scale.reshape(g, n), bits=bits, k=k,
+                                     bm=4, bn=8, interpret=True))
+        np.testing.assert_array_equal(
+            got[s], np.where(rows < counts[s], want, 0.0))
+
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+def test_grouped_pallas_matches_ref(rng, bits):
+    """Kernel vs jnp oracle: only fp32 summation-order noise (same
+    tolerance convention as test_qmm_pallas_matches_ref)."""
+    e, k, n, c = 4, 48, 33, 9
+    wq, xq, xs = _make_case(rng, bits, e, k, n, c, gs=12 if bits in (8, 4)
+                            else GS[bits] * 2)
+    counts = jnp.asarray([9, 4, 0, 6], jnp.int32)
+    eids = jnp.asarray([1, 3, 0, 2], jnp.int32)
+    want = ref.grouped_qmm(xq, wq, xs, counts, eids)
+    got = grouped_qmm_pallas(xq, wq.data, xs, wq.scale, counts, eids,
+                             bits=bits, k=k, bm=4, bn=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_grouped_pallas_rejects_shared_scales(rng):
+    """The kernel requires per-expert (E, G, N) scales; a legacy shared
+    stack must be broadcast by the dispatch layer first."""
+    wq, xq, xs = _make_case(rng, 4, 3, 16, 8, 4)
+    counts = jnp.zeros(3, jnp.int32)
+    eids = jnp.arange(3, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="per-expert"):
+        grouped_qmm_pallas(xq, wq.data, xs, wq.scale[:1], counts, eids,
+                           bits=4, k=16, interpret=True)
+
+
+def test_ops_grouped_qmm_ref_route_is_oracle(rng, monkeypatch):
+    """REPRO_KERNELS=ref: the dispatch layer returns the oracle verbatim
+    (the engine's bit-identity contract is stated on this route)."""
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    wq, xq, xs = _make_case(rng, 6, 3, 24, 8, 5)
+    counts = jnp.asarray([5, 0, 2], jnp.int32)
+    got = kops.grouped_qmm(xq, wq, xs, counts)
+    want = ref.grouped_qmm(xq, wq, xs, counts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# engine: grouped dispatch == dense per-expert loop, bit for bit
+# ---------------------------------------------------------------------------
+
+TRACE = [(0, 8, 5), (0, 12, 7), (3, 6, 4)]
+ECFG = dict(max_slots=2, max_len=64, max_new_tokens=16,
+            prefill_chunk=4, decode_burst=4)
+
+
+@pytest.mark.parametrize("arch", ["deepseek_moe_16b", "olmoe_1b_7b"])
+def test_engine_moe_grouped_matches_dense_loop(arch, monkeypatch):
+    """Packed W4 MoE serving: ``moe_dispatch="grouped"`` (one kernel per
+    projection) is bit-identical to ``"dense"`` (per-expert qmm loop) —
+    the acceptance oracle for the grouped rewrite. Run on the ref route,
+    where the contract is exact by construction (see
+    ops.qmm_group_products for the convention)."""
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    cfg = dataclasses.replace(smoke_config(arch), scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    qtp, _ = quantize_params(params, 4, group_size=8)
+    moe0 = qtp["layers"]["0"]["moe"]
+    assert isinstance(moe0["w_up"], qt.QTensor)
+    assert moe0["w_up"].scale.shape[0] == cfg.num_experts  # per-expert scales
+    outs = {}
+    for dispatch in ("grouped", "dense"):
+        ecfg = EngineConfig(int8_compute=True, moe_dispatch=dispatch, **ECFG)
+        fin, _ = Engine(qtp, cfg, ecfg).run(trace_requests(cfg, TRACE))
+        assert len(fin) == len(TRACE)
+        outs[dispatch] = [np.asarray(r.output_tokens) for r in fin]
+    for a, b in zip(outs["grouped"], outs["dense"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_config_rejects_unknown_dispatch():
+    from repro.models.context import DequantContext
+    with pytest.raises(ValueError, match="moe_dispatch"):
+        DequantContext({}, jnp.float32, moe_dispatch="turbo")
+
+
+def test_moe_obs_dropped_tokens_and_router_flip_gauge(monkeypatch):
+    """MoE serving observability: the capacity-drop device counter
+    drains, and the drift monitor's router top-k flip gauge records
+    fp-vs-quantized routing comparisons (surfaced via collect_gauges)."""
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    from repro.obs import ObsConfig
+    from repro.obs.drift import DriftMonitor
+    from repro.obs.gauges import collect_gauges
+    cfg = dataclasses.replace(smoke_config("olmoe_1b_7b"), scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    qtp, scales = quantize_params(params, 4, group_size=8)
+    eng = Engine(qtp, cfg,
+                 EngineConfig(int8_compute=True,
+                              obs=ObsConfig(device_metrics=True,
+                                            drain_every=2), **ECFG),
+                 scales=scales)
+    mon = DriftMonitor(params, {}, every=4).attach(eng)
+    fin, _ = eng.run(trace_requests(cfg, TRACE))
+    assert len(fin) == len(TRACE)
+    totals = eng.counters.totals()
+    # registered, drained, and non-negative (0 == nothing dropped)
+    assert totals["moe_dropped_tokens"] >= 0.0
+    assert mon.samples, "drift cadence never fired"
+    assert mon.router_flips, "router_logits taps not observed"
+    rep = mon.drift_report()
+    assert rep["router_flip_rate"] is not None
+    assert 0.0 <= rep["router_flip_rate"] <= 1.0
+    g = collect_gauges(eng)
+    assert g["router_topk_flip_rate"] == pytest.approx(
+        rep["router_flip_rate"])

@@ -29,8 +29,9 @@ from repro.kvcache.paged import PagedKVConfig, init_paged_kv
 from repro.models import init_params
 from repro.obs import ObsConfig, Tracer, validate_chrome_trace
 from repro.obs.perf import (
-    DispatchTimer, attribute, check_regression, format_table, kv_pool_bytes,
-    load_history, metric_direction, qmm_cost, qmm_weight_bytes, roofline,
+    DispatchTimer, attribute, check_regression, format_table,
+    grouped_qmm_cost, grouped_qmm_weight_bytes, kv_pool_bytes, load_history,
+    metric_direction, qmm_cost, qmm_weight_bytes, roofline,
     site_costs_from_tree)
 from repro.obs.perf.history import append_run
 from repro.obs.trace import DEVICE_TID
@@ -69,6 +70,51 @@ def test_qmm_weight_bytes_match_storage_exactly(bits, group_size):
     # and through the KernelCost composition
     c = qmm_cost("w", 4, k, n, bits, group_size)
     assert c.bytes_weight == summary["packed_bytes"]
+
+
+@pytest.mark.parametrize("bits", [8, 6, 4, 3])
+@pytest.mark.parametrize("group_size", [8, 16, None])
+def test_grouped_qmm_weight_bytes_match_storage_exactly(bits, group_size):
+    """The (E, K, N) expert stack's cost-model bytes == realized packed
+    storage of the stack AND E x the per-expert slice storage (the
+    dense-loop equivalence: one grouped dispatch streams exactly what E
+    per-expert dispatches would)."""
+    from repro.qtensor import expert_slice, quantize_experts
+    e, k, n = 4, 32, 24
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(e, k, n)),
+                    jnp.float32)
+    stack = quantize_experts(w, bits, group_size=group_size)
+    want = storage_summary([stack])["packed_bytes"]
+    assert grouped_qmm_weight_bytes(e, k, n, bits, group_size) == want
+    per_expert = storage_summary([expert_slice(stack, 0)])["packed_bytes"]
+    assert want == e * per_expert, (bits, group_size)
+    # and through the KernelCost composition
+    c = grouped_qmm_cost("moe/w_up", e, 4, k, n, bits, group_size)
+    assert c.kind == "grouped_qmm" and c.bytes_weight == want
+
+
+def test_site_costs_moe_tree_has_grouped_rows():
+    """A quantized MoE tree: expert stacks cost as grouped_qmm rows at
+    the config's capacity, 2-D blocks as qmm — and summed weight bytes
+    still cover the tree's realized storage exactly."""
+    cfg = dataclasses.replace(smoke_config("deepseek_moe_16b"),
+                              scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    qparams, _ = quantize_params(params, 4, group_size=8)
+    costs = site_costs_from_tree(qparams, 4, cfg=cfg)
+    kinds = {c.kind for c in costs.values()}
+    assert "grouped_qmm" in kinds and "qmm" in kinds
+    grouped = {s: c for s, c in costs.items() if c.kind == "grouped_qmm"}
+    # one row per expert-stack projection (w_up/w_gate/w_down x layers)
+    assert len(grouped) == 3 * cfg.num_layers
+    cap = int(cfg.capacity_factor * 4 * cfg.top_k / cfg.num_experts + 0.999)
+    for s, c in grouped.items():
+        assert s.split("/")[-1] in ("w_up", "w_gate", "w_down")
+        e, k, n = qparams["layers"]["0"]["moe"][s.split("/")[-1]].shape
+        assert c.bytes_act == max(cap, 1) * e * (k + 4)
+    total = sum(c.bytes_weight for c in costs.values()
+                if c.kind in ("qmm", "grouped_qmm"))
+    assert total == storage_summary(qparams)["packed_bytes"]
 
 
 @pytest.mark.parametrize("bits", [8, 6, 4, 3])

@@ -86,7 +86,8 @@ WORKER = """
                 max_new_tokens=spec["max_new"], prefill_chunk=4,
                 decode_burst=4, int8_compute=True,
                 kv_cache="paged" if spec["paged"] else "dense",
-                page_size=spec.get("page_size", 16))
+                page_size=spec.get("page_size", 16),
+                moe_dispatch=spec.get("moe_dispatch", "grouped"))
     kvb = spec.get("kv_bits")
     oracle = Engine(qp, cfg, EngineConfig(**ecfg), kv_bits=kvb)
     ref, _ = oracle.run(reqs())
@@ -97,6 +98,9 @@ WORKER = """
         assert eng._shard_plan, "no block sharded: the tp path is idle"
         if spec.get("expect_kv_shards"):
             assert eng._kv_shards == tp, (eng._kv_shards, tp)
+        if spec.get("expect_ep"):
+            assert any(m == "ep" for m in eng._shard_plan.values()), \
+                f"no expert-parallel block at tp={tp}: {eng._shard_plan}"
         got, _ = eng.run(reqs())
         assert len(got) == len(ref)
         for a, b in zip(ref, got):
@@ -125,8 +129,14 @@ def _matrix_spec(**over):
 @pytest.mark.parametrize("family,over", [
     # dense with 8 kv heads: page pools kv-head-shard at EVERY tp degree
     ("dense", dict(num_heads=8, num_kv_heads=8, expect_kv_shards=True)),
-    # moe (shared experts + router stay replicated; attention shards)
-    ("moe", dict(arch="deepseek_moe_16b", group_size=4)),
+    # moe: expert stacks shard expert-parallel (grouped qmm per shard,
+    # psum combine); shared experts col/row-shard; router replicated
+    ("moe", dict(arch="deepseek_moe_16b", group_size=4, expect_ep=True)),
+    # moe cross-dispatch: the tp=1 oracle runs the dense per-expert qmm
+    # loop while the tp engines run expert-parallel grouped kernels —
+    # bit-identity across BOTH the sharding and the dispatch rewrite
+    ("moe-dense", dict(arch="deepseek_moe_16b", group_size=4,
+                       expect_ep=True, moe_dispatch="dense")),
     # hybrid: mamba blocks replicated-state, shared attn pages sharded
     ("hybrid", dict(arch="zamba2_7b", kv_bits=4, max_len=64)),
 ])
@@ -162,10 +172,11 @@ def _encode_trace(rng: np.random.Generator, n_req: int, max_len: int,
        paged=st.sampled_from([True, False]),
        kv_bits=st.sampled_from([None, 8, 4]),
        n_req=st.integers(3, 5),
-       temperature=st.sampled_from([0.0, 0.8]))
+       temperature=st.sampled_from([0.0, 0.8]),
+       moe_dispatch=st.sampled_from(["grouped", "dense"]))
 def test_sharded_serve_differential_fuzz(example, arch, tp, widths_pick,
                                          paged, kv_bits, n_req,
-                                         temperature):
+                                         temperature, moe_dispatch):
     """Differential fuzzer: random (arch x BitConfig x trace x tp) engine
     runs must reproduce the tp=1 oracle's token streams bit for bit.
     Each example is one 8-device subprocess (fresh jax)."""
@@ -185,6 +196,10 @@ def test_sharded_serve_differential_fuzz(example, arch, tp, widths_pick,
         param_seed=int(rng.integers(0, 99)),
         req_seed=int(rng.integers(0, 99)),
         shared_prefix=int(rng.integers(0, 2)) * 8,
+        moe_dispatch=moe_dispatch,      # inert for the dense archs; for
+                                        # moe it differentials the tp=1
+                                        # oracle's dispatch too
+        expect_ep=(arch == "olmoe_1b_7b"),
         tps=[tp])
     out = run_sub(WORKER, spec=spec)
     assert "SHARDED-PARITY-OK" in out
