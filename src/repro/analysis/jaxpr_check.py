@@ -258,6 +258,7 @@ def _smoke_engine(variant: str, mesh=None):
         Engine, EngineConfig, quantize_params, quantize_params_int8)
 
     moe = variant.startswith("moe")
+    spec = variant.startswith("spec")
     cfg = smoke_config("deepseek_moe_16b" if moe else "internlm2_1_8b")
     ecfg = dict(max_slots=2, max_len=32, max_new_tokens=8,
                 prefill_chunk=8, decode_burst=4)
@@ -267,14 +268,22 @@ def _smoke_engine(variant: str, mesh=None):
     else:
         cfg = dc.replace(cfg, scan_layers=False)
         params = init_params(cfg, jax.random.key(0))
-        if variant in ("qtensor", "paged", "sharded", "obs", "perf") or moe:
+        if variant in ("qtensor", "paged", "sharded", "obs", "perf") \
+                or moe or spec:
             params, scales = quantize_params(params, 4, group_size=8)
             ecfg["int8_compute"] = True
         elif variant == "int8":
             params, scales = quantize_params_int8(params, 8)
             ecfg["int8_compute"] = True
-        if variant in ("paged", "sharded", "obs", "perf"):
+        if variant in ("paged", "sharded", "obs", "perf", "spec-paged"):
             ecfg.update(kv_cache="paged", page_size=8)
+        if spec:
+            # draft/verify loop: W4 serving tree narrowed to a W3 draft,
+            # low-bit draft KV lane (int8 dense / packed int4 paged)
+            from repro.serve import SpecConfig
+            ecfg["spec"] = SpecConfig(
+                k=3, draft_bits=3,
+                draft_kv_bits=4 if variant == "spec-paged" else 8)
         if variant == "moe-dense":
             # the per-expert qmm loop the grouped kernel is pinned against
             ecfg["moe_dispatch"] = "dense"
@@ -312,6 +321,20 @@ def _engine_target_pair(variant: str, mesh=None) -> List[TraceTarget]:
         out = eng._put_repl(jnp.zeros(eng._out_shape, jnp.int32))
         slots = eng._fresh_slot_table()
         ctr = eng._fresh_counters()
+        if variant.startswith("spec"):
+            # the speculative dispatch: k draft invocations (2-token
+            # catch-up + k-1 steps) + one fused multi-token verify +
+            # coupled accept, all in one graph — the same hot-path
+            # rules apply (the only host transfer is the audited
+            # n_emit fetch OUTSIDE this function)
+            dstate = eng._fresh_draft_state()
+            ptok = eng._put_repl(jnp.zeros(eng._tok_shape, jnp.int32))
+            step = ft.partial(eng._spec_step, k=eng._spec.k,
+                              mode="greedy", stats=bool(ctr))
+            return jax.make_jaxpr(
+                lambda *a: step(*a))(eng.params, eng.scales,
+                                     eng._draft_params, state, dstate,
+                                     ptok, tok, out, slots, ctr)
         # stats=True traces the WORST-case burst flavor (sampled
         # element-wise clip stats included) — the hot-path audit must
         # hold for the heaviest graph the cadence can dispatch
@@ -346,8 +369,10 @@ def collect_targets(sharded: Optional[bool] = None) -> Tuple[
     # (one grouped ragged kernel per projection vs the per-expert qmm
     # loop it replaced — both graphs must satisfy the same hot-path and
     # exactness rules, since either can serve as the parity oracle)
+    # spec/spec-paged: the speculative draft/verify dispatch — both KV
+    # lane shapes (dense int8 draft cache, paged packed-int4 draft pools)
     for variant in ("dense", "qtensor", "int8", "paged", "obs", "perf",
-                    "moe-grouped", "moe-dense"):
+                    "moe-grouped", "moe-dense", "spec", "spec-paged"):
         targets.extend(_engine_target_pair(variant))
     want_sharded = (len(jax.devices()) >= 2) if sharded is None else sharded
     if want_sharded:

@@ -9,7 +9,12 @@ from repro.core.hessian import (
     hutchinson_block_traces,
     exact_block_traces,
 )
-from repro.core.fit import PackedReport, SensitivityReport
+from repro.core.fit import (
+    PackedReport,
+    SensitivityReport,
+    DraftPlan,
+    allocate_draft_bits,
+)
 from repro.core.heuristics import (
     ALL_METRICS,
     qr_metric,

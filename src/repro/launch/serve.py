@@ -33,6 +33,15 @@ through the grouped ragged quantized kernel by default; ``--moe-dispatch
 dense`` selects the per-expert loop oracle (bit-identical outputs) and
 ``--tp N`` additionally shards the expert stacks expert-parallel.
 
+Speculative decoding: ``--spec-k K`` (K >= 2) turns on the
+self-speculative draft/verify loop (``repro.serve.spec``) — emitted
+token streams stay bit-identical to non-speculative serving;
+``--spec-bits B`` additionally narrows the packed QTensor tree to B-bit
+draft weights (requires ``--packed``; pass ``--spec-bits fit:AVG`` to
+FIT-allocate a mixed draft config at AVG average bits from a fresh
+sensitivity report), and ``--spec-kv-bits`` sets the draft KV lane's
+storage width (8/16 dense, any paged width when ``--paged``).
+
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
       --smoke --batch 8 --prompt-len 64 --gen-len 32 --weight-bits 8
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \\
@@ -102,16 +111,20 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
           metrics_file: Optional[str] = None,
           metrics_port: Optional[int] = None, drain_every: int = 8,
           drift_every: int = 0, drift_stale: float = 1.0,
-          drift_threshold: float = 1.5) -> Dict:
+          drift_threshold: float = 1.5, spec_k: int = 0,
+          spec_bits: Optional[str] = None,
+          spec_kv_bits: Optional[int] = None) -> Dict:
     """Build the model + engine, run the load, return results + metrics."""
     cfg = smoke_config(arch) if smoke else get_config(arch)
+    spec_fit = spec_bits is not None and str(spec_bits).startswith("fit:")
     if int8 or packed or paged or drift_every:
         # per-layer dequant scales / page pools / payload shapes are
         # path-keyed: needs the unrolled layer layout (drift's per-site
         # probes key on unrolled paths too)
         cfg = dataclasses.replace(cfg, scan_layers=False)
     params = init_params(cfg, jax.random.key(seed))
-    fp_params = params if drift_every else None   # pre-PTQ drift reference
+    # pre-PTQ fp reference: drift probes + the FIT draft-bits report
+    fp_params = params if (drift_every or spec_fit) else None
 
     mesh = None
     if tp > 1:
@@ -138,6 +151,43 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
             params, scales = quantize_params_int8(params, weight_bits, policy)
         else:
             params = quantize_weights(params, weight_bits, policy)
+
+    spec = None
+    draft_plan = None
+    if spec_k and spec_k > 1:
+        from repro.serve import SpecConfig
+        draft_bits = None
+        if spec_bits is not None:
+            if not packed:
+                raise ValueError(
+                    "--spec-bits narrows the packed QTensor tree for the "
+                    "draft pass; it requires --packed")
+            if spec_fit:
+                # FIT-allocated mixed draft config: smoke sensitivity
+                # report on synthetic calibration batches, then the
+                # greedy knapsack at the requested average draft budget
+                from repro.core import allocate_draft_bits, build_report
+                from repro.data.synthetic import LMStreamConfig, lm_batches
+                from repro.models import loss_fn as model_loss
+                avg = float(str(spec_bits).split(":", 1)[1])
+                stream = lm_batches(LMStreamConfig(
+                    vocab_size=cfg.vocab_size, seq_len=32, global_batch=4,
+                    seed=seed))
+                report = build_report(
+                    lambda p, b: model_loss(p, b, cfg), None, None, None,
+                    fp_params, [next(stream) for _ in range(2)],
+                    microbatch=4, tolerance=None, max_batches=2)
+                draft_plan = allocate_draft_bits(report, policy,
+                                                 avg_bits=avg)
+                draft_bits = draft_plan.bits
+                log.info("FIT draft plan: %.2f avg bits, KL proxy %.4g, "
+                         "accept proxy %.2f", draft_plan.avg_bits,
+                         draft_plan.kl_proxy, draft_plan.accept_proxy)
+            else:
+                draft_bits = int(spec_bits)
+        spec = SpecConfig(k=spec_k, draft_bits=draft_bits,
+                          draft_kv_bits=spec_kv_bits if spec_kv_bits
+                          is not None else 8)
 
     sampling = sampling or SamplingParams()
     if n_requests is None:
@@ -167,7 +217,7 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
         decode_burst=decode_burst, clock=clock, int8_compute=int8_compute,
         kv_cache="paged" if paged else "dense", page_size=page_size,
         kv_pages=kv_pages, prefix_sharing=prefix_sharing, mesh=mesh,
-        moe_dispatch=moe_dispatch, obs=obs)
+        moe_dispatch=moe_dispatch, obs=obs, spec=spec)
     engine = Engine(params, cfg, ecfg, scales=scales, kv_bits=kv_bits)
 
     monitor = None
@@ -225,6 +275,21 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen_len: int,
             "counters": engine.counters.totals(),
             "rates": engine.counters.rates(),
         }
+    if spec is not None:
+        st = engine.spec_stats
+        rate = st["accepted"] / max(st["proposed"], 1)
+        out["spec"] = {"k": spec.k, "draft_bits": str(spec.draft_bits),
+                       "draft_kv_bits": spec.draft_kv_bits,
+                       "dispatches": st["dispatches"],
+                       "proposed": st["proposed"],
+                       "accepted": st["accepted"], "accept_rate": rate}
+        if draft_plan is not None:
+            out["spec"]["fit_avg_bits"] = draft_plan.avg_bits
+            out["spec"]["fit_kl_proxy"] = draft_plan.kl_proxy
+            out["spec"]["fit_accept_proxy"] = draft_plan.accept_proxy
+        log.info("spec decode: k=%d, %d dispatches, accept rate %.0f%% "
+                 "(%d/%d drafts)", spec.k, st["dispatches"], 100 * rate,
+                 st["accepted"], st["proposed"])
     if monitor is not None:
         rep = monitor.drift_report()
         out["drift"] = rep
@@ -295,6 +360,21 @@ def main() -> None:
                          "grouped ragged kernel per projection (default), "
                          "the dense per-expert qmm loop (bit-identical "
                          "oracle), or the fp-dequant einsum fallback")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens proposed per "
+                         "dispatch (>= 2 enables the draft/verify loop; "
+                         "emitted streams stay bit-identical to "
+                         "non-speculative serving)")
+    ap.add_argument("--spec-bits", default=None,
+                    help="draft weight widths: an int narrows every "
+                         "quantizable QTensor block for the draft pass "
+                         "(requires --packed); 'fit:AVG' FIT-allocates a "
+                         "mixed draft config at AVG average bits from a "
+                         "smoke sensitivity report; default reuses the "
+                         "serving tree")
+    ap.add_argument("--spec-kv-bits", type=int, default=None,
+                    help="draft KV lane storage width (default 8; dense "
+                         "serving supports 8/16, --paged any of 16/8/6/4/3)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -344,9 +424,10 @@ def main() -> None:
                 metrics_port=args.metrics_port,
                 drain_every=args.drain_every,
                 drift_every=args.drift_every, drift_stale=args.drift_stale,
-                drift_threshold=args.drift_threshold)
+                drift_threshold=args.drift_threshold, spec_k=args.spec_k,
+                spec_bits=args.spec_bits, spec_kv_bits=args.spec_kv_bits)
     dump = {"metrics": out["metrics"]}
-    for k in ("observability", "drift"):
+    for k in ("observability", "drift", "spec"):
         if k in out:
             dump[k] = out[k]
     print(json.dumps(dump, indent=2))

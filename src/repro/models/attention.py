@@ -134,23 +134,34 @@ class KVCache(NamedTuple):
 def attention_decode(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
                      cache: KVCache, pos: jnp.ndarray
                      ) -> Tuple[jnp.ndarray, KVCache]:
-    """One-token decode. x: (B, 1, D).
+    """Decode x: (B, T, D) query tokens at consecutive positions.
 
     ``pos`` is either a () scalar (whole batch at one position — the
     static-batch path) or a (B,) vector of per-slot positions (the
     continuous-batching engine, where every slot runs its own request at
-    its own offset). Per-row cache scatter + per-row causal masks keep
-    each row's numerics identical to a batch-of-one decode.
+    its own offset); row b's tokens land at pos[b] .. pos[b]+T-1.
+    Per-row cache scatter + per-row causal masks keep each row's numerics
+    identical to a batch-of-one decode.
+
+    T > 1 is the speculative-verify path: all T K/V rows are written
+    first, then every query attends under its own causal mask — masked
+    scores are forced to NEG_INF before softmax (exp -> exact 0.0), so
+    position j's output never sees the in-block writes at j' > j and each
+    row is bitwise identical to T sequential one-token decodes.
     """
-    b = x.shape[0]
+    b, tq = x.shape[0], x.shape[1]
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = h // kv
     t = cache.k.shape[1]
 
-    q = ctx.matmul("wq", x, p["wq"]).reshape(b, 1, h, hd)
-    knew = ctx.matmul("wk", x, p["wk"]).reshape(b, 1, kv, hd)
-    vnew = ctx.matmul("wv", x, p["wv"]).reshape(b, 1, kv, hd)
-    posb = jnp.broadcast_to(pos[None], (b, 1)) if pos.ndim == 0 else pos[:, None]
+    q = ctx.matmul("wq", x, p["wq"]).reshape(b, tq, h, hd)
+    knew = ctx.matmul("wk", x, p["wk"]).reshape(b, tq, kv, hd)
+    vnew = ctx.matmul("wv", x, p["wv"]).reshape(b, tq, kv, hd)
+    offs = jnp.arange(tq, dtype=jnp.int32)
+    if pos.ndim == 0:
+        posb = jnp.broadcast_to((pos + offs)[None, :], (b, tq))
+    else:
+        posb = pos[:, None] + offs[None, :]
     q = apply_rope(q, posb, cfg.rope_theta)
     knew = apply_rope(knew, posb, cfg.rope_theta)
 
@@ -168,25 +179,31 @@ def attention_decode(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
     if pos.ndim == 0:
         kc = jax.lax.dynamic_update_slice_in_dim(cache.k, to_cache(knew), pos, 1)
         vc = jax.lax.dynamic_update_slice_in_dim(cache.v, to_cache(vnew), pos, 1)
-        mask = jnp.arange(t)[None, None, None, :] <= pos
     else:
         rows = jnp.arange(b)
-        kc = cache.k.at[rows, pos].set(to_cache(knew)[:, 0])
-        vc = cache.v.at[rows, pos].set(to_cache(vnew)[:, 0])
-        mask = jnp.arange(t)[None, None, None, :] <= pos[:, None, None, None]
+        kc = cache.k.at[rows[:, None], posb].set(to_cache(knew))
+        vc = cache.v.at[rows[:, None], posb].set(to_cache(vnew))
+    mask = jnp.arange(t)[None, None, :] <= posb[:, :, None]    # (B, T, t)
     kc = constrain(kc, "batch", "cache_seq", "kv_heads", None)
     vc = constrain(vc, "batch", "cache_seq", "kv_heads", None)
     k_eff = kc.astype(x.dtype) * KV_SCALE if quant_cache else kc
     v_eff = vc.astype(x.dtype) * KV_SCALE if quant_cache else vc
 
-    # grouped-query attention against the cache (no KV repetition)
-    qg = q.reshape(b, kv, g, hd)
+    # grouped-query attention against the cache (no KV repetition); the T
+    # query positions fold into the grouped-head axis so one einsum pair
+    # serves the whole block (per-row dots — bitwise equal to T calls)
+    qg = (q.reshape(b, tq, kv, g, hd).transpose(0, 2, 1, 3, 4)
+          .reshape(b, kv, tq * g, hd))
     sc = jnp.einsum("bkgd,btkd->bkgt", qg, k_eff,
                     preferred_element_type=jnp.float32) * (hd ** -0.5)
-    sc = jnp.where(mask, sc, NEG_INF)
+    mg = jnp.broadcast_to(mask[:, None, :, None, :],
+                          (b, kv, tq, g, t)).reshape(b, kv, tq * g, t)
+    sc = jnp.where(mg, sc, NEG_INF)
     pr = jax.nn.softmax(sc, axis=-1)
     o = jnp.einsum("bkgt,btkd->bkgd", pr.astype(v_eff.dtype), v_eff)
-    o = ctx.tap("attn_out", o.reshape(b, 1, h * hd))
+    o = (o.reshape(b, kv, tq, g, hd).transpose(0, 2, 1, 3, 4)
+         .reshape(b, tq, h * hd))
+    o = ctx.tap("attn_out", o)
     return ctx.matmul("wo", o, p["wo"]), KVCache(kc, vc)
 
 
@@ -213,39 +230,52 @@ def attention_decode_paged(x: jnp.ndarray, p: Dict, cfg: ModelConfig, ctx,
     from repro.kernels import ops as kops       # deferred: import cycle
     from repro.kvcache.paged import quantize_kv
 
-    b = x.shape[0]
+    b, tq = x.shape[0], x.shape[1]
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
 
-    q = ctx.matmul("wq", x, p["wq"]).reshape(b, 1, h, hd)
-    knew = ctx.matmul("wk", x, p["wk"]).reshape(b, 1, kv, hd)
-    vnew = ctx.matmul("wv", x, p["wv"]).reshape(b, 1, kv, hd)
-    posb = pos[:, None]
+    q = ctx.matmul("wq", x, p["wq"]).reshape(b, tq, h, hd)
+    knew = ctx.matmul("wk", x, p["wk"]).reshape(b, tq, kv, hd)
+    vnew = ctx.matmul("wv", x, p["wv"]).reshape(b, tq, kv, hd)
+    posb = pos[:, None] + jnp.arange(tq, dtype=jnp.int32)[None, :]
     q = apply_rope(q, posb, cfg.rope_theta)
     knew = apply_rope(knew, posb, cfg.rope_theta)
 
     page, num_pages = lp.page_size, lp.num_pages
     rows = jnp.arange(b)
-    col = jnp.clip(pos // page, 0, table.shape[1] - 1)
-    pid = jnp.where(pos < write_limit, table[rows, col], num_pages)
-    off = pos % page
+    col = jnp.clip(posb // page, 0, table.shape[1] - 1)     # (B, T)
+    pid = jnp.where(posb < write_limit[:, None],
+                    table[rows[:, None], col], num_pages)
+    off = posb % page
     sp = jnp.clip(pid, 0, num_pages - 1)
 
     shards = getattr(ctx, "kv_shards", 1)
     if shards > 1 and kv % shards == 0:
+        if tq != 1:
+            raise NotImplementedError(
+                "multi-token paged decode (speculative verify) is not "
+                "supported under kv-head-sharded serving (mesh=...)")
         kc, vc, o = _paged_update_attend_sharded(
-            ctx, lp, q, knew, vnew, table, pos, pid, off, sp, cfg)
+            ctx, lp, q, knew, vnew, table, pos, pid[:, 0], off[:, 0],
+            sp[:, 0], cfg)
     else:
         if lp.bits < 16:
-            kq = quantize_kv(knew[:, 0], lp.k_scale[sp], lp.bits)
-            vq = quantize_kv(vnew[:, 0], lp.v_scale[sp], lp.bits)
+            kq = quantize_kv(knew, lp.k_scale[sp], lp.bits)
+            vq = quantize_kv(vnew, lp.v_scale[sp], lp.bits)
         else:
-            kq = knew[:, 0].astype(lp.k.dtype)
-            vq = vnew[:, 0].astype(lp.v.dtype)
+            kq = knew.astype(lp.k.dtype)
+            vq = vnew.astype(lp.v.dtype)
+        # write the whole block first ((pid, off) pairs are distinct), then
+        # read per query position with its own length mask — positions
+        # past a query's own offset are masked by the read, so each read
+        # is bitwise identical to the sequential one-token decode
         kc = lp.k.at[pid, off].set(kq, mode="drop")
         vc = lp.v.at[pid, off].set(vq, mode="drop")
-        o = kops.paged_attention(q, kc, vc, table, pos, lp.k_scale,
-                                 lp.v_scale, lp.bits)
-    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+        outs = [kops.paged_attention(q[:, j:j + 1], kc, vc, table,
+                                     posb[:, j], lp.k_scale, lp.v_scale,
+                                     lp.bits)
+                for j in range(tq)]
+        o = outs[0] if tq == 1 else jnp.stack(outs, axis=1)
+    o = o.reshape(b, tq, h * hd).astype(x.dtype)
     o = ctx.tap("attn_out", o)
     return ctx.matmul("wo", o, p["wo"]), dataclasses.replace(lp, k=kc, v=vc)
 

@@ -164,9 +164,13 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
                 embed: Optional[jnp.ndarray] = None,
                 ctx: Optional[Context] = None
                 ) -> Tuple[jnp.ndarray, DecodeState]:
-    """One token for the whole stack. tokens: (B,1)[,CB] -> logits (B,1,V).
+    """Decode tokens (B,T)[,CB] -> logits (B,T,V); T=1 is the plain
+    one-token step, T>1 the speculative multi-token verify forward (each
+    position's logits bitwise equal to T sequential one-token steps for
+    the attention families; ssm/hybrid recurrences admit no in-block
+    causal masking, so they reject T>1).
 
-    ``embed`` (B,1,D) bypasses the token embedding — used to ingest
+    ``embed`` (B,T,D) bypasses the token embedding — used to ingest
     frontend-stub embeddings (VLM image patches) during prefill.
     ``ctx`` hooks weight access (e.g. DequantContext for int8 serving)."""
     ctx = ctx or Context()
@@ -175,6 +179,11 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
     x = embed if embed is not None else _embed_token(params, tokens, cfg)
     x = x.astype(cfg.param_dtype)
     x = constrain(x, "batch", None, None)
+    tq = x.shape[1]
+    if tq != 1 and cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"multi-token decode needs a rollback-able cache; family "
+            f"{cfg.family!r} carries recurrent state (T={tq})")
     pos = state.pos
 
     unrolled = isinstance(params["layers"], dict) and "0" in params["layers"] \
@@ -197,7 +206,7 @@ def decode_step(params, state: DecodeState, tokens: jnp.ndarray,
                 return h, c
 
             x, new_kv = jax.lax.scan(body, x, (params["layers"], state.kv))
-        new_state = DecodeState(pos=pos + 1, kv=new_kv)
+        new_state = DecodeState(pos=pos + tq, kv=new_kv)
     elif cfg.family == "ssm":
         if unrolled:
             sts = []
@@ -281,6 +290,11 @@ def _decode_step_paged(params, state: DecodeState, tokens: jnp.ndarray,
     x = embed if embed is not None else _embed_token(params, tokens, cfg)
     x = x.astype(cfg.param_dtype)
     x = constrain(x, "batch", None, None)
+    tq = x.shape[1]
+    if tq != 1 and cfg.family == "hybrid":
+        raise ValueError(
+            "multi-token decode needs a rollback-able cache; hybrid "
+            f"stacks carry recurrent SSM state (T={tq})")
     pos = state.pos
     table, limit = ps.table, ps.write_limit
     new_layers: Dict[str, Any] = {}
@@ -293,7 +307,7 @@ def _decode_step_paged(params, state: DecodeState, tokens: jnp.ndarray,
                     x, params["layers"][str(i)], cfg, ctx, lp, table, pos,
                     limit)
             new_layers[str(i)] = lp
-        new_state = DecodeState(pos=pos + 1,
+        new_state = DecodeState(pos=pos + tq,
                                 paged=ps._replace(layers=new_layers))
     elif cfg.family == "hybrid":
         shared = params["shared"]

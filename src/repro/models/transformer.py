@@ -175,7 +175,20 @@ def _decode_block(x, bp, cfg, ctx, attn):
     if cfg.family == "moe":
         with ctx.scope("moe"):
             h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
-            y, _ = moe_apply(h, bp["moe"], cfg, ctx)
+            if h.shape[1] > 1:
+                # speculative multi-token verify: expert capacity and the
+                # cumsum position ranking both depend on the TOTAL token
+                # count of the dispatch, so a fused (B, T) dispatch can
+                # keep/drop tokens differently than T sequential steps.
+                # Routing each query column separately reproduces the
+                # one-token step's dispatch graph exactly, keeping
+                # multi-token logits bitwise equal to sequential decode
+                # even when experts overflow capacity.
+                cols = [moe_apply(h[:, j:j + 1], bp["moe"], cfg, ctx)[0]
+                        for j in range(h.shape[1])]
+                y = jnp.concatenate(cols, axis=1)
+            else:
+                y, _ = moe_apply(h, bp["moe"], cfg, ctx)
             x = x + y
     else:
         with ctx.scope("mlp"):

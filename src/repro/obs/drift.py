@@ -293,7 +293,22 @@ class DriftMonitor:
                          if r > self.ratio_threshold)
         layers = sorted({"/".join(s.split("/")[:2]) for s in flagged})
         kls = [s.kl for s in self.samples]
+        # speculative-decoding accept-rate gauge: a dropping accept rate
+        # is the live echo of draft-config drift — the FIT draft budget
+        # was chosen against a KL proxy (core.fit.allocate_draft_bits),
+        # and the realized accept rate is what that proxy predicted
+        spec = None
+        st = getattr(self._engine, "spec_stats", None) if self._engine \
+            else None
+        if st and st.get("dispatches"):
+            spec = {
+                "dispatches": int(st["dispatches"]),
+                "proposed": int(st["proposed"]),
+                "accepted": int(st["accepted"]),
+                "accept_rate": st["accepted"] / max(st["proposed"], 1),
+            }
         return {
+            "spec": spec,
             "n_samples": len(self.samples),
             "every": self.every,
             "ratio_threshold": self.ratio_threshold,

@@ -57,6 +57,14 @@ COUNTERS: Dict[str, CounterSpec] = {
         "same active & budget mask as the output scatter)"),
     "burst_size_hist": CounterSpec(
         "i32", (HIST_BUCKETS,), "log2(steps) histogram of burst sizes"),
+    # -- speculative decoding (exact device-side tallies; the host keeps
+    #    only a budget-clamp-lossy estimate, see Engine.spec_stats) --
+    "spec_proposed": CounterSpec(
+        "i32", (), "draft tokens proposed to verification (k per active "
+        "slot per spec dispatch)"),
+    "spec_accepted": CounterSpec(
+        "i32", (), "proposed draft tokens whose verify re-sample matched "
+        "(the accept-rate numerator; excludes correction/bonus tokens)"),
     # -- kernel/context taps (f32 sums; rates, not exact counts) --
     "qmm_calls": CounterSpec("f32", (), "fused qmm dispatches"),
     "int8mm_calls": CounterSpec("f32", (), "legacy int8 matmul dispatches"),

@@ -20,13 +20,14 @@ from repro.serve.quantized import (
     weight_storage_bytes)
 from repro.serve.request import Request, RequestStatus
 from repro.serve.sampling import SamplingParams, request_keys, sample_tokens
+from repro.serve.spec import SpecConfig, derive_draft_params
 
 __all__ = [
     "Engine", "EngineConfig", "EngineMetrics", "Request", "RequestStatus",
-    "SamplingParams", "allocate_kv_bits", "bit_config_from_report",
-    "kv_bit_config", "kv_report_fns", "make_dequant_context",
-    "poisson_requests", "quantize_params", "quantize_params_int8",
-    "request_keys", "sample_tokens", "shard_params",
-    "sharded_storage_bytes", "synth_prompt", "trace_requests",
-    "weight_storage_bytes",
+    "SamplingParams", "SpecConfig", "allocate_kv_bits",
+    "bit_config_from_report", "derive_draft_params", "kv_bit_config",
+    "kv_report_fns", "make_dequant_context", "poisson_requests",
+    "quantize_params", "quantize_params_int8", "request_keys",
+    "sample_tokens", "shard_params", "sharded_storage_bytes",
+    "synth_prompt", "trace_requests", "weight_storage_bytes",
 ]

@@ -88,6 +88,8 @@ from repro.obs.trace import ENGINE_TID
 from repro.serve.metrics import EngineMetrics
 from repro.serve.request import Request, RequestStatus
 from repro.serve.sampling import greedy_tokens, request_keys, sample_tokens
+from repro.serve.spec import (
+    SpecConfig, accept_drafts, derive_draft_params, quantize_dense_kv)
 from repro.utils.logging import get_logger
 
 log = get_logger("repro.serve.engine")
@@ -133,6 +135,14 @@ class EngineConfig:
     # obs.drain_every bursts — the decode hot path stays zero-sync);
     # obs.trace records request/dispatch spans + a jsonl event log.
     obs: Optional[ObsConfig] = None
+    # ---- self-speculative decoding (repro.serve.spec) ----
+    # spec.k > 1 replaces every decode burst with a draft/verify
+    # dispatch: k+1 cheap draft steps at the spec widths (a second
+    # DequantContext over the SAME QTensor tree, own low-bit KV lane)
+    # plus ONE fused (k+1)-token verify of the serving config. Emitted
+    # tokens stay bit-identical to spec=None serving in every sampling
+    # mode; only tokens-per-dispatch changes.
+    spec: Optional[SpecConfig] = None
 
 
 class Engine:
@@ -214,6 +224,65 @@ class Engine:
                 log.info("hybrid family: prefix sharing disabled "
                          "(SSM state at the split is not cached)")
 
+        # ---- self-speculative decoding (repro.serve.spec) ----
+        spec = ecfg.spec
+        self._spec = spec if (spec is not None and spec.enabled) else None
+        if spec is not None and self._spec is None:
+            log.info("spec.k=%d: running the plain burst scheduler "
+                     "(speculation needs k > 1)", spec.k)
+        self._draft_params = None
+        self._draft_plain = False
+        self._dpcfg: Optional[PagedKVConfig] = None
+        if self._spec is not None:
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(
+                    "speculative decoding needs a rollback-able cache: "
+                    f"the {cfg.family} family's recurrent state cannot "
+                    "rewind rejected draft tokens")
+            if self._mesh is not None:
+                raise NotImplementedError(
+                    "speculative decoding under tensor-parallel serving "
+                    "is not wired up yet (the draft lane needs its own "
+                    "shard plan)")
+            if self._spec.draft_bits is not None:
+                if not self._qt_params:
+                    raise ValueError(
+                        "spec.draft_bits re-packs QTensor weight storage "
+                        "— build params with serve.quantized."
+                        "quantize_params")
+                self._draft_params = derive_draft_params(
+                    self.params, self._spec.draft_bits)
+            else:
+                self._draft_params = self.params  # low-bit-KV-only draft
+            if (self._spec.materialize_draft and not self._spec.int8_compute
+                    and tree_has_qtensor(self._draft_params)):
+                # dequantize-once draft cache: the draft pays the plain
+                # fp forward per step instead of re-dequantizing every
+                # block k times per dispatch. Values (and the FIT
+                # accept-rate trade) are unchanged — dequantize is
+                # deterministic.
+                from repro.qtensor import is_qtensor
+                self._draft_params = jax.jit(lambda t: jax.tree_util.tree_map(
+                    lambda l: (l.dequantize(cfg.param_dtype)
+                               if is_qtensor(l) else l),
+                    t, is_leaf=is_qtensor))(self._draft_params)
+                self._draft_plain = True
+            if self._paged:
+                # the draft KV lane: a second set of page pools with the
+                # same geometry at the draft width, driven by the LIVE
+                # serving page table (injected per dispatch) so prefix
+                # sharing / COW / recycling carry over page-for-page
+                self._dpcfg = PagedKVConfig.build(
+                    cfg, ecfg.max_len, ecfg.max_slots,
+                    page_size=ecfg.page_size, num_pages=ecfg.kv_pages,
+                    kv_bits=self._spec.draft_kv_bits)
+            elif self._spec.draft_kv_bits not in (8, 16):
+                raise ValueError(
+                    "dense serving's draft KV lane supports 8 (static-"
+                    f"scale int8) or 16 bits, got "
+                    f"{self._spec.draft_kv_bits}; packed sub-byte widths "
+                    "need kv_cache='paged'")
+
         S, G = ecfg.max_slots, ecfg.max_new_tokens
         cb = (cfg.num_codebooks,) if self._audio else ()
         self._tok_shape = (S, 1) + cb
@@ -244,6 +313,20 @@ class Engine:
             return DequantContext(scales, cfg.param_dtype,
                                   int8_compute=ecfg.int8_compute,
                                   moe_dispatch=ecfg.moe_dispatch)
+
+        def make_draft_ctx(scales):
+            # the draft pass runs its (optionally re-packed) tree under
+            # its own context. Default is fp-dequant matmuls: on the CPU
+            # oracle the ref integer route is the EXPENSIVE one, so the
+            # fp draft is the cheap lane; flip spec.int8_compute on
+            # hardware where the integer kernels win.
+            if self._spec is None or self._draft_plain or (
+                    not scales and not tree_has_qtensor(self._draft_params)):
+                return Context()
+            md = ecfg.moe_dispatch if self._spec.int8_compute else "einsum"
+            return DequantContext(scales, cfg.param_dtype,
+                                  int8_compute=self._spec.int8_compute,
+                                  moe_dispatch=md)
 
         def prefill_fn(params, scales, state, toks):
             return prefill_into(params, state, toks, cfg, ctx=make_ctx(scales))
@@ -350,6 +433,156 @@ class Engine:
                 nwritten + steps * active, slots["budget"]))
             return state, tok, out, slots, ctr
 
+        def spec_step_fn(params, scales, draft_params, state, dstate, ptok,
+                         tok, out, slots, ctr, k, mode, stats=False):
+            """One speculative dispatch (static ``k``): k draft
+            invocations at the draft config (one fused 2-token catch-up
+            + k-1 single-token steps), ONE fused (k+1)-token verify at
+            the serving config, coupled-rejection accept, positional
+            rollback of both lanes. Each active slot emits
+            min(matched prefix + 1, remaining budget) tokens — bitwise
+            the tokens ``engine_step_fn`` would have produced, whatever
+            the sampling mode, because every verify column re-samples
+            token index nwritten+i from bitwise-identical logits with
+            the same fold_in(seed, t) key and the same sampler."""
+            ctx = make_ctx(scales)
+            dctx = make_draft_ctx(scales)
+            active, nwritten = slots["active"], slots["nwritten"]
+            act_tok = active.reshape((-1,) + (1,) * (tok.ndim - 1))
+            with_ctr = bool(ctr)
+            if self._paged:
+                # draft pools mirror the serving pools page-for-page:
+                # driving them with the LIVE serving table/limits makes
+                # prefix sharing, COW and recycling carry over for free
+                dstate = dstate._replace(paged=dstate.paged._replace(
+                    table=state.paged.table,
+                    write_limit=state.paged.write_limit))
+
+            def sample_col(lg_col, i):
+                # EXACTLY the non-speculative sampler for token index
+                # nwritten + i (key, filters, mode specialization)
+                if mode == "greedy":
+                    return greedy_tokens(lg_col)
+                keys = request_keys(slots["seeds"], nwritten + i)
+                return sample_tokens(lg_col, keys, slots["temps"],
+                                     slots["top_ks"], slots["top_ps"],
+                                     skip_filters=(mode == "nofilter"))
+
+            # ---- draft: k invocations for k proposals. The draft lane
+            # LAGS the emitted stream by one position: the first
+            # invocation is a fused 2-token catch-up over (second-last,
+            # last) emitted tokens — it re-writes the lane's KV at the
+            # lag position (bitwise the value already there mid-stream:
+            # same token, same prefix, same route) and writes the KV the
+            # previous dispatch's bonus/correction token never got. A
+            # lockstep lane would need k+1 single-token steps for the
+            # same k proposals (the extra step existed ONLY to write
+            # that trailing KV; its sampled token was discarded). ----
+            def draft_call(dst, toks, ctr):
+                if with_ctr:
+                    sink = obs_rt.CounterSink(stats=stats)
+                    with obs_rt.collecting(sink):
+                        lg_, dnew = decode_step(draft_params, dst, toks,
+                                                cfg, ctx=dctx)
+                    ctr = obs_rt.fold(ctr, sink)
+                else:
+                    lg_, dnew = decode_step(draft_params, dst, toks, cfg,
+                                            ctx=dctx)
+                dnew = dnew._replace(
+                    pos=jnp.where(active, dnew.pos, dst.pos))
+                return lg_, dnew, ctr
+
+            pair = jnp.concatenate([ptok, tok], axis=1)  # (S, 2[, CB])
+            lg2, dnew, ctr = draft_call(dstate, pair, ctr)
+            p0 = sample_col(lg2[:, 1, ..., :cfg.vocab_size], 0)
+
+            def draft_body(carry, i):
+                dst, dtok, ctr = carry
+                lg_, dnw, ctr = draft_call(dst, dtok, ctr)
+                nxt = sample_col(lg_[:, 0, ..., :cfg.vocab_size], i)
+                dtok = jnp.where(act_tok, nxt[:, None], dtok)
+                return (dnw, dtok, ctr), nxt
+
+            dtok0 = jnp.where(act_tok, p0[:, None], tok)
+            (dfin, _, ctr), dts = jax.lax.scan(
+                draft_body, (dnew, dtok0, ctr), jnp.arange(1, k))
+            drafts = jnp.concatenate(
+                [p0[:, None], jnp.moveaxis(dts, 0, 1)], axis=1)  # (S, k)
+
+            # ---- verify: ONE fused multi-token serving forward ----
+            vtoks = jnp.concatenate([tok, drafts], axis=1)
+            if with_ctr:
+                sink = obs_rt.CounterSink(stats=stats)
+                with obs_rt.collecting(sink):
+                    logits, vnew = decode_step(params, state, vtoks, cfg,
+                                               ctx=ctx)
+                ctr = obs_rt.fold(ctr, sink)
+            else:
+                logits, vnew = decode_step(params, state, vtoks, cfg,
+                                           ctx=ctx)
+            lg = logits[..., :cfg.vocab_size]            # (S, k+1[,CB],V)
+            tgt = jnp.stack([sample_col(lg[:, i], i)
+                             for i in range(k + 1)], axis=1)
+
+            n_emit, n_match = accept_drafts(drafts, tgt, active, nwritten,
+                                            slots["budget"])
+
+            # ---- emit: matched prefix + correction/bonus token ----
+            cols = nwritten[:, None] + jnp.arange(k + 1)[None, :]
+            keep = active[:, None] & (jnp.arange(k + 1)[None, :]
+                                      < n_emit[:, None])
+            cols = jnp.where(keep, cols, out.shape[1])
+            rows = jnp.broadcast_to(
+                jnp.arange(ecfg.max_slots)[:, None], cols.shape)
+            out = out.at[rows, cols].set(tgt, mode="drop")
+
+            # next input token = the last emitted target token (frozen
+            # when nothing was emitted: inactive or out of budget)
+            last = jnp.maximum(n_emit - 1, 0)
+            idx = jnp.broadcast_to(
+                last.reshape((last.shape[0], 1) + (1,) * (tgt.ndim - 2)),
+                (last.shape[0], 1) + tgt.shape[2:])
+            ntok = jnp.take_along_axis(tgt, idx, axis=1)
+            emitted = (n_emit > 0).reshape(
+                (-1,) + (1,) * (tok.ndim - 1))
+            # second-last stream token (position P + n_emit - 1) — the
+            # catch-up pair's first element on the NEXT dispatch
+            last2 = jnp.maximum(n_emit - 2, 0)
+            idx2 = jnp.broadcast_to(
+                last2.reshape((last2.shape[0], 1) + (1,) * (tgt.ndim - 2)),
+                (last2.shape[0], 1) + tgt.shape[2:])
+            two = (n_emit >= 2).reshape((-1,) + (1,) * (tok.ndim - 1))
+            ptok = jnp.where(
+                act_tok & emitted,
+                jnp.where(two, jnp.take_along_axis(tgt, idx2, axis=1), tok),
+                ptok)
+            tok = jnp.where(act_tok & emitted, ntok, tok)
+
+            # ---- rollback: both lanes rewind to P + n_emit. Rejected
+            # KV writes stay in the caches past the rolled-back position
+            # — masked by the per-row causal mask / write limits, and
+            # overwritten as the stream advances. ----
+            vnew = vnew._replace(
+                pos=jnp.where(active, state.pos + n_emit, state.pos))
+            dfin = dfin._replace(
+                pos=jnp.where(active, dstate.pos + n_emit, dstate.pos))
+
+            slots = dict(slots, nwritten=nwritten + n_emit)
+            if with_ctr:
+                n_act = jnp.sum(active.astype(jnp.int32))
+                ctr = obs_rt.ctr_add(ctr, "decode_bursts", 1)
+                ctr = obs_rt.ctr_add(ctr, "decode_steps", k + 1)
+                ctr = obs_rt.ctr_add(ctr, "decode_tokens",
+                                     jnp.sum(n_emit))
+                bucket = min(max((k + 1).bit_length() - 1, 0),
+                             obs_rt.HIST_BUCKETS - 1)
+                ctr = obs_rt.ctr_add(ctr, "burst_size_hist", 1, idx=bucket)
+                ctr = obs_rt.ctr_add(ctr, "spec_proposed", k * n_act)
+                ctr = obs_rt.ctr_add(
+                    ctr, "spec_accepted",
+                    jnp.sum(jnp.where(active, n_match, 0)))
+            return vnew, dfin, ptok, tok, out, slots, ctr, n_emit
+
         self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
         self._sample_first = jax.jit(sample_first_fn)
         self._insert = jax.jit(insert_fn, donate_argnums=(0, 3, 5, 6))
@@ -360,6 +593,61 @@ class Engine:
                                     donate_argnums=(2, 3, 4, 5, 6))
         self._warmed_modes: set = set()
         self._make_ctx = make_ctx       # reused by obs.drift's probes
+
+        if self._spec is not None:
+            self._spec_step = jax.jit(
+                spec_step_fn, static_argnames=("k", "mode", "stats"),
+                donate_argnums=(3, 4, 5, 6, 7, 8, 9))
+            dkb = self._spec.draft_kv_bits
+
+            def insert_draft_fn(dstate, sub, slot):
+                """Seed the dense draft lane at admission: the TARGET
+                prefill's KV quantized onto the draft lane's grid, so
+                the draft attends to the full prompt from step one. The
+                lane starts one position BEHIND the serving stream —
+                the first dispatch's catch-up pair lands on the last
+                prompt token (see ``spec_step_fn``)."""
+                if dkb != 16:
+                    sub = sub._replace(kv=quantize_dense_kv(sub.kv, dkb))
+                sub = sub._replace(pos=sub.pos - 1)
+                return state_insert_slot(cfg, dstate, sub, slot)
+
+            if self._paged:
+                nl_d = kv_layer_count(cfg)
+
+                def insert_draft_paged_fn(dstate, sub, row, slot, start,
+                                          plen):
+                    """Paged draft admission: scatter the prefilled KV
+                    span [start, plen) into the DRAFT pools at the same
+                    page rows the serving insert used (quantized to the
+                    draft width by scatter_span)."""
+                    ps = dstate.paged
+                    layers = dict(ps.layers)
+                    for i in range(nl_d):
+                        layers[str(i)] = scatter_span(
+                            layers[str(i)], row, sub.kv.k[i, 0],
+                            sub.kv.v[i, 0], start, plen)
+                    # one behind the serving stream (see spec_step_fn)
+                    return dstate._replace(
+                        pos=dstate.pos.at[slot].set(plen - 1),
+                        paged=ps._replace(layers=layers))
+
+                def copy_page_draft_fn(dstate, src, dst):
+                    # COW mirror: when the serving pool copies a shared
+                    # boundary page, the draft pool must copy the SAME
+                    # page ids so the lanes keep mirroring page-for-page
+                    ps = dstate.paged
+                    layers = {n: copy_page(lp, src, dst)
+                              for n, lp in ps.layers.items()}
+                    return dstate._replace(paged=ps._replace(layers=layers))
+
+                self._insert_draft_paged = jax.jit(
+                    insert_draft_paged_fn, donate_argnums=(0,))
+                self._copy_page_draft = jax.jit(copy_page_draft_fn,
+                                                donate_argnums=(0,))
+            else:
+                self._insert_draft = jax.jit(insert_draft_fn,
+                                             donate_argnums=(0,))
 
         if self._paged:
             nl = self._n_kv_layers
@@ -535,6 +823,22 @@ class Engine:
             self.cfg, self.ecfg.max_slots, self.ecfg.max_len,
             per_slot_pos=True))
 
+    def _fresh_draft_state(self) -> DecodeState:
+        """The draft lane's KV state (see repro.serve.spec): paged — a
+        second set of page pools at the draft width; dense — a per-slot
+        cache on ``attention_decode``'s static-scale int8 grid (or fp at
+        16 bits)."""
+        if self._paged:
+            return init_paged_decode_state(
+                self.cfg, self._dpcfg, self.ecfg.max_slots,
+                self._kv_ranges)
+        st = init_decode_state(self.cfg, self.ecfg.max_slots,
+                               self.ecfg.max_len, per_slot_pos=True)
+        if self._spec.draft_kv_bits != 16:
+            st = st._replace(kv=jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.int8), st.kv))
+        return st
+
     def warmup(self, modes: Sequence[str] = ("greedy",)) -> None:
         """Compile every shape the serving loop dispatches: all power-of-
         two burst sizes (per sampler mode), the full prefill chunk, and
@@ -553,14 +857,28 @@ class Engine:
         # with counters on, warm BOTH burst flavors (plain + sampled
         # clip-stats) so the stats_every cadence never compiles mid-run
         stats_variants = (False, True) if ctr else (False,)
+        dstate = self._fresh_draft_state() if self._spec is not None \
+            else None
+        ptok = self._put_repl(jnp.zeros(self._tok_shape, jnp.int32)) \
+            if self._spec is not None else None
         for mode in modes:
-            k = 1
-            while k <= ecfg.decode_burst:
+            if self._spec is not None:
+                # spec mode replaces every decode burst with the one
+                # draft/verify dispatch shape — no pow2 ladder to warm
                 for stats in stats_variants:
-                    state, tok, out, slots, ctr = self._engine_step(
-                        self.params, self.scales, state, tok, out, slots,
-                        ctr, steps=k, mode=mode, stats=stats)
-                k *= 2
+                    (state, dstate, ptok, tok, out, slots, ctr,
+                     _) = self._spec_step(
+                        self.params, self.scales, self._draft_params,
+                        state, dstate, ptok, tok, out, slots, ctr,
+                        k=self._spec.k, mode=mode, stats=stats)
+            else:
+                k = 1
+                while k <= ecfg.decode_burst:
+                    for stats in stats_variants:
+                        state, tok, out, slots, ctr = self._engine_step(
+                            self.params, self.scales, state, tok, out,
+                            slots, ctr, steps=k, mode=mode, stats=stats)
+                    k *= 2
             self._warmed_modes.add(mode)
         cb = self._tok_shape[2:]
         ps = self._put_repl(init_decode_state(cfg, 1, ecfg.max_len))
@@ -582,6 +900,13 @@ class Engine:
                 state, ps, jnp.int32(0), row, jnp.int32(0), jnp.int32(1),
                 jnp.int32(2), tok, tok0, out, slots, jnp.int32(0),
                 jnp.float32(0), jnp.int32(0), jnp.float32(1), jnp.int32(1))
+            if self._spec is not None:
+                dstate = self._insert_draft_paged(
+                    dstate, ps, row, jnp.int32(0), jnp.int32(0),
+                    jnp.int32(1))
+                if self._share:
+                    dstate = self._copy_page_draft(dstate, jnp.int32(0),
+                                                   jnp.int32(0))
             state = self._set_table(
                 state, jnp.full((ecfg.max_slots, self._pcfg.pages_per_slot),
                                 self._pcfg.num_pages, jnp.int32))
@@ -590,6 +915,8 @@ class Engine:
             state, tok, out, slots = self._insert(
                 state, ps, jnp.int32(0), tok, tok0, out, slots, jnp.int32(0),
                 jnp.float32(0), jnp.int32(0), jnp.float32(1), jnp.int32(1))
+            if self._spec is not None:
+                dstate = self._insert_draft(dstate, ps, jnp.int32(0))
         slots = self._deactivate(slots, jnp.int32(0))
         jax.block_until_ready(slots["active"])
 
@@ -623,6 +950,13 @@ class Engine:
         cfg, ecfg = self.cfg, self.ecfg
         S = ecfg.max_slots
         self._state = self._fresh_state()
+        if self._spec is not None:
+            self._dstate = self._fresh_draft_state()
+            self._ptok = self._put_repl(
+                jnp.zeros(self._tok_shape, jnp.int32))
+        # host-side speculation tallies (the drift gauge / bench read
+        # these; exact per-dispatch counts live in the device counters)
+        self.spec_stats = {"proposed": 0, "accepted": 0, "dispatches": 0}
         self._tok = self._put_repl(jnp.zeros(self._tok_shape, jnp.int32))
         self._out = self._put_repl(jnp.zeros(self._out_shape, jnp.int32))
         # device-resident slot table (bursts take zero host->device
@@ -882,6 +1216,32 @@ class Engine:
                 jnp.float32(s.temperature), jnp.int32(s.top_k),
                 jnp.float32(s.top_p), jnp.int32(req.max_new_tokens))
 
+        if self._spec is not None:
+            # seed the draft lane from the SAME prefilled scratch state:
+            # target-computed prompt KV quantized onto the draft grid
+            if self._paged:
+                if partial_src is not None:
+                    # mirror the serving COW copy before the suffix
+                    # scatter writes into the owned boundary page
+                    dst = row[len(gather_ids) - 1]
+                    self._dstate = self._copy_page_draft(
+                        self._dstate, jnp.int32(partial_src),
+                        jnp.int32(dst))
+                self._dstate = self._insert_draft_paged(
+                    self._dstate, pstate, self._pad_row(row),
+                    jnp.int32(slot), jnp.int32(shared_len),
+                    jnp.int32(req.prompt_len))
+            else:
+                self._dstate = self._insert_draft(self._dstate, pstate,
+                                                  jnp.int32(slot))
+            # the catch-up pair's first element for the first dispatch:
+            # the LAST PROMPT token (stream position prompt_len - 1,
+            # where the lagged draft lane starts)
+            cb = self._tok_shape[2:]
+            self._ptok = self._ptok.at[slot].set(
+                jnp.asarray(np.asarray(req.prompt)[-1],
+                            jnp.int32).reshape((1,) + cb))
+
         self._slots[slot] = req
         self._active[slot] = True
         self._nwritten[slot] = 1
@@ -924,6 +1284,12 @@ class Engine:
     def _burst(self, steps: int) -> None:
         if steps <= 0:
             return
+        if self._spec is not None:
+            # EVERY decode burst routes through the draft/verify
+            # dispatch (a plain burst would advance the serving lane
+            # without the draft lane and desync their positions); the
+            # per-slot budget clamp absorbs the caller's steps bound
+            return self._spec_burst()
         # round down to a power of two: callers pass upper bounds, and a
         # bounded set of burst shapes keeps the compile count at
         # O(log decode_burst) instead of one per distinct remaining-count
@@ -976,7 +1342,9 @@ class Engine:
                              args={"steps": steps, "n_active": n_active})
         self.metrics.record_burst(wall, steps, n_active,
                                   n_tokens=n_tokens,
-                                  n_runnable=max(n_active, self._runnable))
+                                  n_runnable=max(n_active, self._runnable),
+                                  per_slot_tokens=[int(x)
+                                                   for x in after - before])
         if self.ecfg.clock == "steps":
             self._ticks += steps
         self._burst_i += 1
@@ -992,6 +1360,78 @@ class Engine:
                                      self.counters.drain_s - d0, tracer=tr)
         if self._drift is not None:
             self._drift.observe(steps)
+
+    def _spec_burst(self) -> None:
+        """One draft/verify dispatch (see ``spec_step_fn``). The only
+        decode-loop host transfer is the per-slot accepted-token fetch —
+        the scheduler cannot size budgets or grow page tables without
+        it, and it doubles as the burst-latency timing sync that
+        ``_burst`` gets from ``block_until_ready``."""
+        k = self._spec.k
+        if self._paged:
+            # the verify writes up to k+1 serving positions (the draft
+            # lane mirrors them through the injected table)
+            self._grow_tables(k + 1)
+        exact = self._mode_for([self._slots[b].sampling
+                                for b in np.flatnonzero(self._active)])
+        mode = exact if exact in self._warmed_modes else self._run_mode
+        tr = self.tracer
+        n_active = int(self._active.sum())
+        timed = tr.enabled or self.perf is not None
+        c0 = self._jit_cache("_spec_step") if timed else None
+        sid = tr.begin("spec_burst", cat="decode", tid=ENGINE_TID) \
+            if tr.enabled else None
+        stats = bool(self._ctr) and \
+            self._burst_i % self._obs.stats_every == 0
+        t0 = time.perf_counter()
+        (self._state, self._dstate, self._ptok, self._tok, self._out,
+         self._dslots, self._ctr, n_emit) = self._spec_step(
+            self.params, self.scales, self._draft_params, self._state,
+            self._dstate, self._ptok, self._tok, self._out, self._dslots,
+            self._ctr, k=k, mode=mode, stats=stats)
+        ne = np.asarray(jax.device_get(n_emit))  # rpr-ok: RPR008 timed sync — scheduler control dependency + the burst latency metric
+        wall = time.perf_counter() - t0
+        # exact host mirror of the device update (n_emit is already
+        # budget-clamped and zero for inactive slots)
+        self._nwritten[self._active] += ne[self._active]
+        if self._paged:
+            self._pos_h[self._active] += ne[self._active]
+        n_tokens = int(ne.sum())
+        self.spec_stats["dispatches"] += 1
+        self.spec_stats["proposed"] += k * n_active
+        # host accept tally: emitted minus the always-emitted correction
+        # token — undercounts only when the budget clamp truncated a
+        # match run (the device spec_accepted counter is exact)
+        self.spec_stats["accepted"] += int(
+            np.maximum(ne[self._active] - 1, 0).sum())
+        compiled = False
+        if timed:
+            c1 = self._jit_cache("_spec_step")
+            compiled = bool(c1 is not None and c1 != c0)
+        if sid is not None:
+            tr.end(sid, {"k": k, "mode": mode, "n_active": n_active,
+                         "tokens": n_tokens, "compiled": compiled})
+        if self.perf is not None:
+            self.perf.record("spec_burst", wall, tokens=n_tokens,
+                             compiled=compiled, tracer=tr,
+                             args={"k": k, "n_active": n_active})
+        self.metrics.record_burst(
+            wall, k + 1, n_active, n_tokens=n_tokens,
+            n_runnable=max(n_active, self._runnable),
+            per_slot_tokens=[int(x) for x in ne[self._active]])
+        if self.ecfg.clock == "steps":
+            self._ticks += k + 1
+        self._burst_i += 1
+        de = self._obs.drain_every if self._obs is not None else 0
+        if self._obs_counters and de and self._burst_i % de == 0:
+            with tr.span("drain", cat="obs", tid=ENGINE_TID):
+                d0 = self.counters.drain_s
+                self.counters.drain(self._ctr)
+                if self.perf is not None:
+                    self.perf.record("drain",
+                                     self.counters.drain_s - d0, tracer=tr)
+        if self._drift is not None:
+            self._drift.observe(k + 1)
 
     # ------------------------------------------------------------------
     def _harvest(self, finished: List[Request]) -> None:

@@ -41,11 +41,27 @@ def synth_prompt(rng: np.random.Generator, length: int, cfg: ModelConfig,
     SHARED prefix (identical across requests built with the same prefix
     array) — the workload shape that exercises the paged KV cache's
     hash-based prefix sharing. At least one token stays unique-random so
-    every request still prefills something.
+    every request still prefills something; a prompt too short to hold
+    any shared token (``length <= 1``) is rejected rather than silently
+    dropping the sharing the caller asked for.
     """
     shape = (length, cfg.num_codebooks) if cfg.family == "audio" else (length,)
     prompt = rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
     if prefix is not None:
+        if length <= 1:
+            raise ValueError(
+                f"prompt length {length} cannot carry a shared prefix: "
+                "at least one token must stay unique, so prefixed "
+                "prompts need length >= 2")
+        prefix = np.asarray(prefix)
+        if cfg.family == "audio":
+            if prefix.ndim != 2 or prefix.shape[1] != cfg.num_codebooks:
+                raise ValueError(
+                    f"audio prefix must be (P, {cfg.num_codebooks}) to "
+                    f"match the prompt's codebooks, got {prefix.shape}")
+        elif prefix.ndim != 1:
+            raise ValueError(
+                f"prefix must be a 1-d token array, got shape {prefix.shape}")
         n = min(prefix.shape[0], length - 1)
         if n > 0:
             prompt[:n] = prefix[:n]

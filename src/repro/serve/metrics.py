@@ -53,12 +53,28 @@ class EngineMetrics:
 
     def record_burst(self, wall_dt: float, steps: int, n_active: int,
                      n_tokens: Optional[int] = None,
-                     n_runnable: Optional[int] = None) -> None:
+                     n_runnable: Optional[int] = None,
+                     per_slot_tokens: Optional[List[int]] = None) -> None:
         """``n_tokens`` is the USEFUL token count (bursts may overshoot a
         nearly-finished slot; those writes are dropped). ``n_runnable``
         is how many slots COULD have held work during this burst (active
         + arrived-but-waiting, capped at max_slots); it defaults to
-        max_slots, which keeps the legacy all-slots denominator."""
+        max_slots, which keeps the legacy all-slots denominator.
+
+        ``per_slot_tokens`` lists each active slot's USEFUL token count
+        for this burst. A slot's request waits the full burst wall time
+        for whatever tokens it got, so its per-token latency is
+        ``wall_dt / tokens`` — which equals the legacy ``wall_dt /
+        steps`` when the slot filled the burst, but stays honest when a
+        nearly-finished slot's overshoot writes were dropped, and for
+        speculative bursts where one dispatch yields a variable number
+        of accepted tokens per slot. Without it, ``wall_dt / steps`` was
+        attributed per useful token, understating overshoot latency
+        while occupancy already used the useful count."""
+        if per_slot_tokens is not None:
+            per_slot_tokens = [int(e) for e in per_slot_tokens if e > 0]
+            if n_tokens is None:
+                n_tokens = sum(per_slot_tokens)
         if n_tokens is None:
             n_tokens = steps * n_active
         if n_runnable is None:
@@ -68,9 +84,12 @@ class EngineMetrics:
         self.decode_steps += steps
         self.occupied_slot_steps += n_tokens
         self.runnable_slot_steps += steps * min(n_runnable, self.max_slots)
-        if n_tokens and steps:
-            # per-token latency attributed evenly across the burst,
-            # weighted by the tokens it actually produced
+        if per_slot_tokens:
+            for e in per_slot_tokens:
+                self.token_lat_s.extend([wall_dt / e] * e)
+        elif n_tokens and steps:
+            # legacy attribution (no per-slot breakdown available):
+            # evenly across the burst's steps
             self.token_lat_s.extend([wall_dt / steps] * n_tokens)
 
     def record_deferral(self) -> None:

@@ -80,11 +80,21 @@ def sample_tokens(logits: jnp.ndarray, keys: jnp.ndarray,
         lg = jnp.where(k_on & (lg < kth), NEG, lg)
 
         # top-p (nucleus): keep the smallest prefix of the descending
-        # distribution whose cumulative mass reaches top_p
+        # distribution whose cumulative mass reaches top_p. top_p is
+        # clamped to a tiny positive value: at top_p <= 0 the raw
+        # predicate is all-False, thresh becomes +inf and EVERY logit
+        # would be masked — categorical over a constant row, i.e. a
+        # uniform sample over the whole vocab instead of the argmax the
+        # limit implies. The clamp keeps exactly the top-1 position
+        # (csum - p_desc is 0.0 only there), so top_p <= 0 degenerates
+        # to greedy. Ties AT the threshold probability are all kept
+        # (``probs < thresh`` masks strictly below), so tied boundary
+        # entries never sample-order-depend on the sort.
         probs = jax.nn.softmax(lg, axis=-1)
         p_desc = -jnp.sort(-probs, axis=-1)
         csum = jnp.cumsum(p_desc, axis=-1)
-        keep_sorted = (csum - p_desc) < top_p.reshape(shape1)  # keeps argmax
+        p_eff = jnp.maximum(top_p, 1e-9).reshape(shape1)
+        keep_sorted = (csum - p_desc) < p_eff                  # keeps argmax
         thresh = jnp.min(jnp.where(keep_sorted, p_desc, jnp.inf), axis=-1,
                          keepdims=True)
         lg = jnp.where(probs < thresh, NEG, lg)

@@ -1,0 +1,191 @@
+"""Self-speculative decoding: FIT-allocated low-bit draft, exact verify.
+
+The paper's sensitivity report predicts how much quality a width config
+costs WITHOUT retraining; this module spends that prediction on decode
+throughput. A draft pass decodes ``k`` tokens per dispatch through a
+second ``DequantContext`` over the SAME parameter tree — optionally
+narrowed to FIT-chosen aggressive widths (``derive_draft_params``) —
+with its own low-bit KV lane; a verify pass then runs ONE fused
+multi-token forward of the serving config over (last token + k drafts)
+and re-samples every position with the engine's per-request keys.
+
+Acceptance is coupled (common-random-number) rejection sampling: the
+verify pass recomputes what the NON-speculative engine would have
+sampled at token index ``nwritten + i`` — same logits (the multi-token
+decode forward is bitwise equal to sequential decode, see
+``models.attention.attention_decode``), same ``fold_in(seed, t)`` key,
+same sampler — and accepts the longest draft prefix that matches.
+Emitted tokens are therefore BIT-IDENTICAL to non-speculative serving in
+every mode (greedy and sampled alike), which subsumes distribution
+preservation: the draft lane can only change how many tokens each
+dispatch yields, never which tokens.
+
+Per dispatch the engine emits ``a + 1`` tokens (``a`` = matched prefix
+length, plus the correction-or-bonus token), so progress is guaranteed
+even at accept rate zero. Rollback is purely positional: rejected KV
+writes stay in the cache past the rolled-back position, masked by the
+per-row causal mask and overwritten as the stream advances.
+
+MoE caveat (pre-existing engine behavior, not introduced here): the fp
+MoE reference dispatch drops tokens past each expert's capacity with a
+rank computed across the WHOLE batch, so a request's logits can depend
+on its co-batched neighbors whenever capacity binds. Because variable
+per-slot acceptance shifts how requests pair up across dispatches,
+spec == non-spec bit-parity for MoE — like the repo's other MoE parity
+suites — is pinned with capacity non-binding (high
+``capacity_factor``); dense/paged parity is unconditional.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.policy import BitConfig
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.serve.spec")
+
+# the dense draft lane reuses attention_decode's static int8 KV path
+DENSE_DRAFT_KV_BITS = (8, 16)
+KV_SCALE = 0.05                     # attention_decode's int8 cache grid
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding shape for ``EngineConfig(spec=...)``.
+
+    ``k`` — draft tokens proposed per dispatch; ``k <= 1`` degenerates
+    to the plain burst scheduler (one compiled step per token — the
+    draft/verify machinery is never built).
+
+    ``draft_bits`` — None serves the draft from the SAME weight tree as
+    the serving config (the pure low-bit-KV draft); an int or a
+    {block path -> bits} mapping narrows the QTensor tree to those
+    widths for the draft pass only (``derive_draft_params``), trading
+    accept rate for a cheaper draft step. Use
+    ``repro.core.fit.allocate_draft_bits`` to pick this from a
+    sensitivity report.
+
+    ``draft_kv_bits`` — the draft lane's KV storage width: 8 or 16 for
+    dense serving (the static-scale int8 cache), any paged width
+    (16/8/6/4/3) when the engine serves paged.
+
+    ``int8_compute`` — route the draft's quantized blocks through the
+    integer kernels; default False = fp-dequant matmuls (on CPU the ref
+    integer route is slower than fp — the fp draft IS the cheap one).
+
+    ``materialize_draft`` — dequantize the draft's QTensor tree ONCE at
+    engine init into plain fp weights (default True). The draft then
+    pays only the fp matmul per step instead of re-dequantizing every
+    weight each of the k draft steps; the draft DISTRIBUTION is
+    unchanged (dequantize is deterministic — the low-bit values, and
+    hence the FIT accept-rate trade, are intact). Costs the fp
+    footprint of the draft tree in memory; set False on hardware with
+    native low-bit kernels where the packed compute path is the fast
+    one (then also consider ``int8_compute=True``).
+    """
+
+    k: int = 4
+    draft_bits: Optional[Union[int, Mapping[str, int], BitConfig]] = None
+    draft_kv_bits: int = 8
+    int8_compute: bool = False
+    materialize_draft: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return self.k > 1
+
+
+def derive_draft_params(params, draft_bits, group_size: Optional[int] = None):
+    """Narrow a packed QTensor tree to the draft widths.
+
+    QTensor already stores every width's payload on the same symmetric
+    grid family, so the draft needs no second model: each matmul block
+    whose draft width is below its stored width is dequantized and
+    re-packed at the draft width (per-output-channel / per-expert
+    scales recomputed); blocks at or above their stored width are
+    shared by reference — zero extra bytes. Non-QTensor leaves pass
+    through untouched.
+    """
+    from repro.qtensor import is_qtensor, quantize as qt_quantize, \
+        quantize_experts as qt_quantize_experts
+    from repro.serve.quantized import _block_bits, _require_unrolled
+    from repro.quant.policy import QuantPolicy
+
+    _require_unrolled(params)
+    if isinstance(draft_bits, BitConfig):
+        bit_cfg = draft_bits
+    elif isinstance(draft_bits, int):
+        bit_cfg = None
+    else:
+        bit_cfg = BitConfig(dict(draft_bits), {})
+    policy = QuantPolicy()
+    from repro.utils.pytree import map_with_names
+    n_narrowed = 0
+
+    def one(name, leaf):
+        nonlocal n_narrowed
+        if not is_qtensor(leaf):
+            return leaf
+        if bit_cfg is None:
+            b = int(draft_bits)
+        else:
+            b = _block_bits(bit_cfg, name, leaf, policy)
+            if b is None:
+                return leaf
+        if b >= leaf.bits:
+            return leaf                      # cannot add information back
+        gs = group_size if group_size is not None else (
+            leaf.group_size if leaf.group_size < leaf.shape[-2] else None)
+        w = leaf.dequantize(jnp.float32)
+        qt = (qt_quantize_experts(w, b, group_size=gs) if leaf.ndim == 3
+              else qt_quantize(w, b, group_size=gs))
+        n_narrowed += 1
+        return qt
+
+    out = map_with_names(one, params, is_leaf=is_qtensor)
+    log.info("draft tree: %d blocks narrowed for the draft pass", n_narrowed)
+    return out
+
+
+def quantize_dense_kv(kv, draft_kv_bits: int):
+    """Prefilled fp KV -> the dense draft lane's storage, on EXACTLY the
+    grid ``attention_decode`` writes (static symmetric scale), so
+    admission-seeded prefix KV and decode-written KV live on one grid."""
+    if draft_kv_bits == 16:
+        return kv
+    if draft_kv_bits != 8:
+        raise ValueError(
+            f"dense draft KV lane supports bits in {DENSE_DRAFT_KV_BITS}, "
+            f"got {draft_kv_bits}")
+    return jax.tree.map(
+        lambda a: jnp.clip(jnp.round(a.astype(jnp.float32) / KV_SCALE),
+                           -127, 127).astype(jnp.int8), kv)
+
+
+def accept_drafts(drafts, targets, active, nwritten, budget):
+    """Vectorized coupled-rejection accept.
+
+    drafts: (S, k[, CB]) draft tokens d_1..d_k; targets: (S, k+1[, CB])
+    the verify pass's re-sampled tokens t_0..t_k (t_i is what the
+    non-speculative engine samples at index nwritten+i); active (S,)
+    bool; nwritten/budget (S,) int32.
+
+    Returns ``(n_emit, n_match)``: ``n_match`` is the matched prefix
+    length a (0..k); ``n_emit = min(a + 1, budget - nwritten)`` tokens
+    — the matched prefix plus the correction-or-bonus token, clamped to
+    the slot's remaining output budget — and 0 for inactive slots.
+    """
+    s, k = drafts.shape[0], drafts.shape[1]
+    match = drafts == targets[:, :k]
+    if match.ndim > 2:                       # audio codebooks: all must match
+        match = match.reshape(s, k, -1).all(axis=-1)
+    run = jnp.cumprod(match.astype(jnp.int32), axis=1)
+    n_match = jnp.sum(run, axis=1)                          # (S,) 0..k
+    room = jnp.maximum(budget - nwritten, 0)
+    n_emit = jnp.minimum(n_match + 1, room)
+    n_emit = jnp.where(active, n_emit, 0)
+    return n_emit, n_match

@@ -75,3 +75,44 @@ def test_kv_fields_roundtrip():
     assert s["kv_peak_occupancy"] == 9 / 16
     assert s["kv_bytes_per_request"] == 4 * 1024.0
     assert s["kv_shared_tokens"] == 42 and s["kv_cow_copies"] == 3
+
+
+def test_record_burst_per_slot_latency_ledger():
+    """Regression: overshoot attribution. A burst of S steps where a
+    nearly-finished slot only got 1 useful token used to attribute
+    wall/steps to EVERY useful token, understating that slot's
+    per-token latency. With ``per_slot_tokens`` each slot's tokens cost
+    wall/tokens_for_that_slot — checked against an independent host
+    ledger."""
+    rng = np.random.default_rng(7)
+    m = EngineMetrics(max_slots=4)
+    ledger = []                   # independent per-token latency ledger
+    total_tokens = 0
+    for _ in range(20):
+        wall = float(rng.uniform(0.01, 0.1))
+        steps = int(rng.integers(1, 5))
+        # per-slot useful tokens: 0..steps (0 = pure overshoot slot)
+        per_slot = [int(rng.integers(0, steps + 1)) for _ in range(3)]
+        m.record_burst(wall, steps, n_active=3, per_slot_tokens=per_slot)
+        for e in per_slot:
+            if e > 0:
+                ledger.extend([wall / e] * e)
+        total_tokens += sum(per_slot)
+    assert m.decode_tokens == total_tokens
+    np.testing.assert_allclose(sorted(m.token_lat_s), sorted(ledger),
+                               rtol=1e-12)
+    s = m.summary()
+    for q, name in ((50, "token_latency_p50_ms"), (95, "token_latency_p95_ms")):
+        np.testing.assert_allclose(
+            s[name], 1e3 * np.percentile(np.asarray(ledger), q), rtol=1e-9)
+
+
+def test_record_burst_per_slot_consistent_with_legacy():
+    """When every slot fills the burst, per-slot attribution collapses
+    to the legacy wall/steps path exactly."""
+    a = EngineMetrics(max_slots=2)
+    b = EngineMetrics(max_slots=2)
+    a.record_burst(0.08, 4, n_active=2, n_tokens=8)
+    b.record_burst(0.08, 4, n_active=2, per_slot_tokens=[4, 4])
+    assert a.decode_tokens == b.decode_tokens == 8
+    np.testing.assert_allclose(sorted(a.token_lat_s), sorted(b.token_lat_s))

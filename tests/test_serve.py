@@ -244,3 +244,67 @@ def test_loadgen_deterministic_and_metrics_keys():
               "token_latency_p95_ms", "slot_occupancy", "n_finished"):
         assert s[k] is not None, k
     assert s["n_finished"] == 2
+
+
+def test_sampling_top_p_nonpositive_is_argmax():
+    """Regression: top_p <= 0 used to mask EVERY logit (the raw nucleus
+    predicate goes all-False, the threshold +inf), turning the sample
+    into a uniform draw over the whole vocab. The clamp keeps exactly
+    the top-1 position, so the limit degenerates to greedy."""
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    keys = request_keys(jnp.arange(4, dtype=jnp.int32),
+                        jnp.zeros(4, jnp.int32))
+    amax = np.asarray(jnp.argmax(logits, -1))
+    for p in (0.0, -0.5):
+        got = sample_tokens(logits, keys, jnp.full(4, 3.0),
+                            jnp.zeros(4, jnp.int32), jnp.full(4, p))
+        np.testing.assert_array_equal(np.asarray(got), amax)
+
+
+def test_sampling_top_p_tied_boundary_keeps_all_ties():
+    """Probabilities tied AT the nucleus threshold are all kept (the
+    mask is strictly-below), so the kept set cannot depend on sort
+    order among equals."""
+    # 4 equal maxima (p = 0.25 - eps each) + tail: top_p = 0.3 crosses
+    # the threshold inside the tied group -> every tied entry stays
+    lg = jnp.asarray([[2.0, 2.0, 2.0, 2.0] + [0.0] * 60], jnp.float32)
+    keys = request_keys(jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32))
+    seen = set()
+    for t in range(40):
+        k = request_keys(jnp.zeros(1, jnp.int32),
+                         jnp.asarray([t], jnp.int32))
+        got = int(sample_tokens(lg, k, jnp.ones(1),
+                                jnp.zeros(1, jnp.int32),
+                                jnp.asarray([0.3]))[0])
+        seen.add(got)
+    # only tied-max entries are ever sampled, and more than one of them
+    assert seen <= {0, 1, 2, 3} and len(seen) > 1
+    del keys
+
+
+def test_synth_prompt_guards():
+    """Regression: length <= 1 with a shared prefix silently produced a
+    prompt with NO shared tokens (sharing the caller asked for was
+    dropped); audio prefixes with the wrong codebook shape scattered
+    garbage. Both are rejected at construction now."""
+    from repro.serve import synth_prompt
+    rng = np.random.default_rng(0)
+    cfg = smoke_config("internlm2_1_8b")
+    prefix = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    with pytest.raises(ValueError, match="length"):
+        synth_prompt(rng, 1, cfg, prefix=prefix)
+    with pytest.raises(ValueError, match="1-d"):
+        synth_prompt(rng, 8, cfg, prefix=prefix.reshape(2, 4))
+    p = synth_prompt(rng, 6, cfg, prefix=prefix)
+    np.testing.assert_array_equal(p[:5], prefix[:5])   # one token unique
+
+    acfg = smoke_config("musicgen_large")
+    aprefix = rng.integers(0, acfg.vocab_size,
+                           (4, acfg.num_codebooks)).astype(np.int32)
+    ap = synth_prompt(rng, 6, acfg, prefix=aprefix)
+    np.testing.assert_array_equal(ap[:4], aprefix)
+    with pytest.raises(ValueError, match="codebooks"):
+        synth_prompt(rng, 6, acfg, prefix=aprefix[:, :1])
+    with pytest.raises(ValueError, match="codebooks"):
+        synth_prompt(rng, 6, acfg, prefix=prefix)      # 1-d into audio

@@ -1,0 +1,345 @@
+"""Self-speculative decoding: draft/verify parity, accept arithmetic,
+FIT draft allocation, multi-token decode exactness.
+
+The load-bearing guarantee (``repro.serve.spec``): the spec engine's
+emitted token streams are BIT-IDENTICAL to non-speculative serving in
+every mode — greedy AND sampled — because the verify pass re-samples
+each position with the exact keys/logits/sampler the plain engine would
+have used and accepts only matching draft prefixes. The draft lane
+(narrowed weights, low-bit KV) can change throughput, never tokens.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.models.decode import (
+    decode_step, init_decode_state, init_paged_decode_state, prefill_into)
+from repro.serve import (
+    Engine, EngineConfig, SamplingParams, SpecConfig, derive_draft_params,
+    quantize_params, quantize_params_int8, trace_requests)
+from repro.serve.spec import accept_drafts, quantize_dense_kv
+
+# staggered arrivals + more requests than slots: spec dispatches happen
+# across admissions/evictions/backfills, not just a static batch
+TRACE = [(0, 8, 5), (0, 12, 7), (3, 6, 4), (10, 10, 6), (11, 5, 8)]
+ECFG = dict(max_slots=2, max_len=64, max_new_tokens=16,
+            prefill_chunk=4, decode_burst=4)
+
+
+def _streams(finished):
+    return {r.id: np.asarray(r.output_tokens) for r in finished}
+
+
+def _parity(params, cfg, spec, sampling=None, extra=None, scales=None,
+            prefix_len=0):
+    """Run base and spec engines on the same trace; assert bit-parity."""
+    extra = extra or {}
+    reqs = lambda: trace_requests(cfg, TRACE, sampling=sampling,
+                                  prefix_len=prefix_len)
+    base, _ = Engine(params, cfg, EngineConfig(**ECFG, **extra),
+                     scales=scales).run(reqs())
+    specf, m = Engine(params, cfg, EngineConfig(**ECFG, **extra, spec=spec),
+                      scales=scales).run(reqs())
+    bs, ss = _streams(base), _streams(specf)
+    assert bs.keys() == ss.keys()
+    for rid in bs:
+        np.testing.assert_array_equal(bs[rid], ss[rid])
+    return m
+
+
+# ---------------------------------------------------------------------------
+# token-stream parity: spec == non-spec, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_spec_greedy_parity_dense():
+    cfg = smoke_config("internlm2_1_8b")
+    params = init_params(cfg, jax.random.key(0))
+    _parity(params, cfg, SpecConfig(k=3))
+
+
+def test_spec_sampled_parity_dense():
+    """Sampled modes too: coupled rejection re-samples with the same
+    fold_in(seed, t) keys, so even temperature/top-k/top-p streams are
+    bitwise equal (stronger than distribution preservation)."""
+    cfg = smoke_config("internlm2_1_8b")
+    params = init_params(cfg, jax.random.key(0))
+    sp = SamplingParams(temperature=0.8, top_k=5, top_p=0.9, seed=7)
+    _parity(params, cfg, SpecConfig(k=3), sampling=sp)
+
+
+def test_spec_greedy_parity_paged():
+    cfg = dataclasses.replace(smoke_config("internlm2_1_8b"),
+                              scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    _parity(params, cfg, SpecConfig(k=3),
+            extra=dict(kv_cache="paged", page_size=8))
+
+
+def test_spec_sampled_parity_paged():
+    cfg = dataclasses.replace(smoke_config("internlm2_1_8b"),
+                              scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    _parity(params, cfg, SpecConfig(k=3),
+            sampling=SamplingParams(temperature=0.7, seed=3),
+            extra=dict(kv_cache="paged", page_size=8))
+
+
+def test_spec_moe_parity():
+    """MoE rides the same guarantee once expert capacity is non-binding
+    (the fp reference dispatch couples batch rows through the capacity
+    rank otherwise — a pre-existing engine property, see spec.py)."""
+    cfg = dataclasses.replace(smoke_config("deepseek_moe_16b"),
+                              capacity_factor=16.0)
+    params = init_params(cfg, jax.random.key(0))
+    _parity(params, cfg, SpecConfig(k=3))
+
+
+def test_spec_quantized_serving_narrowed_draft():
+    """QTensor W8 serving on the integer kernels, draft narrowed to W4
+    fp-dequant — the FIT self-draft configuration."""
+    cfg = dataclasses.replace(smoke_config("internlm2_1_8b"),
+                              scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    qp, scales = quantize_params(params, 8, group_size=8)
+    _parity(qp, cfg, SpecConfig(k=3, draft_bits=4),
+            extra=dict(int8_compute=True), scales=scales)
+
+
+def test_spec_paged_shared_prefix_subbyte_draft_kv():
+    """Paged serving with hash-based prefix sharing; the draft lane's
+    pools store packed int4 KV and mirror the COW copies."""
+    cfg = dataclasses.replace(smoke_config("internlm2_1_8b"),
+                              scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    qp, scales = quantize_params(params, 8, group_size=8)
+    _parity(qp, cfg, SpecConfig(k=3, draft_bits=4, draft_kv_bits=4),
+            extra=dict(int8_compute=True, kv_cache="paged", page_size=8),
+            scales=scales, prefix_len=9)
+
+
+def test_spec_k1_degenerates_to_plain_burst():
+    """k=1 must not build any draft/verify machinery and must produce
+    the plain engine's exact stream."""
+    cfg = smoke_config("internlm2_1_8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = Engine(params, cfg, EngineConfig(**ECFG, spec=SpecConfig(k=1)))
+    assert eng._spec is None
+    assert not hasattr(eng, "_spec_step")
+    base, _ = Engine(params, cfg,
+                     EngineConfig(**ECFG)).run(trace_requests(cfg, TRACE))
+    deg, _ = eng.run(trace_requests(cfg, TRACE))
+    for a, b in zip(base, deg):
+        np.testing.assert_array_equal(a.output_tokens, b.output_tokens)
+
+
+def test_spec_counters_and_host_stats():
+    """Device spec counters drain; host spec_stats tracks dispatches and
+    a consistent accept tally (accepted <= proposed)."""
+    from repro.obs import ObsConfig
+    cfg = smoke_config("internlm2_1_8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = Engine(params, cfg,
+                 EngineConfig(**ECFG, spec=SpecConfig(k=3),
+                              obs=ObsConfig(device_metrics=True)))
+    _, metrics = eng.run(trace_requests(cfg, TRACE))
+    st = eng.spec_stats
+    assert st["dispatches"] > 0
+    assert 0 <= st["accepted"] <= st["proposed"]
+    totals = eng.counters.totals()
+    assert totals["spec_proposed"] == st["proposed"]
+    # device tally is exact; host undercounts only via the budget clamp
+    assert totals["spec_accepted"] >= st["accepted"]
+    # drain parity holds for useful tokens in spec mode too
+    assert totals["decode_tokens"] == metrics.decode_tokens
+
+
+# ---------------------------------------------------------------------------
+# unit: accept arithmetic, draft narrowing, dense draft KV grid
+# ---------------------------------------------------------------------------
+
+def test_accept_drafts_arithmetic():
+    drafts = jnp.asarray([[5, 6, 7],      # full match -> a=3, emit 4
+                          [5, 9, 7],      # mismatch at 1 -> a=1, emit 2
+                          [1, 2, 3],      # mismatch at 0 -> a=0, emit 1
+                          [5, 6, 7]])     # inactive -> emit 0
+    targets = jnp.asarray([[5, 6, 7, 8],
+                           [5, 6, 7, 8],
+                           [9, 2, 3, 4],
+                           [5, 6, 7, 8]])
+    active = jnp.asarray([True, True, True, False])
+    nwritten = jnp.asarray([0, 0, 0, 0], jnp.int32)
+    budget = jnp.asarray([16, 16, 16, 16], jnp.int32)
+    n_emit, n_match = accept_drafts(drafts, targets, active, nwritten, budget)
+    np.testing.assert_array_equal(n_match, [3, 1, 0, 3])
+    np.testing.assert_array_equal(n_emit, [4, 2, 1, 0])
+    # budget clamp: only 2 tokens of room truncates the full match
+    n_emit, _ = accept_drafts(drafts, targets, active,
+                              jnp.asarray([14, 14, 14, 14], jnp.int32),
+                              budget)
+    np.testing.assert_array_equal(n_emit, [2, 2, 1, 0])
+
+
+def test_accept_drafts_audio_codebooks():
+    """(S, k, CB) drafts: a position matches only if EVERY codebook does."""
+    drafts = jnp.asarray([[[1, 2], [3, 4]],
+                          [[1, 2], [3, 9]]])
+    targets = jnp.asarray([[[1, 2], [3, 4], [5, 6]],
+                           [[1, 2], [3, 4], [5, 6]]])
+    active = jnp.asarray([True, True])
+    z = jnp.zeros(2, jnp.int32)
+    n_emit, n_match = accept_drafts(drafts, targets, active, z, z + 16)
+    np.testing.assert_array_equal(n_match, [2, 1])
+    np.testing.assert_array_equal(n_emit, [3, 2])
+
+
+def test_derive_draft_params_narrows_only_below():
+    from repro.qtensor import is_qtensor
+    from repro.utils.pytree import named_leaves
+    cfg = dataclasses.replace(smoke_config("internlm2_1_8b"),
+                              scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    qp, _ = quantize_params(params, 8, group_size=8)
+    dp = derive_draft_params(qp, 4)
+    saw_narrowed = saw_shared = False
+    dleaves = dict(named_leaves(dp, is_leaf=is_qtensor))
+    for name, leaf in named_leaves(qp, is_leaf=is_qtensor):
+        d = dleaves[name]
+        if not is_qtensor(leaf):
+            assert d is leaf
+            continue
+        if leaf.bits > 4:
+            assert d.bits == 4 and d.shape == leaf.shape
+            saw_narrowed = True
+        else:
+            assert d is leaf            # at/below draft width: shared
+            saw_shared = True
+    assert saw_narrowed
+    # widening is refused (cannot add information back)
+    dp16 = derive_draft_params(qp, 16)
+    for name, leaf in named_leaves(qp, is_leaf=is_qtensor):
+        assert dict(named_leaves(dp16, is_leaf=is_qtensor))[name] is leaf
+
+
+def test_quantize_dense_kv_grid():
+    kv = {"k": jnp.asarray([[0.1, -0.2, 10.0]], jnp.float32)}
+    q = quantize_dense_kv(kv, 8)
+    assert q["k"].dtype == jnp.int8
+    # attention_decode's static 0.05 grid, saturating at +-127
+    np.testing.assert_array_equal(q["k"], [[2, -4, 127]])
+    assert quantize_dense_kv(kv, 16) is kv
+    with pytest.raises(ValueError, match="dense draft KV"):
+        quantize_dense_kv(kv, 4)
+
+
+def test_spec_config_validation():
+    cfg = smoke_config("internlm2_1_8b")
+    params = init_params(cfg, jax.random.key(0))
+    # draft_bits without a QTensor tree is a configuration error
+    with pytest.raises(ValueError, match="QTensor"):
+        Engine(params, cfg,
+               EngineConfig(**ECFG, spec=SpecConfig(k=2, draft_bits=4)))
+    # dense serving only supports the 8/16-bit draft KV lane
+    with pytest.raises(ValueError, match="draft"):
+        Engine(params, cfg,
+               EngineConfig(**ECFG, spec=SpecConfig(k=2, draft_kv_bits=4)))
+
+
+# ---------------------------------------------------------------------------
+# FIT draft allocation
+# ---------------------------------------------------------------------------
+
+def test_allocate_draft_bits_plan():
+    from repro.core import allocate_draft_bits, build_report
+    from repro.data.synthetic import LMStreamConfig, lm_batches
+    from repro.models import loss_fn
+    cfg = dataclasses.replace(smoke_config("internlm2_1_8b"),
+                              scan_layers=False)
+    params = init_params(cfg, jax.random.key(0))
+    stream = lm_batches(LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                       global_batch=2, seed=0))
+    report = build_report(lambda p, b: loss_fn(p, b, cfg), None, None, None,
+                          params, [next(stream)], tolerance=None,
+                          max_batches=1)
+    lo = allocate_draft_bits(report, avg_bits=3.0)
+    hi = allocate_draft_bits(report, avg_bits=6.0)
+    # realized budgets track the ask (policy-pinned blocks stay >= 8
+    # bits, so a very aggressive ask can land slightly above it) and
+    # stay monotone in it; plans are usable configs
+    assert lo.avg_bits <= hi.avg_bits <= 6.0 + 1e-6
+    assert abs(lo.avg_bits - 3.0) < 0.5
+    assert lo.bits.weight_bits and set(lo.bits.weight_bits) == \
+        set(report.weight_traces)
+    # more aggressive draft -> larger KL proxy -> lower accept proxy
+    assert lo.kl_proxy >= hi.kl_proxy
+    assert 0.0 < lo.accept_proxy <= hi.accept_proxy <= 1.0
+    # the plan drives derive_draft_params directly
+    qp, _ = quantize_params(params, 8, group_size=8)
+    derive_draft_params(qp, lo.bits)
+
+
+# ---------------------------------------------------------------------------
+# multi-token decode exactness (the verify pass's foundation)
+# ---------------------------------------------------------------------------
+
+def _mt_check(cfg, paged=False, ctx=None, params=None, T=4, B=3):
+    """Fused T-token decode_step == T sequential steps, bitwise, for
+    logits AND the cache left behind."""
+    if params is None:
+        params = init_params(cfg, jax.random.key(0))
+    shape = (B, 6) if cfg.family != "audio" else (B, 6, cfg.num_codebooks)
+    prompt = jax.random.randint(jax.random.key(1), shape, 0, cfg.vocab_size)
+    if paged:
+        from repro.kvcache import PagedKVConfig
+        pcfg = PagedKVConfig.build(cfg, max_len=64, slots=B, page_size=8)
+        st = init_paged_decode_state(cfg, pcfg, B)
+        nps = pcfg.pages_per_slot
+        table = (jnp.arange(B)[:, None] * nps
+                 + jnp.arange(nps)[None, :]).astype(jnp.int32)
+        st = st._replace(paged=st.paged._replace(
+            table=table, write_limit=jnp.full((B,), 64, jnp.int32)))
+    else:
+        st = init_decode_state(cfg, B, 64, per_slot_pos=True)
+    _, st = prefill_into(params, st, prompt, cfg, ctx=ctx)
+    tshape = (B, T) if cfg.family != "audio" else (B, T, cfg.num_codebooks)
+    toks = jax.random.randint(jax.random.key(2), tshape, 0, cfg.vocab_size)
+
+    st_a, seq = st, []
+    for j in range(T):
+        lg, st_a = decode_step(params, st_a, toks[:, j:j + 1], cfg, ctx=ctx)
+        seq.append(lg[:, 0])
+    fused, st_b = decode_step(params, st, toks, cfg, ctx=ctx)
+    np.testing.assert_array_equal(np.asarray(jnp.stack(seq, 1)),
+                                  np.asarray(fused))
+    if paged:
+        ka, kb = st_a.paged.layers["0"].k, st_b.paged.layers["0"].k
+    else:
+        ka, kb = st_a.kv.k, st_b.kv.k
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+    np.testing.assert_array_equal(np.asarray(st_a.pos), np.asarray(st_b.pos))
+
+
+def test_multi_token_decode_dense():
+    _mt_check(smoke_config("internlm2_1_8b"))
+
+
+def test_multi_token_decode_moe():
+    _mt_check(smoke_config("deepseek_moe_16b"))
+
+
+def test_multi_token_decode_paged():
+    cfg = dataclasses.replace(smoke_config("internlm2_1_8b"),
+                              scan_layers=False)
+    _mt_check(cfg, paged=True)
+
+
+def test_multi_token_decode_int8_ctx():
+    from repro.serve import make_dequant_context
+    cfg = dataclasses.replace(smoke_config("internlm2_1_8b"),
+                              scan_layers=False)
+    qp, scales = quantize_params_int8(init_params(cfg, jax.random.key(0)), 8)
+    _mt_check(cfg, ctx=make_dequant_context(cfg, scales), params=qp)
